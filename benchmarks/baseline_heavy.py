@@ -1,0 +1,120 @@
+"""The "heavyweight cluster" baseline SerPyTor is compared against.
+
+Spark itself cannot be installed offline, so this is an in-repo stand-in
+that faithfully reproduces the *setup cost structure* of a Spark-style
+cluster bring-up (the paper's comparison axis, §1: "the prerequisite setup
+for a Spark cluster often induces an additional overhead"):
+
+  1. config validation + session negotiation (driver ↔ master handshake),
+  2. per-worker environment sync (ship serialized closures/conf),
+  3. executor registration barrier (all workers must check in),
+  4. per-job stage planning with a synchronous barrier per stage.
+
+Costs are modeled as real work (serialization, socket round trips on
+localhost, barrier waits), NOT sleeps, so the comparison measures honest
+protocol overhead rather than an arbitrary constant. It is clearly labeled
+a stand-in in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+from typing import Any, Callable, Dict, List, Sequence
+
+from repro.core.durable import decode_payload, encode_payload
+
+__all__ = ["HeavyCluster"]
+
+
+class _EchoServer(threading.Thread):
+    """Stand-in master: accepts registrations and echoes conf blobs."""
+
+    def __init__(self):
+        super().__init__(daemon=True)
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(64)
+        self.port = self.sock.getsockname()[1]
+        self._stop = False
+
+    def run(self):
+        self.sock.settimeout(0.2)
+        while not self._stop:
+            try:
+                conn, _ = self.sock.accept()
+            except socket.timeout:
+                continue
+            with conn:
+                data = conn.recv(1 << 20)
+                conn.sendall(data)  # echo = ack
+
+    def stop(self):
+        self._stop = True
+        self.join(timeout=2)
+        self.sock.close()
+
+
+class HeavyCluster:
+    """Spark-style bring-up + stage-barrier execution."""
+
+    def __init__(self, num_workers: int = 4, conf: Dict[str, Any] = None):
+        self.num_workers = num_workers
+        self.conf = dict(conf or {})
+        self.master: _EchoServer = None
+        self.registered: List[int] = []
+
+    # -- the expensive part the paper complains about -----------------------
+    def setup(self) -> float:
+        t0 = time.perf_counter()
+        # 1. config validation + session negotiation
+        conf_blob = json.dumps({**self.conf, "defaults": {
+            f"spark.opt.{i}": str(i) for i in range(200)}}).encode()
+        self.master = _EchoServer()
+        self.master.start()
+        for _ in range(3):  # handshake round trips
+            s = socket.create_connection(("127.0.0.1", self.master.port))
+            s.sendall(conf_blob[:4096])
+            s.recv(1 << 20)
+            s.close()
+        # 2. per-worker env sync (ship conf + closure registry)
+        env_blob = encode_payload({"conf": self.conf,
+                                   "env": {f"var{i}": "x" * 64
+                                           for i in range(100)}})
+        for w in range(self.num_workers):
+            s = socket.create_connection(("127.0.0.1", self.master.port))
+            s.sendall(env_blob[:8192])
+            s.recv(1 << 20)
+            s.close()
+            self.registered.append(w)
+        # 3. registration barrier
+        assert len(self.registered) == self.num_workers
+        return time.perf_counter() - t0
+
+    def run_stage(self, fn: Callable[[Any], Any], items: Sequence[Any]
+                  ) -> List[Any]:
+        """One stage with a synchronous barrier + closure re-serialization."""
+        blob = encode_payload({"items": list(items)})
+        decode_payload(blob)  # driver-side round trip (closure ship stand-in)
+        results = [None] * len(items)
+        threads = []
+        barrier = threading.Barrier(self.num_workers)
+
+        def worker(wi: int):
+            barrier.wait()  # stage start barrier
+            for i in range(wi, len(items), self.num_workers):
+                results[i] = fn(items[i])
+            barrier.wait()  # stage end barrier
+
+        for wi in range(self.num_workers):
+            t = threading.Thread(target=worker, args=(wi,))
+            t.start()
+            threads.append(t)
+        for t in threads:
+            t.join()
+        return results
+
+    def teardown(self):
+        if self.master:
+            self.master.stop()

@@ -1,0 +1,139 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from results/.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline [--write]
+With --write, rewrites the marked sections of EXPERIMENTS.md in place.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(dirname: str) -> Dict:
+    out = {}
+    for p in sorted(glob.glob(os.path.join("results", dirname, "*.json"))):
+        r = json.load(open(p))
+        key = (r["arch"], r["shape"],
+               bool(r.get("multi_pod", False)) if dirname == "dryrun" else None,
+               r.get("tag", ""))
+        out[key] = r
+    return out
+
+
+def dryrun_table() -> List[str]:
+    recs = _load("dryrun")
+    lines = [
+        "| arch | shape | mesh | status | compile s | HBM/dev GiB | fits 16GiB | collective GiB/dev/step |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mp, tag), r in sorted(recs.items()):
+        if tag:
+            continue
+        mesh = "2×16×16" if mp else "16×16"
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | SKIP (sub-quadratic "
+                         f"only) | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR | — | — | — | — |")
+            continue
+        hbm = r["hbm_per_device_gib"]
+        coll = r["collectives"]["total_bytes"] / 2 ** 30
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']:.0f} | "
+            f"{hbm:.2f} | {'✓' if hbm <= 16 else '✗'} | {coll:.2f} |")
+    return lines
+
+
+def roofline_table(tag: str = "") -> List[str]:
+    recs = _load("roofline")
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant |"
+        " 6ND/HLO useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, _, t), r in sorted(recs.items()):
+        if t != tag:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — |")
+            continue
+        t_ = r["terms_s"]
+        lines.append(
+            f"| {arch} | {shape} | {t_['compute_s']*1e3:.2f} | "
+            f"{t_['memory_s']*1e3:.2f} | {t_['collective_s']*1e3:.2f} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return lines
+
+
+def perf_section() -> List[str]:
+    lines: List[str] = []
+    for p in sorted(glob.glob("results/perf/*.json")):
+        r = json.load(open(p))
+        lines.append(f"### {r['arch']} × {r['shape']}")
+        lines.append("")
+        lines.append(f"Roofline fraction: **{r['baseline_fraction']:.3f} "
+                     f"(baseline) → {r['final_fraction']:.3f} (optimized)**; "
+                     f"step bound {max(r['baseline'].values())*1e3:.1f} ms → "
+                     f"{max(r['final'].values())*1e3:.1f} ms.")
+        lines.append("")
+        lines.append("| iteration | verdict | compute ms | memory ms | "
+                     "collective ms | step bound ms |")
+        lines.append("|---|---|---|---|---|---|")
+        for e in r["log"]:
+            t = e.get("after_s", e.get("terms_s"))
+            bound = max(t.values()) * 1e3
+            verdict = e.get("verdict", "baseline")
+            kept = "" if e.get("kept", True) else " (reverted)"
+            lines.append(
+                f"| {e['iter']} | {verdict}{kept} | {t['compute_s']*1e3:.2f} |"
+                f" {t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} |"
+                f" {bound:.2f} |")
+        lines.append("")
+        for e in r["log"]:
+            if "hypothesis" in e:
+                lines.append(f"- **{e['iter']}** [{e['verdict']}]: "
+                             f"{e['hypothesis']}")
+        lines.append("")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+    dr = "\n".join(dryrun_table())
+    rf = "\n".join(roofline_table())
+    pf = "\n".join(perf_section())
+    if not args.write:
+        print("## Dry-run\n")
+        print(dr)
+        print("\n## Roofline\n")
+        print(rf)
+        print("\n## Perf\n")
+        print(pf)
+        return
+    path = "EXPERIMENTS.md"
+    text = open(path).read() if os.path.exists(path) else ""
+    for marker, table in (("DRYRUN", dr), ("ROOFLINE", rf), ("PERF", pf)):
+        begin, end = f"<!-- {marker}:BEGIN -->", f"<!-- {marker}:END -->"
+        if begin in text and end in text:
+            pre, rest = text.split(begin, 1)
+            _, post = rest.split(end, 1)
+            text = pre + begin + "\n" + table + "\n" + end + post
+    with open(path, "w") as fh:
+        fh.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Durable-execution demo: crash a training run, restart, prove continuity.
+
+ 1. trains with checkpoints every 5 steps, hard-"crashes" at step 12
+ 2. restarts in the same run_dir: the trainer restores the step-10 snapshot
+    and replays 10-11 deterministically before continuing
+ 3. verifies the resumed trajectory equals an uninterrupted reference run
+    (bitwise data determinism + journal digest verification)
+
+Run:  PYTHONPATH=src python examples/durable_recovery.py
+"""
+import dataclasses
+import shutil
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+CFG = dataclasses.replace(
+    get_config("serpytor-demo-100m"), name="recovery-demo",
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=512, vocab_size=4096)
+
+
+def tc(run_dir: str, steps: int) -> TrainConfig:
+    return TrainConfig(run_dir=run_dir, num_steps=steps, checkpoint_every=5,
+                       log_every=5, global_batch=2, seq_len=64,
+                       heartbeat=False, journal_sync="always",
+                       opt=AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=20))
+
+
+class CrashAt(Exception):
+    pass
+
+
+def main() -> None:
+    for d in ("runs/recovery_demo", "runs/recovery_ref"):
+        shutil.rmtree(d, ignore_errors=True)
+
+    print("=== reference run (uninterrupted, 20 steps) ===")
+    ref = Trainer(CFG, tc("runs/recovery_ref", 20))
+    ref.train()
+    ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log}
+
+    print("\n=== run A: crash after step 11 ===")
+    crash = Trainer(CFG, tc("runs/recovery_demo", 20))
+    orig = crash._train_step
+
+    def crashing_step(params, opt_state, batch):
+        out = orig(params, opt_state, batch)
+        if int(out[1]["step"][()]) > 12:   # opt step counter
+            raise CrashAt("simulated node failure (power loss)")
+        return out
+
+    crash._train_step = crashing_step
+    try:
+        crash.train()
+    except Exception as e:
+        print(f"!! crashed as planned: {type(e).__name__}: {e}")
+    finally:
+        crash.store.wait()
+        crash.journal.close()
+
+    print("\n=== run B: restart in the same run_dir ===")
+    resumed = Trainer(CFG, tc("runs/recovery_demo", 20))
+    print("latest snapshot:", resumed.store.latest())
+    resumed.train()
+    got = {m["step"]: m["loss"] for m in resumed.metrics_log}
+
+    print("\n=== verification ===")
+    diffs = [abs(got[s] - ref_losses[s]) for s in got]
+    print(f"resumed steps {sorted(got)[0]}..{sorted(got)[-1]}; "
+          f"max |loss - reference| = {max(diffs):.2e}")
+    ok = max(diffs) < 1e-4
+    print("DURABLE RECOVERY:", "VERIFIED ✓" if ok else "MISMATCH ✗")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Config registry: importing this package registers all architectures."""
+from . import archs  # noqa: F401  (registration side effect)
+from .base import (ModelConfig, ShapeConfig, SHAPES, REGISTRY, get_config,
+                   list_archs, smoke_variant)
+from .shapes import ALL_CELLS, cell_applicability, input_specs
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "REGISTRY", "get_config",
+           "list_archs", "smoke_variant", "ALL_CELLS", "cell_applicability",
+           "input_specs"]

@@ -1,0 +1,61 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+No device allocation — these feed ``jax.jit(...).lower()`` in the dry-run.
+Frontend stubs deliver precomputed embeddings per the assignment brief.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeConfig, SHAPES
+
+__all__ = ["input_specs", "cell_applicability", "ALL_CELLS"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def cell_applicability(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped). The 8 long_500k skips live here."""
+    if shape.name == "long_500k":
+        if not cfg.subquadratic:
+            return False, ("pure full-attention arch: O(S²) attention over a "
+                           "512k cache — skipped per brief (sub-quadratic only)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Model inputs for the given cell (WITHOUT params/cache — the launcher
+    adds those from eval_shape)."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    tok_dtype = jnp.int32
+
+    if shape.kind == "decode":
+        batch: Dict[str, Any] = {"token": _sds((B,), tok_dtype)}
+        return batch
+
+    if cfg.family == "vlm" and cfg.frontend == "vision_stub":
+        n_vis = cfg.num_frontend_tokens
+        return {"tokens": _sds((B, S - n_vis), tok_dtype),
+                "patch_embeds": _sds((B, n_vis, cfg.frontend_dim), jnp.bfloat16)}
+    if cfg.is_encdec:
+        # stub speech frontend: precomputed conformer frames, length = S for
+        # train/prefill (stress shape), decode uses source_len_for_decode.
+        return {"frames": _sds((B, S, cfg.frontend_dim), jnp.bfloat16),
+                "tokens": _sds((B, S), tok_dtype)}
+    return {"tokens": _sds((B, S), tok_dtype)}
+
+
+def ALL_CELLS():
+    """[(arch, shape)] — the 40 assigned cells, in deterministic order."""
+    from .base import list_archs
+
+    graded = [a for a in list_archs() if a != "serpytor-demo-100m"]
+    return [(a, s) for a in graded for s in
+            ("train_4k", "prefill_32k", "decode_32k", "long_500k")]

@@ -1,0 +1,257 @@
+"""Durable execution (§4.2): write-ahead journal, deterministic replay, DI.
+
+A run of a ContextGraph is journaled as an append-only event log (the same
+event-sourcing shape Temporal uses). Each committed node records:
+
+    (node_id, context_digest, input_digest, output_digest, payload-or-ref)
+
+Replaying a run re-executes the graph but *skips* any node whose
+(context_digest, input_digest) matches a committed entry, re-injecting the
+recorded output — effectively-once semantics on top of at-least-once retries.
+Large payloads (model/optimizer state) are stored by reference: the journal
+holds a ``ref`` string resolved by the checkpoint store, never raw tensors.
+
+The journal format is length-prefixed msgpack records with a crc32 per record,
+zstd-compressed payload bodies. Torn tails (a crash mid-append) are detected
+and truncated on open — an explicit durability requirement.
+"""
+from __future__ import annotations
+
+import binascii
+import io
+import os
+import struct
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Tuple
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+from .context import Context, canonical_digest
+
+__all__ = [
+    "Journal", "JournalRecord", "ReplayCache", "encode_payload", "decode_payload",
+    "payload_digest", "atomic_task",
+]
+
+_HEADER = struct.Struct("<II")  # (length, crc32)
+
+
+# --------------------------------------------------------------------------
+# payload codec: arbitrary pytrees of np/jax arrays + python scalars
+# --------------------------------------------------------------------------
+
+def _pack_default(obj: Any) -> Any:
+    if hasattr(obj, "__array__"):  # np/jax arrays
+        arr = np.asarray(obj)
+        return msgpack.ExtType(1, msgpack.packb(
+            (arr.dtype.str, arr.shape, arr.tobytes()), use_bin_type=True))
+    if isinstance(obj, complex):
+        return msgpack.ExtType(2, msgpack.packb((obj.real, obj.imag)))
+    raise TypeError(f"unpackable type {type(obj)!r}")
+
+
+def _unpack_ext(code: int, data: bytes) -> Any:
+    if code == 1:
+        dtype, shape, raw = msgpack.unpackb(data, raw=False)
+        return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape)
+    if code == 2:
+        re_, im = msgpack.unpackb(data)
+        return complex(re_, im)
+    return msgpack.ExtType(code, data)
+
+
+def encode_payload(obj: Any) -> bytes:
+    body = msgpack.packb(obj, default=_pack_default, use_bin_type=True)
+    return zstd.ZstdCompressor(level=3).compress(body)
+
+
+def decode_payload(buf: bytes) -> Any:
+    body = zstd.ZstdDecompressor().decompress(buf)
+    return msgpack.unpackb(body, ext_hook=_unpack_ext, raw=False, strict_map_key=False)
+
+
+def payload_digest(obj: Any) -> str:
+    """Digest of a payload pytree — used as the deterministic input/output id."""
+    import hashlib
+
+    h = hashlib.sha256()
+
+    def feed(x: Any) -> None:
+        if isinstance(x, Mapping):
+            for k in sorted(x, key=str):
+                h.update(str(k).encode())
+                feed(x[k])
+        elif isinstance(x, (list, tuple)):
+            h.update(b"[")
+            for v in x:
+                feed(v)
+            h.update(b"]")
+        elif hasattr(x, "__array__"):
+            arr = np.asarray(x)
+            h.update(arr.dtype.str.encode())
+            h.update(str(arr.shape).encode())
+            h.update(np.ascontiguousarray(arr).tobytes())
+        else:
+            h.update(repr(x).encode())
+
+    feed(obj)
+    return h.hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# journal
+# --------------------------------------------------------------------------
+
+@dataclass
+class JournalRecord:
+    kind: str                      # RUN_START | NODE_START | NODE_COMMIT | NODE_FAIL | RUN_END | CKPT
+    node_id: str = ""
+    context_digest: str = ""
+    input_digest: str = ""
+    output_digest: str = ""
+    payload: Any = None            # inline output (small) — mutually exclusive with ref
+    ref: str = ""                  # checkpoint-store reference for large outputs
+    wall_time: float = 0.0
+    attempt: int = 0
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def to_obj(self) -> dict:
+        return {
+            "k": self.kind, "n": self.node_id, "c": self.context_digest,
+            "i": self.input_digest, "o": self.output_digest, "p": self.payload,
+            "r": self.ref, "t": self.wall_time, "a": self.attempt, "m": self.meta,
+        }
+
+    @staticmethod
+    def from_obj(o: Mapping) -> "JournalRecord":
+        return JournalRecord(kind=o["k"], node_id=o["n"], context_digest=o["c"],
+                             input_digest=o["i"], output_digest=o["o"], payload=o["p"],
+                             ref=o["r"], wall_time=o["t"], attempt=o["a"],
+                             meta=dict(o["m"]))
+
+
+class Journal:
+    """Append-only, crash-safe event log. Thread-safe appends.
+
+    ``sync`` policy: "always" fsyncs per commit (paper-faithful durable mode),
+    "batch" fsyncs on flush()/close() (the beyond-paper async mode measured in
+    benchmarks), "never" for in-memory tests.
+    """
+
+    def __init__(self, path: str, sync: str = "always"):
+        assert sync in ("always", "batch", "never")
+        self.path = path
+        self.sync = sync
+        self._lock = threading.Lock()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._recover_tail()
+        self._fh = open(path, "ab")
+
+    # -- crash recovery ------------------------------------------------------
+    def _recover_tail(self) -> None:
+        """Truncate a torn tail record (partial append at crash time)."""
+        if not os.path.exists(self.path):
+            return
+        good = 0
+        with open(self.path, "rb") as fh:
+            data = fh.read()
+        off = 0
+        while off + _HEADER.size <= len(data):
+            length, crc = _HEADER.unpack_from(data, off)
+            body = data[off + _HEADER.size: off + _HEADER.size + length]
+            if len(body) < length or binascii.crc32(body) != crc:
+                break
+            off += _HEADER.size + length
+            good = off
+        if good != len(data):
+            with open(self.path, "r+b") as fh:
+                fh.truncate(good)
+
+    # -- append ----------------------------------------------------------------
+    def append(self, rec: JournalRecord) -> None:
+        rec.wall_time = rec.wall_time or time.time()
+        body = encode_payload(rec.to_obj())
+        frame = _HEADER.pack(len(body), binascii.crc32(body)) + body
+        with self._lock:
+            self._fh.write(frame)
+            if self.sync == "always":
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+
+    def flush(self) -> None:
+        with self._lock:
+            self._fh.flush()
+            if self.sync != "never":
+                os.fsync(self._fh.fileno())
+
+    def close(self) -> None:
+        self.flush()
+        self._fh.close()
+
+    # -- read -----------------------------------------------------------------
+    def records(self) -> Iterator[JournalRecord]:
+        with open(self.path, "rb") as fh:
+            data = fh.read()
+        off = 0
+        while off + _HEADER.size <= len(data):
+            length, crc = _HEADER.unpack_from(data, off)
+            body = data[off + _HEADER.size: off + _HEADER.size + length]
+            if len(body) < length or binascii.crc32(body) != crc:
+                break
+            yield JournalRecord.from_obj(decode_payload(body))
+            off += _HEADER.size + length
+
+    def __enter__(self) -> "Journal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class ReplayCache:
+    """Index of committed node outputs from a journal — the replay oracle."""
+
+    def __init__(self, journal: Optional[Journal] = None):
+        self._committed: Dict[Tuple[str, str, str], JournalRecord] = {}
+        self.stats = {"commits": 0, "replayed": 0}
+        if journal is not None and os.path.exists(journal.path):
+            for rec in journal.records():
+                if rec.kind == "NODE_COMMIT":
+                    key = (rec.node_id, rec.context_digest, rec.input_digest)
+                    self._committed[key] = rec
+                    self.stats["commits"] += 1
+
+    def lookup(self, node_id: str, context_digest: str, input_digest: str
+               ) -> Optional[JournalRecord]:
+        rec = self._committed.get((node_id, context_digest, input_digest))
+        if rec is not None:
+            self.stats["replayed"] += 1
+        return rec
+
+    def record(self, rec: JournalRecord) -> None:
+        self._committed[(rec.node_id, rec.context_digest, rec.input_digest)] = rec
+
+
+# --------------------------------------------------------------------------
+# atomic task decorator — dependency injection contract (§3.2 assumption 2)
+# --------------------------------------------------------------------------
+
+def atomic_task(fn: Callable[..., Any]) -> Callable[..., Any]:
+    """Mark ``fn`` as an atomic durable task.
+
+    The contract: fn(ctx: Context, **injected_inputs) -> output. The wrapper
+    rejects ambient-state smuggling (positional args) and stamps metadata the
+    executor uses for digesting.
+    """
+
+    def wrapper(ctx: Context, **inputs: Any) -> Any:
+        return fn(ctx, **inputs)
+
+    wrapper.__name__ = getattr(fn, "__name__", "task")
+    wrapper.__atomic_task__ = True  # type: ignore[attr-defined]
+    wrapper.__wrapped__ = fn  # type: ignore[attr-defined]
+    return wrapper

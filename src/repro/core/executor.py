@@ -1,0 +1,368 @@
+"""Executors: run a ContextGraph durably, locally or through a Gateway.
+
+Execution semantics (the paper's logical flow, §4):
+  1. contract SCCs → union nodes (DAG guarantee),
+  2. propagate ξ per the union rules,
+  3. execute nodes in dependency order with dependency-injected inputs,
+  4. journal every commit; replay skips nodes whose (id, ξ-digest, input-digest)
+     already committed — durable, effectively-once execution.
+
+Union nodes execute their members as ONE atomic unit (single commit), in
+deterministic member order, with intra-group outputs injected among members.
+
+``LocalExecutor`` runs tasks on a thread pool with dependency-counted
+readiness (maximum overlap). ``ClusterExecutor`` dispatches named tasks
+through a Gateway to remote/in-proc workers, with speculative re-execution
+of stragglers (first commit wins — duplicates are idempotent by replay).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from .context import Context, EMPTY_CONTEXT
+from .durable import Journal, JournalRecord, ReplayCache, payload_digest
+from .failure import RetryPolicy, StragglerWatch
+from .gateway import Gateway
+from .graph import ContextGraph, Node, UnionNode
+
+__all__ = ["WithContext", "ExecutionReport", "LocalExecutor", "ClusterExecutor"]
+
+_INLINE_LIMIT = 1 << 20  # 1 MiB: larger outputs must go through the spill store
+
+
+@dataclass
+class WithContext:
+    """Task return wrapper: ``return WithContext(out, {"fact": 1})`` emits facts."""
+
+    output: Any
+    facts: Mapping[str, Any]
+
+
+@dataclass
+class ExecutionReport:
+    outputs: Dict[str, Any]
+    contexts: Dict[str, Context]
+    replayed: Tuple[str, ...]
+    executed: Tuple[str, ...]
+    wall_s: float
+
+
+class _BaseExecutor:
+    def __init__(self, journal: Optional[Journal] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 spill_put: Optional[Callable[[str, Any], str]] = None,
+                 spill_get: Optional[Callable[[str], Any]] = None):
+        self.journal = journal
+        self.retry = retry or RetryPolicy()
+        self.replay = ReplayCache(journal) if journal is not None else ReplayCache()
+        self._spill_put = spill_put
+        self._spill_get = spill_get
+
+    # -- durable commit machinery -------------------------------------------
+    def _commit(self, node_id: str, ctx_digest: str, in_digest: str, output: Any,
+                attempt: int, meta: Optional[dict] = None) -> None:
+        payload, ref = output, ""
+        if self._spill_put is not None:
+            try:
+                import sys
+
+                approx = payload_digest(output)  # also probes serializability
+                del approx
+            except Exception:
+                ref = self._spill_put(node_id, output)
+                payload = None
+        rec = JournalRecord(kind="NODE_COMMIT", node_id=node_id,
+                            context_digest=ctx_digest, input_digest=in_digest,
+                            output_digest=payload_digest(output) if ref == "" else ref,
+                            payload=payload if ref == "" else None, ref=ref,
+                            attempt=attempt, meta=meta or {})
+        if self.journal is not None:
+            self.journal.append(rec)
+        self.replay.record(rec)
+
+    def _lookup(self, node_id: str, ctx_digest: str, in_digest: str) -> Optional[Any]:
+        rec = self.replay.lookup(node_id, ctx_digest, in_digest)
+        if rec is None:
+            return None
+        if rec.ref:
+            if self._spill_get is None:
+                return None  # cannot resolve; re-execute
+            return _Found(self._spill_get(rec.ref))
+        return _Found(rec.payload)
+
+
+@dataclass
+class _Found:
+    value: Any
+
+
+def _inject_inputs(node: Node, outputs: Mapping[str, Any],
+                   member_to_group: Mapping[str, str]) -> Dict[str, Any]:
+    """Dependency injection: map each dep's output to the node's kwarg."""
+    inputs: Dict[str, Any] = {}
+    for dep in node.deps:
+        gid = member_to_group.get(dep, dep)
+        out = outputs[gid]
+        if gid != dep and isinstance(out, Mapping) and dep in out:
+            out = out[dep]  # a specific member of a union node
+        inputs[node.kwarg_for(dep)] = out
+    return inputs
+
+
+class LocalExecutor(_BaseExecutor):
+    """In-process threaded executor with dependency-counted scheduling."""
+
+    def __init__(self, max_workers: int = 8, **kw):
+        super().__init__(**kw)
+        self.max_workers = max_workers
+
+    def run(self, graph: ContextGraph) -> ExecutionReport:
+        t0 = time.time()
+        levels, exec_nodes, member_to_group = graph.schedule()
+        xi = graph.propagate_contexts(exec_nodes)
+        outputs: Dict[str, Any] = {}
+        out_ctx: Dict[str, Context] = {}
+        replayed: List[str] = []
+        executed: List[str] = []
+        lock = threading.Lock()
+
+        # dependency counting for maximal overlap (scheduling-level deps)
+        gdeps = ContextGraph.group_deps(exec_nodes, member_to_group)
+        deps_left = {nid: len(gdeps[nid]) for nid in exec_nodes}
+        children: Dict[str, List[str]] = {nid: [] for nid in exec_nodes}
+        for nid in exec_nodes:
+            for d in gdeps[nid]:
+                children[d].append(nid)
+
+        if self.journal is not None:
+            self.journal.append(JournalRecord(kind="RUN_START", node_id=graph.name,
+                                              meta={"nodes": len(exec_nodes)}))
+
+        def effective_ctx(nid: str) -> Context:
+            node = exec_nodes[nid]
+            parents = [out_ctx[d] for d in gdeps[nid]]
+            base = Context.union_all(parents) if parents else graph.origin_context
+            if isinstance(node, UnionNode):
+                for m in sorted(node.members, key=lambda n: n.id):
+                    if m.data:
+                        base = base.with_data(m.data, origin=m.id)
+            elif node.data:
+                base = base.with_data(node.data, origin=node.id)
+            return base
+
+        def run_node(nid: str) -> None:
+            node = exec_nodes[nid]
+            ctx = effective_ctx(nid)
+            if isinstance(node, UnionNode):
+                self._run_union(node, ctx, outputs, member_to_group,
+                                replayed, executed, lock)
+            else:
+                inputs = _inject_inputs(node, outputs, member_to_group)
+                value, was_replayed = self._run_atomic(node, ctx, inputs)
+                with lock:
+                    if isinstance(value, WithContext):
+                        ctx = ctx.with_data(value.facts, origin=node.id)
+                        value = value.output
+                    outputs[nid] = value
+                    (replayed if was_replayed else executed).append(nid)
+            with lock:
+                out_ctx[nid] = ctx
+
+        frontier = [nid for nid, c in deps_left.items() if c == 0]
+        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            futures: Dict[Future, str] = {}
+            for nid in sorted(frontier):
+                futures[pool.submit(run_node, nid)] = nid
+            while futures:
+                done, _ = wait(list(futures), return_when=FIRST_COMPLETED)
+                for f in done:
+                    nid = futures.pop(f)
+                    f.result()  # re-raise task errors
+                    for c in children[nid]:
+                        with lock:
+                            deps_left[c] -= 1
+                            ready = deps_left[c] == 0
+                        if ready:
+                            futures[pool.submit(run_node, c)] = c
+
+        if self.journal is not None:
+            self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
+            self.journal.flush()
+        return ExecutionReport(outputs=outputs, contexts=out_ctx,
+                               replayed=tuple(replayed), executed=tuple(executed),
+                               wall_s=time.time() - t0)
+
+    # -- atomic execution with retries ----------------------------------------
+    def _run_atomic(self, node: Node, ctx: Context,
+                    inputs: Mapping[str, Any]) -> Tuple[Any, bool]:
+        ctx_d = ctx.digest()
+        in_d = payload_digest(inputs)
+        hit = self._lookup(node.id, ctx_d, in_d)
+        if hit is not None:
+            rec = self.replay.lookup(node.id, ctx_d, in_d)
+            facts = rec.meta.get("facts") if rec is not None else None
+            if facts:
+                # re-emit journaled context facts so downstream ξ digests
+                # match the original run exactly (replay completeness)
+                return WithContext(hit.value, facts), True
+            return hit.value, True
+        if node.fn is None:
+            raise ValueError(f"node {node.id!r} has no callable")
+        attempt = 0
+        while True:
+            try:
+                if self.journal is not None:
+                    self.journal.append(JournalRecord(
+                        kind="NODE_START", node_id=node.id, context_digest=ctx_d,
+                        input_digest=in_d, attempt=attempt))
+                value = node.fn(ctx, **inputs)
+                break
+            except Exception:
+                attempt += 1
+                if attempt > max(node.retries, self.retry.max_attempts - 1):
+                    if self.journal is not None:
+                        self.journal.append(JournalRecord(
+                            kind="NODE_FAIL", node_id=node.id, context_digest=ctx_d,
+                            input_digest=in_d, attempt=attempt))
+                    raise
+                time.sleep(self.retry.delay(attempt))
+        commit_value = value.output if isinstance(value, WithContext) else value
+        meta = {"facts": dict(value.facts)} if isinstance(value, WithContext) \
+            else None
+        self._commit(node.id, ctx_d, in_d, commit_value, attempt, meta=meta)
+        return value, False
+
+    def _run_union(self, group: UnionNode, ctx: Context, outputs: Dict[str, Any],
+                   member_to_group: Mapping[str, str], replayed: List[str],
+                   executed: List[str], lock: threading.Lock) -> None:
+        """Union node = ONE atomic commit over deterministic member order."""
+        ctx_d = ctx.digest()
+        ext_inputs = {}
+        with lock:
+            for m in group.members:
+                for d in m.deps:
+                    gid = member_to_group.get(d, d)
+                    if gid != group.id and gid in outputs:
+                        ext_inputs[d] = outputs[gid]
+        in_d = payload_digest(ext_inputs)
+        hit = self._lookup(group.id, ctx_d, in_d)
+        if hit is not None:
+            with lock:
+                outputs[group.id] = hit.value
+                replayed.append(group.id)
+            return
+        member_out: Dict[str, Any] = {}
+        # fixed-point style deterministic order: members sorted by id; a member
+        # whose intra-group dep isn't ready yet sees the PREVIOUS iteration's
+        # value (co-dependent semantics), seeded by its Ψ data or None.
+        order = sorted(group.members, key=lambda n: n.id)
+        seed = {m.id: dict(m.data).get("__seed__") for m in order}
+        for m in order:
+            inputs = {}
+            for d in m.deps:
+                gid = member_to_group.get(d, d)
+                if gid == group.id:
+                    inputs[m.kwarg_for(d)] = member_out.get(d, seed.get(d))
+                else:
+                    out = ext_inputs.get(d)
+                    inputs[m.kwarg_for(d)] = out
+            if m.fn is None:
+                raise ValueError(f"union member {m.id!r} has no callable")
+            v = m.fn(ctx, **inputs)
+            member_out[m.id] = v.output if isinstance(v, WithContext) else v
+        self._commit(group.id, ctx_d, in_d, member_out, 0,
+                     meta={"members": [m.id for m in order]})
+        with lock:
+            outputs[group.id] = member_out
+            executed.append(group.id)
+
+
+class ClusterExecutor(_BaseExecutor):
+    """Gateway-dispatched executor: nodes name registry tasks on workers.
+
+    Node.fn may be a string (registry task name) — required for remote
+    dispatch — or a callable (executed gateway-side, e.g. reductions).
+    Stragglers get a speculative duplicate after ``straggler.threshold ×
+    median`` elapsed; the first completion wins.
+    """
+
+    def __init__(self, gateway: Gateway, speculative: bool = True, **kw):
+        super().__init__(**kw)
+        self.gateway = gateway
+        self.speculative = speculative
+        self.straggler = StragglerWatch()
+
+    def run(self, graph: ContextGraph) -> ExecutionReport:
+        t0 = time.time()
+        levels, exec_nodes, member_to_group = graph.schedule()
+        outputs: Dict[str, Any] = {}
+        out_ctx: Dict[str, Context] = {}
+        replayed: List[str] = []
+        executed: List[str] = []
+        if self.journal is not None:
+            self.journal.append(JournalRecord(kind="RUN_START", node_id=graph.name,
+                                              meta={"nodes": len(exec_nodes)}))
+        for level in levels:
+            pending: Dict[str, Tuple[Node, Context, str, str, List[Future], float]] = {}
+            for nid in level:
+                node = exec_nodes[nid]
+                if isinstance(node, UnionNode):
+                    raise NotImplementedError(
+                        "union nodes execute locally; contract before remote dispatch")
+                parents = [out_ctx[member_to_group.get(d, d)] for d in node.deps]
+                ctx = Context.union_all(parents) if parents else graph.origin_context
+                if node.data:
+                    ctx = ctx.with_data(node.data, origin=node.id)
+                inputs = _inject_inputs(node, outputs, member_to_group)
+                ctx_d, in_d = ctx.digest(), payload_digest(inputs)
+                hit = self._lookup(nid, ctx_d, in_d)
+                if hit is not None:
+                    outputs[nid], out_ctx[nid] = hit.value, ctx
+                    replayed.append(nid)
+                    continue
+                if callable(node.fn):
+                    value = node.fn(ctx, **inputs)
+                    if isinstance(value, WithContext):
+                        ctx = ctx.with_data(value.facts, origin=nid)
+                        value = value.output
+                    self._commit(nid, ctx_d, in_d, value, 0)
+                    outputs[nid], out_ctx[nid] = value, ctx
+                    executed.append(nid)
+                    continue
+                fut = self.gateway.submit(str(node.fn), ctx, inputs,
+                                          affinity_key=str(node.resources.get(
+                                              "affinity", "")))
+                self.straggler.started(str(node.fn), nid)
+                pending[nid] = (node, ctx, ctx_d, in_d, [fut], time.time())
+            # wait with straggler mitigation
+            while pending:
+                for nid in list(pending):
+                    node, ctx, ctx_d, in_d, futs, started = pending[nid]
+                    done = next((f for f in futs if f.done()), None)
+                    if done is not None:
+                        value = done.result()
+                        self.straggler.finished(str(node.fn), nid)
+                        self._commit(nid, ctx_d, in_d, value, len(futs) - 1)
+                        outputs[nid], out_ctx[nid] = value, ctx
+                        executed.append(nid)
+                        del pending[nid]
+                        continue
+                    med = self.straggler.median(str(node.fn))
+                    if (self.speculative and med is not None and len(futs) < 3
+                            and time.time() - started > self.straggler.threshold * med):
+                        futs.append(self.gateway.submit(str(node.fn), ctx,
+                                                        dict(_inject_inputs(
+                                                            node, outputs,
+                                                            member_to_group))))
+                if pending:
+                    time.sleep(0.002)
+        if self.journal is not None:
+            self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
+            self.journal.flush()
+        return ExecutionReport(outputs=outputs, contexts=out_ctx,
+                               replayed=tuple(replayed), executed=tuple(executed),
+                               wall_s=time.time() - t0)

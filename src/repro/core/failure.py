@@ -1,0 +1,130 @@
+"""Failure detection & straggler mitigation.
+
+Implements the paper's §3.2 error taxonomy as an executable detector:
+
+  - heartbeat dead                        → SYSTEM-level failure
+  - heartbeat alive, app dead / timeout   → APPLICATION-level failure
+  - both alive, latency ≫ fleet median    → STRAGGLER (speculative re-exec)
+
+plus the retry policies used by the executor. Speculative re-execution is
+safe because tasks are atomic + deterministic (durable-execution contract):
+the first commit wins in the journal; duplicates are idempotent no-ops.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+__all__ = ["FailureKind", "Verdict", "LivenessDetector", "RetryPolicy",
+           "StragglerWatch"]
+
+
+class FailureKind(Enum):
+    HEALTHY = "healthy"
+    SYSTEM = "system"            # heartbeat down ⇒ node/hardware failure
+    APPLICATION = "application"  # heartbeat up, app down ⇒ software failure
+    STRAGGLER = "straggler"      # alive but anomalously slow
+
+
+@dataclass
+class Verdict:
+    kind: FailureKind
+    worker: str
+    detail: str = ""
+
+
+class LivenessDetector:
+    """Combines heartbeat + application probes into the paper's taxonomy."""
+
+    def __init__(self, heartbeat_probe: Callable[[str], Optional[dict]],
+                 app_probe: Callable[[str], bool],
+                 suspect_after_s: float = 2.0):
+        self._hb = heartbeat_probe
+        self._app = app_probe
+        self.suspect_after_s = suspect_after_s
+        self._last_ok: Dict[str, float] = {}
+
+    def check(self, worker: str) -> Verdict:
+        hb = self._hb(worker)
+        now = time.time()
+        if hb is None:
+            # allow a grace window before declaring system death
+            last = self._last_ok.get(worker, 0.0)
+            if now - last > self.suspect_after_s:
+                return Verdict(FailureKind.SYSTEM, worker,
+                               "heartbeat unreachable past grace window")
+            return Verdict(FailureKind.HEALTHY, worker, "heartbeat missed (grace)")
+        self._last_ok[worker] = now
+        if not self._app(worker):
+            return Verdict(FailureKind.APPLICATION, worker,
+                           "heartbeat OK but application not responding")
+        return Verdict(FailureKind.HEALTHY, worker)
+
+
+@dataclass
+class RetryPolicy:
+    max_attempts: int = 3
+    base_delay_s: float = 0.05
+    multiplier: float = 2.0
+    max_delay_s: float = 5.0
+    retry_on: tuple = (FailureKind.SYSTEM, FailureKind.APPLICATION,
+                       FailureKind.STRAGGLER)
+
+    def delay(self, attempt: int) -> float:
+        return min(self.max_delay_s, self.base_delay_s * self.multiplier ** attempt)
+
+    def should_retry(self, kind: FailureKind, attempt: int) -> bool:
+        return attempt < self.max_attempts and kind in self.retry_on
+
+
+class StragglerWatch:
+    """Detects stragglers from completed-task latency statistics.
+
+    A running task becomes a straggler candidate when its elapsed time exceeds
+    ``threshold × median(completed latencies of the same task name)`` with at
+    least ``min_samples`` completions observed. The trainer uses this to issue
+    a speculative duplicate to another worker (first journal commit wins).
+    """
+
+    def __init__(self, threshold: float = 2.0, min_samples: int = 3):
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self._done: Dict[str, List[float]] = {}
+        self._running: Dict[tuple, float] = {}
+        self._lock = threading.Lock()
+
+    def started(self, task_name: str, token: Any) -> None:
+        with self._lock:
+            self._running[(task_name, token)] = time.time()
+
+    def finished(self, task_name: str, token: Any) -> None:
+        with self._lock:
+            t0 = self._running.pop((task_name, token), None)
+            if t0 is not None:
+                self._done.setdefault(task_name, []).append(time.time() - t0)
+                # bound memory: keep the trailing window
+                if len(self._done[task_name]) > 256:
+                    self._done[task_name] = self._done[task_name][-128:]
+
+    def median(self, task_name: str) -> Optional[float]:
+        with self._lock:
+            xs = self._done.get(task_name, [])
+            return statistics.median(xs) if len(xs) >= self.min_samples else None
+
+    def stragglers(self) -> List[tuple]:
+        """[(task_name, token, elapsed, median), ...] currently suspect."""
+        now = time.time()
+        out = []
+        with self._lock:
+            for (name, token), t0 in self._running.items():
+                xs = self._done.get(name, [])
+                if len(xs) < self.min_samples:
+                    continue
+                med = statistics.median(xs)
+                if now - t0 > self.threshold * med:
+                    out.append((name, token, now - t0, med))
+        return out

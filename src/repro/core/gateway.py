@@ -1,0 +1,346 @@
+"""Gateway (§3.3): the central authoritative scheduler.
+
+The gateway stores the context for its servers, queues tasks (single-level
+queue or a priority "queue silo"), and picks the optimal worker with an
+allocation algorithm. Allocation must be fast — the paper warns (§5) that
+gateway bottlenecks magnify at scale — so every built-in algorithm is O(1)
+or O(log n) per decision, and decisions use *cached* heartbeat telemetry
+refreshed by a background poller rather than a synchronous probe per task.
+
+Fallback chain: if an algorithm raises or returns no worker, the next one in
+the chain is consulted; the terminal fallback is round-robin over live
+workers — graceful degradation, never a hard stop from the scheduler itself.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .context import Context, EMPTY_CONTEXT
+
+__all__ = ["TaskRequest", "WorkerHandle", "AllocationError", "Gateway",
+           "round_robin", "least_loaded", "power_of_two", "context_affinity"]
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+@dataclass
+class TaskRequest:
+    task_name: str
+    ctx: Context = EMPTY_CONTEXT
+    inputs: Mapping[str, Any] = field(default_factory=dict)
+    priority: int = 0                  # lower = more urgent (silo key)
+    affinity_key: str = ""             # context-affinity routing hint
+    future: Future = field(default_factory=Future)
+    submitted_at: float = field(default_factory=time.time)
+    attempts: int = 0
+    max_attempts: int = 3
+
+
+@dataclass
+class WorkerHandle:
+    """Gateway-side view of a Server: transport + cached telemetry (context)."""
+
+    worker: Any                        # InProcWorker | WorkerClient surface
+    name: str
+    live: bool = True                  # heartbeat verdict (system level)
+    app_live: bool = True              # application verdict
+    telemetry: Optional[Dict[str, Any]] = None
+    last_seen: float = 0.0
+    inflight: int = 0
+    completed: int = 0
+    ewma_latency_s: float = 0.0        # straggler detection input
+    held_contexts: set = field(default_factory=set)  # affinity state
+
+    def load_score(self) -> float:
+        """Cheap load proxy: inflight + reported cpu usage."""
+        cpu = 0.0
+        if self.telemetry:
+            cpu = float(self.telemetry.get("cpu", {}).get("used_frac", 0.0))
+        return self.inflight + cpu
+
+
+# --------------------------------------------------------------------------
+# allocation algorithms (pluggable, §3.3 assumption 3)
+# --------------------------------------------------------------------------
+
+def round_robin(workers: Sequence[WorkerHandle], req: TaskRequest,
+                state: Dict[str, Any]) -> Optional[WorkerHandle]:
+    live = [w for w in workers if w.live and w.app_live]
+    if not live:
+        return None
+    i = state.setdefault("rr", itertools.count())
+    return live[next(i) % len(live)]
+
+
+def least_loaded(workers: Sequence[WorkerHandle], req: TaskRequest,
+                 state: Dict[str, Any]) -> Optional[WorkerHandle]:
+    live = [w for w in workers if w.live and w.app_live]
+    if not live:
+        return None
+    return min(live, key=lambda w: (w.load_score(), w.name))
+
+
+def power_of_two(workers: Sequence[WorkerHandle], req: TaskRequest,
+                 state: Dict[str, Any]) -> Optional[WorkerHandle]:
+    """Power-of-two-choices: O(1) with near-least-loaded quality."""
+    live = [w for w in workers if w.live and w.app_live]
+    if not live:
+        return None
+    rng: random.Random = state.setdefault("rng", random.Random(0))
+    a, b = rng.choice(live), rng.choice(live)
+    return min((a, b), key=lambda w: (w.load_score(), w.name))
+
+
+def context_affinity(workers: Sequence[WorkerHandle], req: TaskRequest,
+                     state: Dict[str, Any]) -> Optional[WorkerHandle]:
+    """Prefer the worker already holding the task's context (sharded state)."""
+    if not req.affinity_key:
+        return None  # fall through the chain
+    live = [w for w in workers if w.live and w.app_live]
+    holders = [w for w in live if req.affinity_key in w.held_contexts]
+    if holders:
+        return min(holders, key=lambda w: (w.load_score(), w.name))
+    return None
+
+
+_ALGOS: Dict[str, Callable] = {
+    "round_robin": round_robin,
+    "least_loaded": least_loaded,
+    "power_of_two": power_of_two,
+    "context_affinity": context_affinity,
+}
+
+
+class Gateway:
+    """Central task router with queue/queue-silo + allocation fallback chain."""
+
+    def __init__(self, workers: Sequence[Any], *,
+                 allocation: Sequence[str] = ("context_affinity", "least_loaded"),
+                 silo: bool = False,
+                 heartbeat_interval_s: float = 0.5,
+                 dispatch_threads: int = 8,
+                 name: str = "gateway"):
+        self.name = name
+        self.handles: List[WorkerHandle] = [
+            WorkerHandle(worker=w, name=getattr(w, "name", f"w{i}"))
+            for i, w in enumerate(workers)
+        ]
+        chain = [(_ALGOS[a] if isinstance(a, str) else a) for a in allocation]
+        if round_robin not in chain:
+            chain.append(round_robin)  # terminal graceful-degradation fallback
+        self.allocation_chain = chain
+        self._alloc_state: Dict[str, Any] = {}
+        self.silo = silo
+        self._queue: deque = deque()
+        self._silo: List[Tuple[int, int, TaskRequest]] = []  # heap
+        self._silo_counter = itertools.count()
+        self._cv = threading.Condition()
+        self._stop = threading.Event()
+        self._hb_interval = heartbeat_interval_s
+        self._threads: List[threading.Thread] = []
+        self._dispatch_threads = dispatch_threads
+        self.on_worker_down: Optional[Callable[[WorkerHandle], None]] = None
+        self.metrics = {"scheduled": 0, "rejected": 0, "requeued": 0,
+                        "alloc_ns_total": 0, "alloc_calls": 0}
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "Gateway":
+        hb = threading.Thread(target=self._heartbeat_loop, name=f"{self.name}:hb",
+                              daemon=True)
+        hb.start()
+        self._threads.append(hb)
+        for i in range(self._dispatch_threads):
+            t = threading.Thread(target=self._dispatch_loop,
+                                 name=f"{self.name}:dispatch{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        self._refresh_heartbeats()  # synchronous first pass: start with fresh context
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        with self._cv:
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=2)
+
+    def __enter__(self) -> "Gateway":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission ------------------------------------------------------------
+    def submit(self, task_name: str, ctx: Context = EMPTY_CONTEXT,
+               inputs: Optional[Mapping[str, Any]] = None, *, priority: int = 0,
+               affinity_key: str = "", max_attempts: int = 3) -> Future:
+        req = TaskRequest(task_name=task_name, ctx=ctx, inputs=dict(inputs or {}),
+                          priority=priority, affinity_key=affinity_key,
+                          max_attempts=max_attempts)
+        with self._cv:
+            if self.silo:
+                heapq.heappush(self._silo, (priority, next(self._silo_counter), req))
+            else:
+                self._queue.append(req)
+            self._cv.notify()
+        return req.future
+
+    def map(self, task_name: str, inputs_list: Sequence[Mapping[str, Any]],
+            ctx: Context = EMPTY_CONTEXT, **kw) -> List[Future]:
+        return [self.submit(task_name, ctx, inp, **kw) for inp in inputs_list]
+
+    # -- internals ------------------------------------------------------------
+    def _pop(self, timeout: float = 0.1) -> Optional[TaskRequest]:
+        with self._cv:
+            if not self._queue and not self._silo:
+                self._cv.wait(timeout)
+            if self.silo and self._silo:
+                return heapq.heappop(self._silo)[2]
+            if self._queue:
+                return self._queue.popleft()
+        return None
+
+    def _allocate(self, req: TaskRequest) -> Optional[WorkerHandle]:
+        t0 = time.perf_counter_ns()
+        try:
+            for algo in self.allocation_chain:
+                try:
+                    w = algo(self.handles, req, self._alloc_state)
+                except Exception:
+                    continue  # fallback on algorithm failure (§3.3)
+                if w is not None:
+                    return w
+            return None
+        finally:
+            self.metrics["alloc_ns_total"] += time.perf_counter_ns() - t0
+            self.metrics["alloc_calls"] += 1
+
+    def _dispatch_loop(self) -> None:
+        while not self._stop.is_set():
+            req = self._pop()
+            if req is None:
+                continue
+            handle = self._allocate(req)
+            if handle is None:
+                # no live workers: retry later rather than dropping (degrade)
+                time.sleep(0.05)
+                req.attempts += 1
+                if req.attempts >= req.max_attempts * 4:
+                    req.future.set_exception(
+                        AllocationError("no live workers available"))
+                    self.metrics["rejected"] += 1
+                else:
+                    self._resubmit(req)
+                continue
+            self._run_on(handle, req)
+
+    def _resubmit(self, req: TaskRequest) -> None:
+        with self._cv:
+            if self.silo:
+                heapq.heappush(self._silo, (req.priority, next(self._silo_counter), req))
+            else:
+                self._queue.append(req)
+            self._cv.notify()
+        self.metrics["requeued"] += 1
+
+    def _run_on(self, handle: WorkerHandle, req: TaskRequest) -> None:
+        handle.inflight += 1
+        t0 = time.time()
+        try:
+            result = handle.worker.run_task(req.task_name, req.ctx, req.inputs)
+        except ConnectionError:
+            # system-level failure: mark dead, requeue elsewhere
+            handle.live = False
+            handle.inflight -= 1
+            if self.on_worker_down:
+                self.on_worker_down(handle)
+            req.attempts += 1
+            if req.attempts >= req.max_attempts:
+                req.future.set_exception(AllocationError(
+                    f"task {req.task_name} exhausted retries (system failures)"))
+            else:
+                self._resubmit(req)
+            return
+        except TimeoutError as exc:
+            # application-level failure: heartbeat may still be fine
+            handle.app_live = False
+            handle.inflight -= 1
+            req.attempts += 1
+            if req.attempts >= req.max_attempts:
+                req.future.set_exception(exc)
+            else:
+                self._resubmit(req)
+            return
+        dt = time.time() - t0
+        handle.inflight -= 1
+        handle.completed += 1
+        handle.ewma_latency_s = (0.8 * handle.ewma_latency_s + 0.2 * dt
+                                 if handle.ewma_latency_s else dt)
+        if req.affinity_key:
+            handle.held_contexts.add(req.affinity_key)
+        self.metrics["scheduled"] += 1
+        status = result.get("status")
+        if status == "ok":
+            if not req.future.done():  # speculative duplicates race benignly
+                req.future.set_result(result["output"])
+        elif status == "rejected":
+            req.future.set_exception(PermissionError(result.get("reason", "rejected")))
+            self.metrics["rejected"] += 1
+        else:
+            req.attempts += 1
+            if req.attempts >= req.max_attempts:
+                if not req.future.done():
+                    req.future.set_exception(
+                        RuntimeError(result.get("error", "task failed")))
+            else:
+                self._resubmit(req)
+
+    def _refresh_heartbeats(self) -> None:
+        for h in self.handles:
+            tel = None
+            try:
+                tel = h.worker.heartbeat()
+            except Exception:
+                tel = None
+            was_live = h.live
+            h.live = tel is not None
+            h.telemetry = tel
+            h.last_seen = time.time() if tel else h.last_seen
+            if tel is not None:
+                h.app_live = getattr(h.worker, "app_alive", True)
+            if was_live and not h.live and self.on_worker_down:
+                self.on_worker_down(h)
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.is_set():
+            self._refresh_heartbeats()
+            self._stop.wait(self._hb_interval)
+
+    # -- introspection ----------------------------------------------------------
+    def cluster_context(self) -> Context:
+        """The gateway 'stores the context required for the associated Servers'."""
+        facts = {}
+        for h in self.handles:
+            facts[f"worker/{h.name}/live"] = h.live
+            facts[f"worker/{h.name}/app_live"] = h.app_live
+            facts[f"worker/{h.name}/completed"] = h.completed
+            if h.telemetry:
+                facts[f"worker/{h.name}/cpu"] = h.telemetry["cpu"]["used_frac"]
+        return Context.origin(facts, origin=self.name)
+
+    def live_workers(self) -> List[WorkerHandle]:
+        return [h for h in self.handles if h.live and h.app_live]
+
+    def mean_alloc_us(self) -> float:
+        calls = max(1, self.metrics["alloc_calls"])
+        return self.metrics["alloc_ns_total"] / calls / 1e3

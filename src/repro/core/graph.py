@@ -1,0 +1,263 @@
+"""ContextGraph: the context-aware computational graph of SerPyTor §4.1.
+
+Nodes are atomic tasks (dependency-injected callables) carrying data Ψ.
+Edges are dependencies. Co-dependent nodes (strongly connected components —
+the paper's "union nodes" A') are contracted before scheduling so the
+executable graph is a DAG, per §4.1.1.
+
+Context propagation follows the paper exactly:
+  - the root inherits the origin context ξ(∅) plus its own Ψ,
+  - a node with independent origins inherits the union of its parents' ξ,
+  - a union node's ξ is the union of the ξ and Ψ of every member.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .context import Context, EMPTY_CONTEXT
+
+__all__ = ["Node", "UnionNode", "ContextGraph", "CycleError", "toposort_levels"]
+
+
+class CycleError(ValueError):
+    """Raised when a cycle survives contraction (contract=False paths)."""
+
+
+@dataclass
+class Node:
+    """An atomic task.
+
+    ``fn`` receives its inputs purely by injection: ``fn(ctx, **inputs)`` where
+    ``inputs`` maps each dependency's node id (or alias) to that node's output.
+    ``data`` is Ψ(node): static facts folded into the node's context.
+    """
+
+    id: str
+    fn: Optional[Callable[..., Any]] = None
+    deps: Tuple[str, ...] = ()
+    data: Mapping[str, Any] = field(default_factory=dict)
+    aliases: Mapping[str, str] = field(default_factory=dict)  # dep id -> kwarg name
+    resources: Mapping[str, float] = field(default_factory=dict)  # scheduling hints
+    retries: int = 0
+    timeout_s: Optional[float] = None
+
+    def kwarg_for(self, dep_id: str) -> str:
+        return self.aliases.get(dep_id, dep_id)
+
+
+@dataclass
+class UnionNode:
+    """A contracted SCC — the paper's A' union node."""
+
+    id: str
+    members: Tuple[Node, ...]
+    deps: Tuple[str, ...] = ()
+
+    @property
+    def data(self) -> Dict[str, Any]:
+        merged: Dict[str, Any] = {}
+        for m in sorted(self.members, key=lambda n: n.id):
+            merged.update(m.data)
+        return merged
+
+
+def _tarjan_scc(ids: Sequence[str], deps_of: Mapping[str, Sequence[str]]) -> List[List[str]]:
+    """Iterative Tarjan SCC (no recursion limit issues on big graphs)."""
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Dict[str, bool] = {}
+    stack: List[str] = []
+    sccs: List[List[str]] = []
+    counter = [0]
+
+    for root in ids:
+        if root in index:
+            continue
+        work: List[Tuple[str, int]] = [(root, 0)]
+        while work:
+            v, pi = work.pop()
+            if pi == 0:
+                index[v] = low[v] = counter[0]
+                counter[0] += 1
+                stack.append(v)
+                on_stack[v] = True
+            recurse = False
+            children = [d for d in deps_of.get(v, ()) if d in deps_of or d in index]
+            for i in range(pi, len(children)):
+                w = children[i]
+                if w not in index:
+                    work.append((v, i + 1))
+                    work.append((w, 0))
+                    recurse = True
+                    break
+                elif on_stack.get(w, False):
+                    low[v] = min(low[v], index[w])
+            if recurse:
+                continue
+            if low[v] == index[v]:
+                scc = []
+                while True:
+                    w = stack.pop()
+                    on_stack[w] = False
+                    scc.append(w)
+                    if w == v:
+                        break
+                sccs.append(sorted(scc))
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[v])
+    return sccs
+
+
+def toposort_levels(ids: Sequence[str], deps_of: Mapping[str, Sequence[str]]) -> List[List[str]]:
+    """Kahn levels: each level's nodes are mutually independent (parallelizable)."""
+    indeg = {i: 0 for i in ids}
+    children: Dict[str, List[str]] = {i: [] for i in ids}
+    for i in ids:
+        for d in deps_of.get(i, ()):
+            if d in indeg:
+                indeg[i] += 1
+                children[d].append(i)
+    frontier = sorted(i for i, d in indeg.items() if d == 0)
+    levels: List[List[str]] = []
+    seen = 0
+    while frontier:
+        levels.append(frontier)
+        nxt: List[str] = []
+        for i in frontier:
+            seen += 1
+            for c in children[i]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    nxt.append(c)
+        frontier = sorted(nxt)
+    if seen != len(list(ids)):
+        raise CycleError("graph has a cycle that was not contracted")
+    return levels
+
+
+class ContextGraph:
+    """A context-aware computational graph (builds, contracts, schedules)."""
+
+    def __init__(self, origin: Context = EMPTY_CONTEXT, name: str = "graph"):
+        self.name = name
+        self.origin_context = origin
+        self.nodes: Dict[str, Node] = {}
+
+    # -- building ----------------------------------------------------------
+    def add(self, id: str, fn: Optional[Callable[..., Any]] = None, *,
+            deps: Iterable[str] = (), data: Optional[Mapping[str, Any]] = None,
+            aliases: Optional[Mapping[str, str]] = None,
+            resources: Optional[Mapping[str, float]] = None,
+            retries: int = 0, timeout_s: Optional[float] = None) -> Node:
+        if id in self.nodes:
+            raise ValueError(f"duplicate node id {id!r}")
+        node = Node(id=id, fn=fn, deps=tuple(deps), data=dict(data or {}),
+                    aliases=dict(aliases or {}), resources=dict(resources or {}),
+                    retries=retries, timeout_s=timeout_s)
+        self.nodes[id] = node
+        return node
+
+    def task(self, id: str, *, deps: Iterable[str] = (), **kw):
+        """Decorator form: ``@graph.task("loss", deps=["fwd"])``."""
+
+        def wrap(fn: Callable[..., Any]) -> Callable[..., Any]:
+            self.add(id, fn, deps=deps, **kw)
+            return fn
+
+        return wrap
+
+    def validate(self) -> None:
+        for n in self.nodes.values():
+            for d in n.deps:
+                if d not in self.nodes:
+                    raise KeyError(f"node {n.id!r} depends on unknown node {d!r}")
+
+    # -- contraction (§4.1 union nodes) -------------------------------------
+    def contract(self) -> Tuple[Dict[str, "UnionNode | Node"], Dict[str, str]]:
+        """Contract SCCs into union nodes.
+
+        Returns (exec_nodes, member_to_group): exec_nodes is a DAG keyed by
+        group id; member_to_group maps original ids to their group id.
+        """
+        self.validate()
+        deps_of = {i: n.deps for i, n in self.nodes.items()}
+        sccs = _tarjan_scc(sorted(self.nodes), deps_of)
+        member_to_group: Dict[str, str] = {}
+        exec_nodes: Dict[str, UnionNode | Node] = {}
+        for scc in sccs:
+            if len(scc) == 1 and scc[0] not in self.nodes[scc[0]].deps:
+                member_to_group[scc[0]] = scc[0]
+            else:
+                gid = "∪(" + "+".join(scc) + ")"
+                for m in scc:
+                    member_to_group[m] = gid
+        for scc in sccs:
+            gid = member_to_group[scc[0]]
+            ext = sorted({member_to_group[d] for m in scc for d in self.nodes[m].deps
+                          if member_to_group[d] != gid})
+            if gid == scc[0] and len(scc) == 1:
+                # keep the ORIGINAL node (original deps are needed for
+                # dependency injection of specific union-node members)
+                exec_nodes[gid] = self.nodes[scc[0]]
+            else:
+                exec_nodes[gid] = UnionNode(
+                    id=gid, members=tuple(self.nodes[m] for m in scc), deps=tuple(ext))
+        return exec_nodes, member_to_group
+
+    @staticmethod
+    def group_deps(exec_nodes: Mapping[str, "UnionNode | Node"],
+                   member_to_group: Mapping[str, str]) -> Dict[str, Tuple[str, ...]]:
+        """Scheduling-level deps: original deps mapped through contraction."""
+        out: Dict[str, Tuple[str, ...]] = {}
+        for gid, node in exec_nodes.items():
+            if isinstance(node, UnionNode):
+                out[gid] = node.deps  # already external group ids
+            else:
+                out[gid] = tuple(sorted({member_to_group.get(d, d) for d in node.deps
+                                         if member_to_group.get(d, d) != gid}))
+        return out
+
+    # -- context propagation -------------------------------------------------
+    def propagate_contexts(
+        self,
+        exec_nodes: Optional[Mapping[str, "UnionNode | Node"]] = None,
+    ) -> Dict[str, Context]:
+        """Compute ξ for every exec node per the §4.1 rules (no execution)."""
+        if exec_nodes is None:
+            exec_nodes, member_to_group = self.contract()
+        else:
+            _, member_to_group = self.contract()
+        deps_of = self.group_deps(exec_nodes, member_to_group)
+        levels = toposort_levels(sorted(exec_nodes), deps_of)
+        xi: Dict[str, Context] = {}
+        for level in levels:
+            for nid in level:
+                node = exec_nodes[nid]
+                parents = [xi[d] for d in deps_of[nid]]
+                if parents:
+                    inherited = Context.union_all(parents)
+                else:
+                    inherited = self.origin_context  # ξ(∅)
+                if isinstance(node, UnionNode):
+                    # ξ(A') = ⋃ ξ(member-parents) ∪ ⋃ Ψ(member)
+                    ctx = inherited
+                    for m in sorted(node.members, key=lambda n: n.id):
+                        ctx = ctx.with_data(m.data, origin=m.id) if m.data else ctx
+                else:
+                    ctx = inherited.with_data(node.data, origin=node.id) if node.data \
+                        else inherited
+                xi[nid] = ctx
+        return xi
+
+    def schedule(self) -> Tuple[List[List[str]], Dict[str, "UnionNode | Node"], Dict[str, str]]:
+        """(levels, exec_nodes, member_to_group) — ready for an executor."""
+        exec_nodes, member_to_group = self.contract()
+        deps_of = self.group_deps(exec_nodes, member_to_group)
+        levels = toposort_levels(sorted(exec_nodes), deps_of)
+        return levels, exec_nodes, member_to_group
+
+    def __len__(self) -> int:
+        return len(self.nodes)

@@ -1,0 +1,143 @@
+"""HeartbeatServer (§3.1): per-node resource monitor on its own process/port.
+
+A successful heartbeat response proves the *system* is up; the application
+server answering on its own port proves the *application* is up. The liveness
+detector in failure.py combines the two to implement the paper's
+system-vs-application error split.
+
+Two transports are provided:
+  - ``HeartbeatServer``: real stdlib HTTP server on localhost (paper-faithful,
+    separate thread standing in for the separate process; a ``spawn_process``
+    flag runs it in a true subprocess for the integration test).
+  - in-process polling via ``telemetry()`` for zero-port unit tests.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional
+
+__all__ = ["telemetry", "HeartbeatServer", "check_heartbeat"]
+
+_START = time.time()
+
+
+def _meminfo() -> Dict[str, float]:
+    total = avail = 0.0
+    try:
+        with open("/proc/meminfo") as fh:
+            for line in fh:
+                if line.startswith("MemTotal:"):
+                    total = float(line.split()[1]) * 1024
+                elif line.startswith("MemAvailable:"):
+                    avail = float(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return {"total_bytes": total, "available_bytes": avail,
+            "used_frac": (1.0 - avail / total) if total else 0.0}
+
+
+def telemetry(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The JSON resource report of §3.1: CPU/disk/memory/devices + liveness."""
+    try:
+        load1, load5, load15 = os.getloadavg()
+    except OSError:  # pragma: no cover
+        load1 = load5 = load15 = 0.0
+    ncpu = os.cpu_count() or 1
+    disk = shutil.disk_usage("/")
+    report: Dict[str, Any] = {
+        "ok": True,
+        "time": time.time(),
+        "uptime_s": time.time() - _START,
+        "cpu": {"load1": load1, "load5": load5, "load15": load15,
+                "ncpu": ncpu, "used_frac": min(1.0, load1 / ncpu)},
+        "memory": _meminfo(),
+        "disk": {"total_bytes": disk.total, "free_bytes": disk.free,
+                 "used_frac": 1.0 - disk.free / disk.total},
+        "devices": _device_report(),
+        "pid": os.getpid(),
+    }
+    if extra:
+        report.update(extra)
+    return report
+
+
+def _device_report() -> Dict[str, Any]:
+    """Accelerator report; cheap and import-safe if jax is initialized."""
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is None:  # don't force device init just for a heartbeat
+        return {"backend": "uninitialized", "count": 0}
+    try:
+        devs = jax.local_devices()
+        return {"backend": devs[0].platform if devs else "none", "count": len(devs)}
+    except Exception:  # pragma: no cover
+        return {"backend": "error", "count": 0}
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "SerPyTorHeartbeat/1.0"
+
+    def do_GET(self) -> None:  # noqa: N802
+        if self.path.rstrip("/") in ("", "/heartbeat", "/health"):
+            body = json.dumps(telemetry(self.server.extra)).encode()  # type: ignore[attr-defined]
+            self.send_response(200)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+        else:
+            self.send_error(404)
+
+    def log_message(self, *args) -> None:  # silence
+        pass
+
+
+class HeartbeatServer:
+    """Separate-port heartbeat endpoint (assumption 1 of §3.2)."""
+
+    def __init__(self, port: int = 0, host: str = "127.0.0.1",
+                 extra: Optional[Dict[str, Any]] = None):
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.extra = extra or {}  # type: ignore[attr-defined]
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "HeartbeatServer":
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name=f"heartbeat:{self.port}", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=2)
+
+    @property
+    def address(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def __enter__(self) -> "HeartbeatServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def check_heartbeat(address: str, timeout: float = 1.0) -> Optional[Dict[str, Any]]:
+    """Poll a heartbeat endpoint. None ⇒ system-level failure (§3.2)."""
+    try:
+        with urllib.request.urlopen(address.rstrip("/") + "/heartbeat",
+                                    timeout=timeout) as resp:
+            return json.loads(resp.read())
+    except Exception:
+        return None

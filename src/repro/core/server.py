@@ -1,0 +1,240 @@
+"""Server (§3.2): the generic, weakly-opinionated compute worker.
+
+A ``WorkerServer`` owns a registry of atomic tasks (every mapping is a function
+that gets all its dependencies through DI) and executes requests either over a
+real HTTP transport or in-process. Middleware hooks (auth, validation,
+instrumentation) are pluggable, matching the paper's "users can extend it with
+security check pipelines, authentication and authorization mechanisms".
+
+The heartbeat endpoint is ALWAYS a separate server on a separate port
+(assumption 1 of §3.2), so a crashed application leaves the heartbeat alive —
+that asymmetry is what the failure detector reads.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+import traceback
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+from .context import Context
+from .durable import decode_payload, encode_payload
+from .heartbeat import HeartbeatServer
+
+__all__ = ["TaskRegistry", "WorkerServer", "WorkerClient", "InProcWorker", "Middleware"]
+
+Middleware = Callable[[str, Mapping[str, Any]], Optional[str]]
+# middleware(task_name, meta) -> None (pass) or str (rejection reason)
+
+
+class TaskRegistry:
+    """name → atomic task. Weakly opinionated: anything callable registers."""
+
+    def __init__(self) -> None:
+        self._tasks: Dict[str, Callable[..., Any]] = {}
+
+    def register(self, name: str, fn: Callable[..., Any]) -> None:
+        self._tasks[name] = fn
+
+    def task(self, name: str):
+        def wrap(fn: Callable[..., Any]) -> Callable[..., Any]:
+            self.register(name, fn)
+            return fn
+
+        return wrap
+
+    def get(self, name: str) -> Callable[..., Any]:
+        if name not in self._tasks:
+            raise KeyError(f"unknown task {name!r}")
+        return self._tasks[name]
+
+    def names(self) -> List[str]:
+        return sorted(self._tasks)
+
+
+class _WorkerState:
+    def __init__(self) -> None:
+        self.busy = 0
+        self.completed = 0
+        self.failed = 0
+        self.lock = threading.Lock()
+
+
+def _execute(registry: TaskRegistry, middleware: List[Middleware], state: _WorkerState,
+             task_name: str, ctx: Context, inputs: Mapping[str, Any],
+             fail_injector: Optional[Callable[[str], None]] = None) -> Dict[str, Any]:
+    for mw in middleware:
+        reason = mw(task_name, {"inputs": sorted(inputs)})
+        if reason is not None:
+            return {"status": "rejected", "reason": reason}
+    with state.lock:
+        state.busy += 1
+    t0 = time.time()
+    try:
+        if fail_injector is not None:
+            fail_injector(task_name)  # test hook: raise to simulate app error
+        fn = registry.get(task_name)
+        out = fn(ctx, **dict(inputs))
+        with state.lock:
+            state.completed += 1
+        return {"status": "ok", "output": out, "wall_s": time.time() - t0}
+    except Exception as exc:  # application-level failure: report, stay alive
+        with state.lock:
+            state.failed += 1
+        return {"status": "error", "error": f"{type(exc).__name__}: {exc}",
+                "traceback": traceback.format_exc(), "wall_s": time.time() - t0}
+    finally:
+        with state.lock:
+            state.busy -= 1
+
+
+class InProcWorker:
+    """Zero-transport worker — the unit-test and single-process fast path."""
+
+    def __init__(self, name: str, registry: TaskRegistry,
+                 middleware: Optional[List[Middleware]] = None):
+        self.name = name
+        self.registry = registry
+        self.middleware = list(middleware or [])
+        self.state = _WorkerState()
+        self.alive = True            # system liveness (simulated)
+        self.app_alive = True        # application liveness (simulated)
+        self.latency_s = 0.0         # injected slowness for straggler tests
+        self.fail_injector: Optional[Callable[[str], None]] = None
+
+    # same surface as WorkerClient ------------------------------------------
+    def heartbeat(self) -> Optional[Dict[str, Any]]:
+        if not self.alive:
+            return None
+        from .heartbeat import telemetry
+
+        with self.state.lock:
+            busy = self.state.busy
+        return telemetry({"worker": self.name, "busy": busy,
+                          "completed": self.state.completed})
+
+    def run_task(self, task_name: str, ctx: Context,
+                 inputs: Mapping[str, Any]) -> Dict[str, Any]:
+        if not self.alive:
+            raise ConnectionError(f"worker {self.name} is down (system-level)")
+        if not self.app_alive:
+            raise TimeoutError(f"worker {self.name} application not responding")
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        return _execute(self.registry, self.middleware, self.state,
+                        task_name, ctx, inputs, self.fail_injector)
+
+
+class _AppHandler(BaseHTTPRequestHandler):
+    server_version = "SerPyTorWorker/1.0"
+
+    def do_POST(self) -> None:  # noqa: N802
+        if self.path.rstrip("/") != "/task":
+            self.send_error(404)
+            return
+        length = int(self.headers.get("Content-Length", "0"))
+        body = self.rfile.read(length)
+        try:
+            req = decode_payload(body)
+            ctx = Context.from_wire(req["context"])
+            result = _execute(self.server.registry, self.server.middleware,  # type: ignore[attr-defined]
+                              self.server.state, req["task"], ctx, req["inputs"])  # type: ignore[attr-defined]
+        except Exception as exc:  # malformed request
+            result = {"status": "error", "error": str(exc)}
+        out = encode_payload(result)
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-msgpack-zstd")
+        self.send_header("Content-Length", str(len(out)))
+        self.end_headers()
+        self.wfile.write(out)
+
+    def do_GET(self) -> None:  # noqa: N802
+        if self.path.rstrip("/") == "/tasks":
+            body = json.dumps(self.server.registry.names()).encode()  # type: ignore[attr-defined]
+            self.send_response(200)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+        else:
+            self.send_error(404)
+
+    def log_message(self, *args) -> None:
+        pass
+
+
+class WorkerServer:
+    """Application server + separate heartbeat server (two ports, §3.2)."""
+
+    def __init__(self, name: str, registry: TaskRegistry, host: str = "127.0.0.1",
+                 port: int = 0, middleware: Optional[List[Middleware]] = None):
+        self.name = name
+        self.registry = registry
+        self.state = _WorkerState()
+        self._httpd = ThreadingHTTPServer((host, port), _AppHandler)
+        self._httpd.registry = registry  # type: ignore[attr-defined]
+        self._httpd.middleware = list(middleware or [])  # type: ignore[attr-defined]
+        self._httpd.state = self.state  # type: ignore[attr-defined]
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self.heartbeat_server = HeartbeatServer(host=host, extra={"worker": name})
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "WorkerServer":
+        self.heartbeat_server.start()
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name=f"worker:{self.name}", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, stop_heartbeat: bool = True) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=2)
+        if stop_heartbeat:
+            self.heartbeat_server.stop()
+
+    def crash_application(self) -> None:
+        """Kill ONLY the app server — heartbeat stays up (application-level)."""
+        self.stop(stop_heartbeat=False)
+
+    @property
+    def address(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def __enter__(self) -> "WorkerServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+class WorkerClient:
+    """HTTP client with the same surface as InProcWorker."""
+
+    def __init__(self, name: str, address: str, heartbeat_address: str,
+                 timeout: float = 30.0):
+        self.name = name
+        self.address = address
+        self.heartbeat_address = heartbeat_address
+        self.timeout = timeout
+
+    def heartbeat(self) -> Optional[Dict[str, Any]]:
+        from .heartbeat import check_heartbeat
+
+        return check_heartbeat(self.heartbeat_address, timeout=min(2.0, self.timeout))
+
+    def run_task(self, task_name: str, ctx: Context,
+                 inputs: Mapping[str, Any]) -> Dict[str, Any]:
+        body = encode_payload({"task": task_name, "context": ctx.to_wire(),
+                               "inputs": dict(inputs)})
+        req = urllib.request.Request(self.address.rstrip("/") + "/task", data=body,
+                                     method="POST")
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return decode_payload(resp.read())
+        except Exception as exc:
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}")

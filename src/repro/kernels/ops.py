@@ -1,0 +1,109 @@
+"""Public kernel ops: jit'd wrappers that dispatch TPU→Pallas, CPU→reference.
+
+Models import ONLY from this module. The dispatch decision is made once per
+call site from the default backend (or forced via ``impl=``):
+
+  impl="auto"    : pallas on TPU, blocked-jnp reference elsewhere
+  impl="pallas"  : force the Pallas kernel (interpret=True off-TPU — tests)
+  impl="ref"     : force the blocked reference
+  impl="dense"   : O(S²) dense oracle (tiny test shapes only)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+
+__all__ = ["flash_attention", "wkv6", "rglru", "default_impl"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: str) -> str:
+    return default_impl() if impl == "auto" else impl
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """Causal/local GQA attention. q:(B,Hq,Sq,D) k,v:(B,Hkv,Sk,D) → (B,Hq,Sq,D)."""
+    impl = _resolve(impl)
+    if impl == "dense":
+        return _ref.flash_attention_dense_ref(q, k, v, causal=causal, window=window,
+                                              scale=scale)
+    if impl == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        scale=scale)
+    from .flash_attention import flash_attention_pallas
+
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(q, k, v, causal=causal, window=window, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 WKV
+# --------------------------------------------------------------------------
+
+def wkv6(r, k, v, w, u, *, initial_state=None, chunk: int = 16,
+         impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Data-dependent-decay linear attention (RWKV6 'Finch').
+
+    r,k,w:(B,H,T,K) v:(B,H,T,V) u:(H,K) → (out (B,H,T,V), state (B,H,K,V)).
+    Callers must guarantee log(w) ≥ -4 per step (see ref.wkv6_chunked_ref).
+    """
+    impl = _resolve(impl)
+    if impl == "dense":
+        return _ref.wkv6_ref(r, k, v, w, u, initial_state=initial_state)
+
+    # pad T to a chunk multiple: r=k=0, w=1 pads are exact no-ops for both
+    # the outputs (discarded) and the carried state.
+    T = r.shape[2]
+    pad = (-T) % chunk
+    if pad:
+        padT = lambda x, cval: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                                       constant_values=cval)
+        r, k, v = padT(r, 0), padT(k, 0), padT(v, 0)
+        w = padT(w, 1)
+    if impl == "ref":
+        out, state = _ref.wkv6_chunked_ref(r, k, v, w, u, chunk=chunk,
+                                           initial_state=initial_state)
+    else:
+        from .rwkv6 import wkv6_pallas
+
+        interpret = jax.default_backend() != "tpu"
+        out, state = wkv6_pallas(r, k, v, w, u, initial_state=initial_state,
+                                 chunk=chunk, interpret=interpret)
+    if pad:
+        out = out[:, :, :T, :]
+    return out, state
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+def rglru(x, a, *, initial_state=None, impl: str = "auto",
+          chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RG-LRU diagonal recurrence. x,a:(B,T,D) → (h (B,T,D), state (B,D))."""
+    impl = _resolve(impl)
+    if impl == "dense":
+        return _ref.rglru_ref(x, a, initial_state=initial_state)
+    if impl == "ref":
+        return _ref.rglru_scan_ref(x, a, initial_state=initial_state)
+    from .rglru import rglru_pallas
+
+    interpret = jax.default_backend() != "tpu"
+    return rglru_pallas(x, a, initial_state=initial_state, chunk=chunk,
+                        interpret=interpret)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence (chunked, data-dep decay).
+
+TPU adaptation of the (inherently sequential) WKV scan:
+  - grid (B, H, T/chunk); the chunk axis is LAST = sequential ("arbitrary"),
+    so the per-(batch, head) state S ∈ R^{K×V} f32 lives in VMEM scratch and
+    flows across chunk steps without HBM round trips.
+  - inside a chunk the recurrence is re-associated into MXU matmuls
+    (the rank-1-factorized chunked form of kernels/ref.wkv6_chunked_ref,
+    same f32 range contract: |Σ_chunk log w| ≤ 80 ⇒ chunk=16 with the
+    model-side clamp log w ≥ −4).
+  - K, V = head_size (64): blocks are (chunk, 64) — the matmuls are small
+    but batched across the (B, H) parallel grid dims, which is where v5e's
+    8 parallel sublanes earn their keep; the win over a per-step scan is
+    ~chunk× fewer sequential dependencies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6_pallas"]
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 o_ref, sT_ref, S_scr, *, chunk: int, nt: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        S_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (c, K)
+    k = k_ref[0, 0].astype(jnp.float32)          # (c, K)
+    v = v_ref[0, 0].astype(jnp.float32)          # (c, V)
+    w = w_ref[0, 0].astype(jnp.float32)          # (c, K)
+    u = u_ref[0].astype(jnp.float32)             # (K,)
+    S = S_scr[...]                                # (K, V)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)               # (c, K)
+    Dt = jnp.exp(cum)
+    Dt_prev = jnp.exp(cum - logw)
+    r_hat = r * Dt_prev
+    k_hat = k / jnp.maximum(Dt, 1e-30)
+
+    cross = jax.lax.dot_general(r_hat, S, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # (c, V)
+    att = jax.lax.dot_general(r_hat, k_hat, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)     # (c, c)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    intra = jax.lax.dot_general(att * tri, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    diag = ((r * u[None, :]) * k).sum(axis=1, keepdims=True) * v
+    o_ref[0, 0] = (cross + intra + diag).astype(o_ref.dtype)
+
+    D_last = Dt[-1, :]                            # (K,)
+    k_scaled = k * jnp.exp(cum[-1:, :] - cum)     # (c, K)
+    S_new = D_last[:, None] * S + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (K, V)
+    S_scr[...] = S_new
+
+    @pl.when(it == nt - 1)
+    def _write_state():
+        sT_ref[0, 0] = S_new
+
+
+def wkv6_pallas(r, k, v, w, u, *, initial_state=None, chunk: int = 16,
+                interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K). T % chunk == 0 (ops pads)."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, "ops.wkv6 pads T to the chunk size"
+    nt = T // chunk
+    s0 = (jnp.zeros((B, H, K, V), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, nt=nt)
+    out, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, K), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, sT

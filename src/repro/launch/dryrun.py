@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count on first initialization). See MULTI-POD DRY-RUN step 0.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each runnable cell this script:
+  1. builds the model and sharding rules over the production mesh,
+  2. jits the right step (train_step / prefill_step / decode_step) with
+     explicit in/out shardings,
+  3. ``.lower(...).compile()`` — proving the distribution config is coherent,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     into a JSON cache (results/dryrun/<cell>.json), incrementally (resume-
+     safe: completed cells are skipped on rerun — the dry-run loop itself is
+     durable, in the spirit of the paper).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+__doc__ = _DOC
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (SHAPES, cell_applicability, get_config, input_specs,
+                           list_archs)
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import build
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.specs import ShardingOptions, ShardingRules
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLLECTIVE_RE = re.compile(
+    r"(\ball-gather(?:-start)?|\ball-reduce(?:-start)?|\breduce-scatter"
+    r"|\ball-to-all|\bcollective-permute(?:-start)?)\b")
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|s64|u32|s8|u8|pred|s16|u16)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "s64": 8,
+          "u32": 4, "s8": 1, "u8": 1, "pred": 1, "s16": 2, "u16": 2}
+
+
+_COLLECTIVE_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                   "collective-permute", "all-gather-start", "all-reduce-start",
+                   "collective-permute-start"}
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result bytes of every collective op in optimized HLO.
+
+    Matches on the OPCODE position (the token right before the first '('
+    on the rhs) — matching anywhere in the line would also hit operand
+    references like ``get-tuple-element(%all-reduce.109)`` and double-count.
+    """
+    per_kind: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line or "(" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        paren = rhs.find("(")
+        # tuple-typed results start with '(' immediately: the opcode is after
+        # the closing paren of the type. Find the first '(' PRECEDED by an
+        # opcode token instead: scan tokens.
+        head, _, _ = rhs.partition("(")
+        opcode = head.strip().split()[-1] if head.strip() else ""
+        if opcode not in _COLLECTIVE_OPS:
+            # tuple-typed result: "(f32[..], f32[..]) all-reduce(...)"
+            m = re.match(r"\s*\((?:[^()]|\([^()]*\))*\)\s*([a-z0-9-]+)\(", rhs)
+            if m is None or m.group(1) not in _COLLECTIVE_OPS:
+                continue
+            opcode = m.group(1)
+            head = rhs[: m.start(1)]
+        kind = opcode.replace("-start", "")
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(head):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES.get(dt, 4)
+        if nbytes:
+            per_kind[kind] = per_kind.get(kind, 0) + nbytes
+            counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_per_kind": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 6·N·D (active N for MoE); decode D = batch tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _mem_analysis_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = float(getattr(ma, k, 0) or 0)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or k in ("utilization",))}
+    except Exception:
+        return {}
+
+
+def arch_run_defaults(arch: str) -> Dict[str, Any]:
+    """Per-arch distribution defaults (documented in EXPERIMENTS.md §Dry-run).
+
+    - granite-moe: 40 experts don't divide the 16-way model axis → tensor-
+      parallel the expert FFN dim instead of EP (expert_parallel=False).
+    - deepseek-v3: AdamW m/v in bf16 — f32 states (5.4 TB) cannot fit 512
+      v5e chips; bf16 states + f32 master-free update is the documented
+      memory mode for this config.
+    """
+    out: Dict[str, Any] = {"options": {}, "opt": {}}
+    if arch == "granite-moe-3b-a800m":
+        out["options"]["expert_parallel"] = False
+    if arch == "deepseek-v3-671b":
+        out["opt"]["state_dtype"] = "bfloat16"
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               options: Optional[ShardingOptions] = None,
+               opt_cfg: Optional[AdamWConfig] = None,
+               want_hlo: bool = False,
+               cfg=None) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the result record."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    runnable, why = cell_applicability(cfg, shape)
+    if not runnable:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    defaults = arch_run_defaults(arch)
+    if options is None:
+        options = ShardingOptions(**defaults["options"])
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig(**defaults["opt"])
+    rules = ShardingRules(cfg, mesh, options)
+    model = build(cfg)
+    t0 = time.time()
+
+    captured: Dict[str, Any] = {}
+
+    def _init_params_only(r):
+        p, ax = model.init(r)
+        captured["axes"] = ax  # static side product, captured during trace
+        return p
+
+    param_shapes = jax.eval_shape(_init_params_only, jax.random.key(0))
+    axes = captured["axes"]
+    param_sh = rules.param_sharding_tree(axes, param_shapes)
+    params_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        param_shapes, param_sh)
+    batch_sds = input_specs(cfg, shape)
+    batch_sh = rules.batch_spec(batch_sds)
+    batch_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        batch_sds, batch_sh)
+
+    with mesh:
+        rules.install()
+        try:
+            if shape.kind == "train":
+                from repro.train.steps import make_opt_init
+
+                opt_shapes = jax.eval_shape(make_opt_init(model, opt_cfg),
+                                            param_shapes)
+                opt_sh = {"m": param_sh, "v": param_sh,
+                          "step": rules.replicated()}
+                opt_sds = jax.tree.map(
+                    lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                       sharding=sh),
+                    opt_shapes, {"m": jax.tree.map(lambda x: x, opt_sh["m"]),
+                                 "v": opt_sh["v"], "step": opt_sh["step"]})
+                step = make_train_step(model, opt_cfg)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(param_sh, {"m": opt_sh["m"], "v": opt_sh["v"],
+                                             "step": opt_sh["step"]}, batch_sh),
+                    out_shardings=(param_sh,
+                                   {"m": opt_sh["m"], "v": opt_sh["v"],
+                                    "step": opt_sh["step"]}, None),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+            elif shape.kind == "prefill":
+                step = make_prefill_step(model)
+                jitted = jax.jit(step, in_shardings=(param_sh, batch_sh))
+                lowered = jitted.lower(params_sds, batch_sds)
+            else:  # decode
+                cache_shapes = jax.eval_shape(
+                    lambda: model.init_cache(shape.global_batch, shape.seq_len))
+                cache_sh = rules.cache_sharding_tree(cache_shapes)
+                cache_sds = jax.tree.map(
+                    lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                       sharding=sh),
+                    cache_shapes, cache_sh)
+                step = make_decode_step(model)
+                jitted = jax.jit(step,
+                                 in_shardings=(param_sh, cache_sh, batch_sh),
+                                 out_shardings=(None, cache_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_sds, cache_sds, batch_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        finally:
+            rules.uninstall()
+
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    mem = _mem_analysis_dict(compiled)
+    cost = _cost_analysis_dict(compiled)
+    n_dev = mesh.size
+    hbm_per_dev = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0))
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "multi_pod": multi_pod, "mesh": dict(zip(mesh.axis_names,
+                                                 np.array(mesh.devices.shape).tolist())),
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "cost": cost, "collectives": coll,
+        "hbm_per_device_gib": hbm_per_dev / 2 ** 30,
+        "fits_hbm": bool(hbm_per_dev <= HW.HBM_BYTES),
+        "model_flops_analytic": model_flops(cfg, SHAPES[shape_name]),
+        "options": {
+            "fsdp": options.fsdp, "seq_parallel": options.seq_parallel,
+            "cache_seq_shard": options.cache_seq_shard,
+            "expert_parallel": options.expert_parallel,
+            "overrides": list(options.logical_overrides),
+        },
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    if want_hlo:
+        rec["hlo_text"] = hlo
+    return rec
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "mp" if multi_pod else "sp"
+    tag = f".{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{suffix}{tag}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--cache-seq-shard", default="auto")
+    ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "sort"])
+    args = ap.parse_args()
+
+    if args.all:
+        archs = [a for a in list_archs() if a != "serpytor-demo-100m"]
+        shapes = list(SHAPES)
+    else:
+        archs = [args.arch]
+        shapes = [args.shape] if args.shape else list(SHAPES)
+
+    custom = args.seq_parallel or args.no_fsdp or args.cache_seq_shard != "auto"
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                path = cell_path(arch, shape, multi_pod, args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip-cached] {arch} × {shape} "
+                          f"({'2x16x16' if multi_pod else '16x16'})")
+                    continue
+                label = f"{arch} × {shape} ({'2x16x16' if multi_pod else '16x16'})"
+                print(f"[lower] {label} ...", flush=True)
+                try:
+                    defaults = arch_run_defaults(arch)
+                    opts = None
+                    if custom:
+                        kw = dict(defaults["options"])
+                        kw.update(fsdp=not args.no_fsdp,
+                                  seq_parallel=args.seq_parallel,
+                                  cache_seq_shard=args.cache_seq_shard)
+                        opts = ShardingOptions(**kw)
+                    cfg = get_config(arch)
+                    if args.moe_impl and cfg.num_experts:
+                        import dataclasses
+
+                        cfg = dataclasses.replace(cfg, moe_impl=args.moe_impl)
+                    rec = lower_cell(arch, shape, multi_pod=multi_pod,
+                                     options=opts, cfg=cfg)
+                except Exception as exc:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape, "status": "error",
+                           "multi_pod": multi_pod,
+                           "error": f"{type(exc).__name__}: {exc}",
+                           "traceback": traceback.format_exc()}
+                    print(f"[FAIL] {label}: {exc}")
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                if rec["status"] == "ok":
+                    print(f"[ok] {label}: compile={rec['compile_s']}s "
+                          f"hbm/dev={rec['hbm_per_device_gib']:.2f}GiB "
+                          f"coll={rec['collectives']['total_bytes']/2**30:.2f}GiB")
+                    print("  memory_analysis:", rec["memory"])
+                    print("  cost_analysis:", {k: v for k, v in
+                                               rec["cost"].items()
+                                               if "flops" in k or "bytes" in k})
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+
+_DOC = """Performance hillclimb driver (§Perf).
+
+Each ITERATION is (name, hypothesis, mutation of cfg/ShardingOptions/opt);
+the driver re-runs the loop-corrected roofline for the cell under the
+mutation, diffs the three terms against the previous accepted state, and
+appends a structured entry (hypothesis → change → before → after →
+confirmed/refuted) to results/perf/<cell>.json. Greedy: a mutation is kept
+when it improves the dominant term; refuted mutations are recorded and
+reverted.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --cell deepseek-v3-671b:train_4k
+  PYTHONPATH=src python -m repro.launch.perf --list
+"""
+__doc__ = _DOC
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.configs import get_config
+from repro.launch.roofline import analyze_cell
+from repro.launch.dryrun import arch_run_defaults
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.specs import ShardingOptions
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "results", "perf")
+
+
+@dataclasses.dataclass
+class Iteration:
+    name: str
+    hypothesis: str
+    mutate: Callable  # (cfg, options, opt) -> (cfg, options, opt)
+
+
+def _opt(o, **kw):
+    return dataclasses.replace(o, **kw)
+
+
+# ---------------------------------------------------------------------------
+# iteration catalogs per hillclimb cell
+# ---------------------------------------------------------------------------
+ITERATIONS: Dict[Tuple[str, str], List[Iteration]] = {
+    ("deepseek-v3-671b", "train_4k"): [
+        Iteration(
+            "gshard_einsum_dispatch",
+            "PAPER-ERA BASELINE PROBE (expected REGRESSION, kept for the "
+            "record): GShard one-hot einsum dispatch costs O(T·S_g·k·cf) "
+            "dispatch-matmul FLOPs and a (G,S,E,C) combine tensor; vs the "
+            "default shard_map all-to-all engine this should inflate "
+            "compute and memory terms by >2x.",
+            lambda c, o, a: (dataclasses.replace(c, moe_impl="einsum"), o, a)),
+        Iteration(
+            "seq_parallel_residuals",
+            "Activations between layers are replicated over the 16-way "
+            "model axis; the 58 scan-carried residuals (B,S,d) dominate "
+            "live memory and the all-gather at each layer boundary is "
+            "paid anyway by TP. Sharding the seq dim over `model` between "
+            "blocks (sequence parallelism) cuts residual memory ~16x and "
+            "converts duplicate math (norms) into sharded math; collective "
+            "bytes should not grow (AG moves, does not multiply).",
+            lambda c, o, a: (c, _opt(o, seq_parallel=True), a)),
+        Iteration(
+            "remat_dots_policy",
+            "remat='full' recomputes every matmul in the backward pass: "
+            "~4/3 FLOPs multiplier on a compute-heavy MoE. Saving matmul "
+            "outputs (checkpoint_dots) trades HBM for FLOPs; with seq-"
+            "parallel residuals there is memory headroom, so compute term "
+            "should drop ~20% while memory term rises.",
+            lambda c, o, a: (dataclasses.replace(c, remat="dots"), o, a)),
+    ],
+    # most collective-bound cell in the baseline table (22.7s coll vs 11.7s mem)
+    ("rwkv6-7b", "train_4k"): [
+        Iteration(
+            "seq_parallel_residuals",
+            "RWKV time/channel-mix activations (B,S,d) are model-replicated "
+            "between layers; token-shift and WKV operate per-position, so "
+            "sharding S over `model` between blocks divides activation "
+            "collective payloads by 16. Expect the collective term (the "
+            "dominant one) to drop several-fold; WKV itself recomputes "
+            "from a gathered slice.",
+            lambda c, o, a: (c, _opt(o, seq_parallel=True), a)),
+        Iteration(
+            "remat_dots_policy",
+            "full remat re-runs the FLOP-light but traffic-heavy WKV "
+            "chunk scan in bwd, doubling its activation collectives; "
+            "checkpoint_dots saves matmul outputs so bwd re-reads instead "
+            "of re-communicating — collective and compute terms should "
+            "both drop, memory term rises.",
+            lambda c, o, a: (dataclasses.replace(c, remat="dots"), o, a)),
+    ],
+    # worst roofline fraction in the baseline table (0.024)
+    ("granite-moe-3b-a800m", "train_4k"): [
+        Iteration(
+            "gshard_einsum_dispatch",
+            "PAPER-ERA BASELINE PROBE (expected REGRESSION): with E=40 "
+            "small experts the one-hot dispatch tensor (G,S,E,C) and its "
+            "matmuls should inflate compute/memory terms vs the a2a "
+            "default; recorded to quantify the a2a engine's win.",
+            lambda c, o, a: (dataclasses.replace(c, moe_impl="einsum"), o, a)),
+        Iteration(
+            "seq_parallel_residuals",
+            "d_model=1536 activations over 1M tokens dominate memory for "
+            "this small-expert model (params are tiny); sequence-parallel "
+            "residuals divide the dominant memory term ~16x.",
+            lambda c, o, a: (c, _opt(o, seq_parallel=True), a)),
+        Iteration(
+            "remat_dots_policy",
+            "with activations sequence-sharded there is memory headroom; "
+            "checkpoint_dots removes the 4/3 recompute FLOPs and halves "
+            "re-communication in bwd.",
+            lambda c, o, a: (dataclasses.replace(c, remat="dots"), o, a)),
+    ],
+}
+
+
+def run_cell(arch: str, shape: str, only: Optional[str] = None) -> Dict:
+    os.makedirs(PERF_DIR, exist_ok=True)
+    defaults = arch_run_defaults(arch)
+    cfg = get_config(arch)
+    options = ShardingOptions(**defaults["options"])
+    opt = AdamWConfig(**defaults["opt"])
+
+    def measure(tag, c, o, a):
+        rec = analyze_cell(arch, shape, options=o, opt_cfg=a, cfg_override=c,
+                           tag=tag)
+        assert rec["status"] == "ok", rec
+        return rec
+
+    print(f"=== hillclimb {arch} × {shape} ===")
+    t0 = time.time()
+    baseline = measure("baseline", cfg, options, opt)
+    log: List[Dict[str, Any]] = [{"iter": "baseline",
+                                  "terms_s": baseline["terms_s"],
+                                  "dominant": baseline["dominant"],
+                                  "roofline_fraction":
+                                      baseline["roofline_fraction"]}]
+    print(f"baseline: {baseline['terms_s']} dominant={baseline['dominant']}")
+
+    cur = (cfg, options, opt)
+    cur_rec = baseline
+    for it in ITERATIONS.get((arch, shape), []):
+        if only and only != it.name:
+            continue
+        c2, o2, a2 = it.mutate(*cur)
+        rec = measure(it.name, c2, o2, a2)
+        before, after = cur_rec["terms_s"], rec["terms_s"]
+        dom = cur_rec["dominant"]
+        improved = after[dom] < before[dom] * 0.999 and \
+            max(after.values()) <= max(before.values()) * 1.05
+        verdict = "confirmed" if improved else "refuted"
+        entry = {
+            "iter": it.name, "hypothesis": it.hypothesis,
+            "before_s": before, "after_s": after,
+            "dominant_before": dom, "dominant_after": rec["dominant"],
+            "roofline_fraction": rec["roofline_fraction"],
+            "verdict": verdict, "kept": improved,
+        }
+        log.append(entry)
+        print(f"[{verdict.upper():9s}] {it.name}: "
+              f"{dom} {before[dom]*1e3:.2f}ms → {after[dom]*1e3:.2f}ms; "
+              f"step bound {max(before.values())*1e3:.2f} → "
+              f"{max(after.values())*1e3:.2f}ms")
+        if improved:
+            cur = (c2, o2, a2)
+            cur_rec = rec
+
+    out = {
+        "arch": arch, "shape": shape,
+        "baseline": baseline["terms_s"],
+        "final": cur_rec["terms_s"],
+        "baseline_fraction": baseline["roofline_fraction"],
+        "final_fraction": cur_rec["roofline_fraction"],
+        "wall_s": time.time() - t0,
+        "log": log,
+    }
+    with open(os.path.join(PERF_DIR, f"{arch}__{shape}.json"), "w") as fh:
+        json.dump(out, fh, indent=1)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", action="append", default=[])
+    ap.add_argument("--iter", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for (a, s), its in ITERATIONS.items():
+            print(f"{a}:{s}")
+            for it in its:
+                print(f"  - {it.name}")
+        return 0
+    cells = [tuple(c.split(":")) for c in args.cell] or list(ITERATIONS)
+    for arch, shape in cells:
+        out = run_cell(arch, shape, only=args.iter)
+        print(f"=> {arch}×{shape}: roofline fraction "
+              f"{out['baseline_fraction']:.3f} → {out['final_fraction']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

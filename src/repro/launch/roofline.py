@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+
+_DOC = """Roofline analysis with LOOP-CORRECTED HLO costs.
+
+XLA's cost_analysis counts a while-loop (lax.scan) body ONCE regardless of
+trip count, so full-depth compiles under-report FLOPs / bytes / collective
+traffic for scanned layer stacks. Correction: probe the model at small
+depths where segments are UNROLLED (run_stack unrolls ≤4 repeats), fit the
+exact linear model
+
+    cost(R_1..R_k) = base + Σ_j slope_j · R_j       (R_j = segment repeats)
+
+from k+1 probe compiles (all-ones, then 2 for each segment in turn), and
+evaluate at the true depths. All numbers come from real compiled HLO of the
+real sharded program — no hand modeling; the analytic 6·N·D is reported
+alongside as the "useful FLOPs" numerator.
+
+Terms (TPU v5e, per chip):
+    compute_s   = HLO_FLOPs / 197e12
+    memory_s    = HLO_bytes_accessed / 819e9
+    collective_s = collective_bytes / 50e9      (single-link conservative)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --all
+  PYTHONPATH=src python -m repro.launch.roofline --arch yi-6b --shape train_4k
+"""
+__doc__ = _DOC
+
+import argparse
+import dataclasses
+import json
+import sys
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs import SHAPES, cell_applicability, get_config, list_archs
+from repro.launch.dryrun import (RESULTS_DIR, arch_run_defaults, lower_cell,
+                                 model_flops)
+from repro.launch.mesh import HW
+from repro.models.transformer import derive_segments, layer_pattern
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.specs import ShardingOptions
+
+ROOFLINE_DIR = os.path.join(os.path.dirname(RESULTS_DIR), "roofline")
+
+
+# --------------------------------------------------------------------------
+# probe-config construction
+# --------------------------------------------------------------------------
+
+def probe_cfg(cfg, seg_repeats: List[int], enc_layers: Optional[int] = None):
+    """Rebuild cfg with each segment's repeats overridden (pattern-level)."""
+    segments = derive_segments(layer_pattern(cfg))
+    assert len(seg_repeats) == len(segments)
+    pattern: List[str] = []
+    for (unit, _), r in zip(segments, seg_repeats):
+        pattern.extend(list(unit) * r)
+    kw: Dict[str, Any] = dict(block_pattern=tuple(pattern),
+                              num_layers=len(pattern))
+    if cfg.first_k_dense:
+        kw["first_k_dense"] = sum(1 for k in pattern if k == "dense")
+    if cfg.is_encdec and enc_layers is not None:
+        kw["encoder_layers"] = enc_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def true_repeats(cfg) -> Tuple[List[int], int]:
+    segments = derive_segments(layer_pattern(cfg))
+    return [r for _, r in segments], cfg.encoder_layers
+
+
+# --------------------------------------------------------------------------
+# cost extraction
+# --------------------------------------------------------------------------
+
+def extract_costs(rec: Dict[str, Any]) -> Dict[str, float]:
+    cost = rec.get("cost", {})
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(rec["collectives"]["total_bytes"]),
+        **{f"coll_{k}": float(v) for k, v in
+           rec["collectives"]["bytes_per_kind"].items()},
+    }
+
+
+def fit_linear(samples: List[Tuple[List[int], Dict[str, float]]],
+               targets: List[int]) -> Dict[str, float]:
+    """samples: [(repeat-vector, costs)]; first sample must be all-ones and
+    sample j+1 must differ only in segment j (=2)."""
+    ones_costs = samples[0][1]
+    k = len(samples) - 1
+    keys = set()
+    for _, c in samples:
+        keys.update(c)
+    out: Dict[str, float] = {}
+    for key in keys:
+        c0 = ones_costs.get(key, 0.0)
+        slopes = [samples[j + 1][1].get(key, 0.0) - c0 for j in range(k)]
+        base = c0 - sum(slopes)
+        total = base + sum(s * t for s, t in zip(slopes, targets))
+        # tiny cells can fit negative slopes (XLA optimizes the 2-deep probe
+        # differently than the 1-deep one); clamp to the measured floor —
+        # the fit is only meaningful when cost actually scales with depth.
+        out[key] = max(total, c0, 0.0)
+        out[f"{key}__slope"] = sum(slopes)
+        out[f"{key}__base"] = base
+    return out
+
+
+# --------------------------------------------------------------------------
+# the analysis
+# --------------------------------------------------------------------------
+
+def analyze_cell(arch: str, shape_name: str,
+                 options: Optional[ShardingOptions] = None,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 cfg_override=None,
+                 tag: str = "") -> Dict[str, Any]:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    runnable, why = cell_applicability(cfg, shape)
+    if not runnable:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    defaults = arch_run_defaults(arch)
+    if options is None:
+        options = ShardingOptions(**defaults["options"])
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig(**defaults["opt"])
+
+    repeats, enc_layers = true_repeats(cfg)
+    k = len(repeats)
+    probes: List[Tuple[List[int], Optional[int]]] = [([1] * k, 1 if enc_layers else None)]
+    for j in range(k):
+        vec = [1] * k
+        vec[j] = 2
+        probes.append((vec, 1 if enc_layers else None))
+    if enc_layers:
+        probes.append(([1] * k, 2))  # encoder slope
+
+    samples = []
+    for vec, enc in probes:
+        pcfg = probe_cfg(cfg, vec, enc)
+        rec = lower_cell(arch, shape_name, multi_pod=False, options=options,
+                         opt_cfg=opt_cfg, cfg=pcfg)
+        if rec["status"] != "ok":
+            return {"arch": arch, "shape": shape_name, "status": "error",
+                    "error": f"probe {vec} failed: {rec.get('error')}"}
+        key = vec + ([enc] if enc_layers else [])
+        samples.append((key, extract_costs(rec)))
+
+    targets = repeats + ([enc_layers] if enc_layers else [])
+    fitted = fit_linear(samples, targets)
+
+    n_dev = 256  # single-pod roofline
+    flops = fitted["flops"]              # per-device, loop-corrected
+    byts = fitted["bytes"]
+    coll = fitted["coll"]
+    compute_s = flops / HW.PEAK_FLOPS_BF16
+    memory_s = byts / HW.HBM_BW
+    collective_s = coll / HW.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_per_dev = mf / n_dev
+    useful_ratio = mf_per_dev / max(flops, 1.0)
+    step_s = max(terms.values())          # no-overlap bound
+    roofline_frac = (mf_per_dev / HW.PEAK_FLOPS_BF16) / max(step_s, 1e-12)
+
+    advice = {
+        "compute_s": "reduce non-useful FLOPs (remat policy, dispatch "
+                     "overhead, fused kernels) or spread over more chips",
+        "memory_s": "cut activation traffic: fused kernels (flash/wkv), "
+                    "bf16 intermediates, chunked CE, better layouts",
+        "collective_s": "reshard: bigger per-collective payloads, overlap "
+                        "with compute, reduce-scatter instead of all-reduce, "
+                        "fewer boundary reshards",
+    }[dominant]
+
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok", "tag": tag,
+        "mesh": "16x16", "devices": n_dev,
+        "options": {"fsdp": options.fsdp, "seq_parallel": options.seq_parallel,
+                    "cache_seq_shard": options.cache_seq_shard,
+                    "expert_parallel": options.expert_parallel},
+        "loop_corrected": {
+            "hlo_flops_per_dev": flops,
+            "hlo_bytes_per_dev": byts,
+            "collective_bytes_per_dev": coll,
+            "per_kind": {kk[5:]: vv for kk, vv in fitted.items()
+                         if kk.startswith("coll_") and "__" not in kk},
+        },
+        "terms_s": terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": roofline_frac,
+        "advice": advice,
+        "probe_count": len(probes),
+    }
+    return rec
+
+
+def cell_out_path(arch: str, shape: str, tag: str = "") -> str:
+    os.makedirs(ROOFLINE_DIR, exist_ok=True)
+    sfx = f".{tag}" if tag else ""
+    return os.path.join(ROOFLINE_DIR, f"{arch}__{shape}{sfx}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells: List[Tuple[str, str]]
+    if args.all:
+        archs = [a for a in list_archs() if a != "serpytor-demo-100m"]
+        cells = [(a, s) for a in archs for s in SHAPES]
+    else:
+        cells = [(args.arch, s) for s in ([args.shape] if args.shape
+                                          else list(SHAPES))]
+
+    failures = 0
+    for arch, shape in cells:
+        path = cell_out_path(arch, shape, args.tag)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip-cached] {arch} × {shape}")
+            continue
+        print(f"[roofline] {arch} × {shape} ...", flush=True)
+        try:
+            rec = analyze_cell(arch, shape, tag=args.tag)
+        except Exception as exc:
+            failures += 1
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(exc).__name__}: {exc}",
+                   "traceback": traceback.format_exc()}
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        if rec["status"] == "ok":
+            t = rec["terms_s"]
+            print(f"  compute={t['compute_s']*1e3:.2f}ms "
+                  f"memory={t['memory_s']*1e3:.2f}ms "
+                  f"collective={t['collective_s']*1e3:.2f}ms "
+                  f"dominant={rec['dominant']} "
+                  f"roofline_frac={rec['roofline_fraction']:.3f}")
+        elif rec["status"] == "skipped":
+            print(f"  skipped: {rec['reason'][:70]}")
+        else:
+            print(f"  ERROR: {rec['error'][:160]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""Model substrate: every assigned architecture on one composable stack."""
+from .model import Model, build, count_params_analytic, param_count_from_tree
+
+__all__ = ["Model", "build", "count_params_analytic", "param_count_from_tree"]

@@ -1,0 +1,152 @@
+"""RWKV6 "Finch" blocks: data-dependent token-shift + WKV6 + channel mix.
+
+Attention-free: per-layer state = (wkv state (B,H,K,V), time-mix shift x_prev
+(B,d), channel-mix shift x_prev (B,d)) — O(1) in sequence length, which is
+what makes the long_500k decode shape runnable for this family.
+
+Decay contract: per-step log decay is clamped to [-4, -1e-4] before the WKV
+op (see kernels/ref.wkv6_chunked_ref range analysis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import ParamStore, dense, norm_param, apply_norm, shard_activation
+
+__all__ = ["init_rwkv_layer", "rwkv_time_mix", "rwkv_channel_mix",
+           "init_rwkv_state"]
+
+_LOGW_MIN, _LOGW_MAX = -4.0, -1e-4
+
+
+def init_rwkv_layer(store: ParamStore, name: str, cfg) -> None:
+    sub = store.sub(name)
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    dl, ml = cfg.rwkv_decay_lora, cfg.rwkv_mix_lora
+
+    tm = sub.sub("time_mix")
+    # static token-shift mixing coefficients (one per stream r,k,v,w,g)
+    for s in ("r", "k", "v", "w", "g"):
+        tm.param(f"mu_{s}", (d,), ("embed",), init="zeros")
+    tm.param("mu_x", (d,), ("embed",), init="zeros")
+    # data-dependent mixing LoRA (maps shifted x → per-stream corrections)
+    tm.param("mix_a", (d, ml * 5), ("embed", None), scale=0.02)
+    tm.param("mix_b", (ml * 5, d * 5), (None, "embed"), scale=0.02)
+    # projections
+    tm.param("wr", (d, d), ("embed", "heads"))
+    tm.param("wk", (d, d), ("embed", "heads"))
+    tm.param("wv", (d, d), ("embed", "heads"))
+    tm.param("wg", (d, d), ("embed", "heads"))
+    tm.param("wo", (d, d), ("heads", "embed"))
+    # data-dependent decay LoRA + static decay + bonus
+    tm.param("w0", (d,), ("embed",), init="zeros")
+    tm.param("decay_a", (d, dl), ("embed", None), scale=0.02)
+    tm.param("decay_b", (dl, d), (None, "embed"), scale=0.02)
+    tm.param("u", (H, hs), ("heads", None), init="normal", scale=0.5)
+    tm.sub("ln_x").param("scale", (d,), ("embed",), init="ones")  # per-head GN≈LN
+
+    cm = sub.sub("channel_mix")
+    cm.param("mu_r", (d,), ("embed",), init="zeros")
+    cm.param("mu_k", (d,), ("embed",), init="zeros")
+    cm.param("wk", (d, cfg.d_ff), ("embed", "mlp"))
+    cm.param("wv", (cfg.d_ff, d), ("mlp", "embed"))
+    cm.param("wr", (d, d), ("embed", "heads"))
+
+
+def init_rwkv_state(cfg, batch: int, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    return {"wkv": jnp.zeros((batch, H, hs, hs), jnp.float32),
+            "tm_prev": jnp.zeros((batch, d), dtype),
+            "cm_prev": jnp.zeros((batch, d), dtype)}
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream: zeros (or carried state) at t=0."""
+    B, T, d = x.shape
+    first = jnp.zeros((B, 1, d), x.dtype) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_mix(x: jax.Array, p: Dict[str, Any], cfg, *,
+                  state: Optional[Dict[str, Any]] = None
+                  ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    B, T, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    tm = p["time_mix"]
+    prev = state["tm_prev"] if state is not None else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+
+    # data-dependent mixing (DDLerp of Finch)
+    base = x + dx * tm["mu_x"]
+    lora = jnp.tanh(dense(base, tm["mix_a"]))                    # (B,T,5*ml)
+    corr = dense(lora, tm["mix_b"]).reshape(B, T, 5, d)          # (B,T,5,d)
+    streams = {}
+    for i, s in enumerate(("r", "k", "v", "w", "g")):
+        mix = tm[f"mu_{s}"] + corr[:, :, i, :]
+        streams[s] = x + dx * mix
+
+    r = dense(streams["r"], tm["wr"]).reshape(B, T, H, hs)
+    k = dense(streams["k"], tm["wk"]).reshape(B, T, H, hs)
+    v = dense(streams["v"], tm["wv"]).reshape(B, T, H, hs)
+    g = dense(streams["g"], tm["wg"])
+    logw = tm["w0"] + dense(jnp.tanh(dense(streams["w"], tm["decay_a"])),
+                            tm["decay_b"])
+    logw = -jnp.exp(jnp.clip(logw.astype(jnp.float32), -20.0, 1.3863))  # ≤ e^1.386=4
+    logw = jnp.clip(logw, _LOGW_MIN, _LOGW_MAX)
+    w = jnp.exp(logw).reshape(B, T, H, hs)
+
+    # (B,H,T,·) for the kernel
+    rk = jnp.moveaxis(r, 2, 1)
+    kk = jnp.moveaxis(k, 2, 1)
+    vk = jnp.moveaxis(v, 2, 1)
+    wk_ = jnp.moveaxis(w, 2, 1).astype(jnp.float32)
+    rk = shard_activation(rk, "heads_bhsd")
+    s0 = state["wkv"] if state is not None else None
+    out, s_new = ops.wkv6(rk, kk, vk, wk_, p["time_mix"]["u"], initial_state=s0,
+                          impl=cfg.attn_impl)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, T, d)
+
+    # per-head group norm (ln_x) then gate
+    outf = out.astype(jnp.float32).reshape(B, T, H, hs)
+    mu = outf.mean(-1, keepdims=True)
+    var = outf.var(-1, keepdims=True)
+    outf = (outf - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = (outf.reshape(B, T, d) * tm["ln_x"]["scale"].astype(jnp.float32)
+           ).astype(x.dtype)
+    out = out * jax.nn.silu(g)
+    out = dense(out, tm["wo"])
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["wkv"] = s_new
+        new_state["tm_prev"] = x[:, -1, :]
+    return out, new_state
+
+
+def rwkv_channel_mix(x: jax.Array, p: Dict[str, Any], cfg, *,
+                     state: Optional[Dict[str, Any]] = None
+                     ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    cm = p["channel_mix"]
+    prev = state["cm_prev"] if state is not None else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    xk = x + dx * cm["mu_k"]
+    xr = x + dx * cm["mu_r"]
+    hidden = jnp.square(jax.nn.relu(dense(xk, cm["wk"])))
+    hidden = shard_activation(hidden, "mlp_bsf")
+    out = jax.nn.sigmoid(dense(xr, cm["wr"])) * dense(hidden, cm["wv"])
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["cm_prev"] = x[:, -1, :]
+    return out, new_state

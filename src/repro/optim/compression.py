@@ -1,0 +1,93 @@
+"""Gradient compression for cross-pod reduction: low-precision + error feedback.
+
+At multi-pod scale the gradient reduce-scatter over DCI/ICI is a dominant
+collective. Compressing gradients to bf16 (or int8 with per-block scales)
+before the reduction halves (quarters) those bytes; ERROR FEEDBACK carries
+the quantization residual into the next step so the compression bias does
+not accumulate (Seide et al. / 1-bit Adam lineage — convergence-neutral in
+expectation for smooth losses).
+
+Usage (wired as an optional stage in the trainer):
+    comp = GradCompressor(kind="bf16")      # or "int8"
+    cgrads, state = comp.compress(grads, state)   # before psum/reduce
+    grads = comp.decompress(cgrads)               # after reduction
+
+The compressed representation is itself a pytree of jax arrays, so it works
+under jit/pjit and GSPMD reduces the compressed leaves directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GradCompressor"]
+
+_BLOCK = 256  # int8 scale granularity (per trailing block)
+
+
+@dataclass(frozen=True)
+class GradCompressor:
+    kind: str = "bf16"   # bf16 | int8 | none
+
+    # -- error-feedback state ------------------------------------------------
+    def init_state(self, grads) -> Any:
+        if self.kind == "none":
+            return None
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    # -- compress -------------------------------------------------------------
+    def compress(self, grads, err_state) -> Tuple[Any, Any]:
+        """(compressed, new_err_state). Residual = (g+e) - Q(g+e)."""
+        if self.kind == "none":
+            return grads, err_state
+
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q = self._quantize(corrected)
+            deq = self._dequantize(q)
+            return q, corrected - deq
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(err_state)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    def decompress(self, compressed) -> Any:
+        if self.kind == "none":
+            return compressed
+        return jax.tree.map(self._dequantize, compressed,
+                            is_leaf=self._is_q)
+
+    # -- codecs ----------------------------------------------------------------
+    def _quantize(self, x: jax.Array):
+        if self.kind == "bf16":
+            return x.astype(jnp.bfloat16)
+        # int8 with per-block absmax scales
+        flat = x.reshape(-1)
+        pad = (-flat.size) % _BLOCK
+        flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, _BLOCK)
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32),
+                "shape": x.shape, "n": x.size}
+
+    def _dequantize(self, q):
+        if self.kind == "bf16" or not self._is_q(q):
+            return q.astype(jnp.float32) if hasattr(q, "astype") else q
+        flat = (q["q"].astype(jnp.float32) * q["scale"]).reshape(-1)[: q["n"]]
+        return flat.reshape(q["shape"])
+
+    @staticmethod
+    def _is_q(x) -> bool:
+        return isinstance(x, dict) and set(x) == {"q", "scale", "shape", "n"}
+
+    # -- accounting --------------------------------------------------------------
+    def bytes_ratio(self) -> float:
+        return {"none": 1.0, "bf16": 0.5,
+                "int8": 0.25 + 4.0 / _BLOCK}[self.kind]

@@ -1,0 +1,3 @@
+"""Serving engine: continuous batching over model replicas."""
+from .batcher import ContinuousBatcher, Generation, Request
+__all__ = ["ContinuousBatcher", "Generation", "Request"]

@@ -1,0 +1,209 @@
+"""Continuous-batching serving engine (vLLM-style, TPU-shaped).
+
+The unit of compute is a fixed-shape decode step over a slot matrix:
+``B_slots`` sequences decode one token per step; finished slots are refilled
+from the admission queue by PREFILLING into the slot's cache region. Fixed
+shapes mean the jitted decode step never recompiles — the TPU requirement —
+and slot refill is where the Gateway/context-affinity semantics plug in.
+
+Components:
+  - ``Request``: prompt + max_new_tokens (+ deterministic request digest —
+    the durable-execution identity used for replay-safe resubmission);
+  - ``SlotState``: per-slot request bookkeeping;
+  - ``ContinuousBatcher``: admission queue → slot assignment → step loop.
+
+The batcher is model-agnostic: it takes (prefill_fn, decode_fn, init_cache)
+from models.build(), so every assigned decoder arch can serve through it.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.durable import payload_digest
+
+__all__ = ["Request", "Generation", "ContinuousBatcher"]
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int
+    submitted_at: float = field(default_factory=time.time)
+
+    def digest(self) -> str:
+        return payload_digest({"p": self.prompt,
+                               "n": self.max_new_tokens})
+
+
+@dataclass
+class Generation:
+    rid: str
+    tokens: List[int]
+    prompt_len: int
+    queued_s: float
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.queued_s + self.prefill_s + self.decode_s
+
+
+@dataclass
+class _Slot:
+    active: bool = False
+    rid: str = ""
+    produced: int = 0
+    budget: int = 0
+    tokens: List[int] = field(default_factory=list)
+    prompt_len: int = 0
+    t_admit: float = 0.0
+    t_prefill_done: float = 0.0
+    queued_s: float = 0.0
+
+
+class ContinuousBatcher:
+    """Slot-matrix continuous batching over a single model replica.
+
+    ``max_len`` bounds prompt+generation; each slot owns a cache of
+    ``max_len``. Prefill writes a fresh per-request cache and SPLICES it
+    into the slot's region of the batched cache (dynamic_update along the
+    batch axis) — decode then advances all active slots in lockstep with
+    one fixed-shape jitted step.
+    """
+
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 128,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.n_slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model.init_cache(slots, max_len)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._slots = [_Slot() for _ in range(slots)]
+        self._next_token = np.zeros((slots,), np.int32)
+        self._done: Dict[str, Generation] = {}
+        self._lock = threading.Lock()
+        self.steps = 0
+        self.slot_steps_busy = 0
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.put(req)
+
+    def run_until_drained(self, max_steps: int = 100_000) -> Dict[str, Generation]:
+        """Drive the loop until queue + slots are empty (batch-mode serving)."""
+        while (not self._queue.empty() or self._any_active()) \
+                and self.steps < max_steps:
+            self.step()
+        return dict(self._done)
+
+    def results(self) -> Dict[str, Generation]:
+        return dict(self._done)
+
+    # -- internals ------------------------------------------------------------
+    def _any_active(self) -> bool:
+        return any(s.active for s in self._slots)
+
+    def _admit(self) -> None:
+        """Fill free slots: prefill the request and splice its cache in."""
+        for i, slot in enumerate(self._slots):
+            if slot.active:
+                continue
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            t0 = time.time()
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, fresh = self.model.prefill(self.params, {"tokens": toks},
+                                               pad_to=self.max_len)
+            self.cache = _splice_cache(self.cache, fresh, i)
+            first = int(jnp.argmax(logits, axis=-1)[0])
+            self._next_token[i] = first
+            slot.active = True
+            slot.rid = req.rid
+            slot.produced = 1
+            slot.budget = req.max_new_tokens
+            slot.tokens = [first]
+            slot.prompt_len = len(req.prompt)
+            slot.queued_s = t0 - req.submitted_at
+            slot.t_admit = t0
+            slot.t_prefill_done = time.time()
+
+    def step(self) -> None:
+        """One engine iteration: admit, decode one token for active slots."""
+        self._admit()
+        if not self._any_active():
+            return
+        tok = jnp.asarray(self._next_token)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"token": tok})
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            self.slot_steps_busy += 1
+            t = int(nxt[i])
+            done = slot.produced >= slot.budget or \
+                (self.eos_id is not None and t == self.eos_id) or \
+                slot.prompt_len + slot.produced + 1 >= self.max_len
+            if done:
+                now = time.time()
+                self._done[slot.rid] = Generation(
+                    rid=slot.rid, tokens=list(slot.tokens),
+                    prompt_len=slot.prompt_len, queued_s=slot.queued_s,
+                    prefill_s=slot.t_prefill_done - slot.t_admit,
+                    decode_s=now - slot.t_prefill_done)
+                self._slots[i] = _Slot()
+                self._next_token[i] = 0
+            else:
+                slot.tokens.append(t)
+                slot.produced += 1
+                self._next_token[i] = t
+
+    def utilization(self) -> float:
+        """Mean fraction of slots busy per decode step."""
+        if self.steps == 0:
+            return 0.0
+        return self.slot_steps_busy / (self.steps * self.n_slots)
+
+
+def _splice_cache(batched, fresh, slot: int):
+    """Write the (batch=1) fresh cache into row ``slot`` of the batched one.
+
+    'pos' scalars are shared across slots: decode masks per-slot validity by
+    position, and all slots share the engine step clock; we keep the max.
+    """
+
+    def walk(b, f):
+        if isinstance(b, dict):
+            return {k: walk(b[k], f[k]) for k in b}
+        if b.ndim == 0 or b.shape == f.shape:  # pos scalars & stacked pos
+            return jnp.maximum(b, f)
+        # leaves: (..., B_slots, ...) vs (..., 1, ...): find the batch axis
+        ax = _batch_axis(b.shape, f.shape)
+        idx = [0] * b.ndim
+        idx[ax] = slot
+        return jax.lax.dynamic_update_slice(b, f.astype(b.dtype), tuple(idx))
+
+    return walk(batched, fresh)
+
+
+def _batch_axis(bs: Tuple[int, ...], fs: Tuple[int, ...]) -> int:
+    for i, (a, b) in enumerate(zip(bs, fs)):
+        if a != b and b == 1:
+            return i
+    raise ValueError(f"no batch axis between {bs} and {fs}")

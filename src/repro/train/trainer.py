@@ -1,0 +1,244 @@
+"""Trainer: the training loop AS a SerPyTor durable context-graph.
+
+Every training round (K steps + checkpoint) is a ContextGraph of atomic
+tasks — data_fetch → train_step → metrics, with a checkpoint node closing
+the round. The run context ξ carries (run_id, config digest, mesh digest,
+data-shard cursor, RNG lineage); every node commit lands in the journal.
+
+Durability semantics (event sourcing + snapshots, §4.2):
+  - the journal is the event history; the CheckpointStore holds snapshots,
+    referenced from CKPT records (never tensors in the journal);
+  - recovery = restore latest snapshot, then REPLAY the steps after it:
+    deterministic data (batch = f(seed, step)) + explicit RNG lineage make
+    re-execution bit-identical, and committed step records let the trainer
+    VERIFY determinism (digest equality) while replaying;
+  - a replayed step whose digest disagrees with the journal is surfaced as
+    a hard error — silent divergence is the failure mode durable execution
+    exists to kill.
+
+Fault tolerance beyond restart: heartbeat server (system/application error
+split for external monitors), straggler watch on host-side tasks, elastic
+re-mesh on device-count change at recovery time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.base import ModelConfig
+from repro.core import (Context, ContextGraph, HeartbeatServer, Journal,
+                        JournalRecord, LocalExecutor, StragglerWatch,
+                        WithContext, canonical_digest, payload_digest)
+from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource
+from repro.models import build
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.specs import ShardingOptions, ShardingRules
+from .steps import make_train_step
+
+__all__ = ["TrainConfig", "Trainer"]
+
+
+@dataclass
+class TrainConfig:
+    run_dir: str
+    num_steps: int = 100
+    checkpoint_every: int = 25
+    log_every: int = 10
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 256
+    journal_sync: str = "batch"         # always (paper-strict) | batch | never
+    async_checkpoint: bool = True
+    heartbeat: bool = True
+    mesh_model_axis: int = 1
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig):
+        self.cfg = cfg
+        self.tc = tc
+        os.makedirs(tc.run_dir, exist_ok=True)
+        self.model = build(cfg)
+        self.store = CheckpointStore(os.path.join(tc.run_dir, "ckpt"))
+        self.journal = Journal(os.path.join(tc.run_dir, "journal.wal"),
+                               sync=tc.journal_sync)
+        self.heartbeat = HeartbeatServer(extra={"worker": "trainer"}) \
+            if tc.heartbeat else None
+        self.stragglers = StragglerWatch()
+        self.data_cfg = DataConfig(vocab_size=cfg.vocab_size,
+                                   seq_len=tc.seq_len,
+                                   global_batch=tc.global_batch, seed=tc.seed)
+        self.source = TokenSource(self.data_cfg)
+        # elastic mesh: data axis = current device count / model axis
+        n = len(jax.devices())
+        model_ax = min(tc.mesh_model_axis, n)
+        self.mesh = jax.make_mesh((max(1, n // model_ax), model_ax),
+                                  ("data", "model"))
+        self.rules = ShardingRules(cfg, self.mesh, ShardingOptions())
+        self._train_step = jax.jit(make_train_step(self.model, tc.opt),
+                                   donate_argnums=(0, 1))
+        self.metrics_log: list = []
+
+    # -- run identity --------------------------------------------------------
+    def run_context(self) -> Context:
+        mesh_desc = {a: int(s) for a, s in zip(self.mesh.axis_names,
+                                               self.mesh.devices.shape)}
+        return Context.origin({
+            "run_id": canonical_digest({"cfg": self.cfg.name,
+                                        "seed": self.tc.seed}),
+            "config_digest": canonical_digest(repr(self.cfg)),
+            "mesh": mesh_desc,
+            "data_seed": self.tc.seed,
+        }, origin="trainer")
+
+    # -- recovery ------------------------------------------------------------
+    def recover(self) -> Tuple[int, Any, Any]:
+        """(start_step, params, opt_state) — from snapshot or fresh init."""
+        tag = self.store.latest()
+        params, axes = None, None
+        if tag is not None:
+            man = self.store.manifest(tag)
+            start = int(man["meta"]["next_step"])
+            like_p = jax.eval_shape(lambda r: self.model.init(r)[0],
+                                    jax.random.key(self.tc.seed))
+            like_p = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), like_p)
+            params = self.store.restore(tag, like_p)
+            params = jax.tree.map(jnp.asarray, params)
+            from repro.optim.adamw import adamw_init
+
+            like_o = adamw_init(params, self.tc.opt)
+            opt_state = self.store.restore(tag + "-opt", like_o)
+            opt_state = jax.tree.map(jnp.asarray, opt_state)
+            return start, params, opt_state
+        params, _ = self.model.init(jax.random.key(self.tc.seed))
+        from repro.optim.adamw import adamw_init
+
+        opt_state = adamw_init(params, self.tc.opt)
+        return 0, params, opt_state
+
+    # -- one durable round (K steps + checkpoint) ------------------------------
+    def _round_graph(self, start: int, end: int, state: Dict[str, Any],
+                     replay_digests: Dict[int, str],
+                     incarnation: int = 0) -> ContextGraph:
+        """Step nodes are STATEFUL (they advance params held by reference),
+        so they must never be replay-SKIPPED across process incarnations —
+        the state side effect would be lost. Their Ψ therefore carries the
+        incarnation nonce: recovery re-executes them from the restored
+        snapshot and VERIFIES the journal digests instead (event sourcing
+        with snapshots). Pure nodes (data fetch) replay normally."""
+        g = ContextGraph(origin=self.run_context(), name=f"round{start}")
+        prev = None
+        for s in range(start, end):
+            fetch_id, step_id = f"data@{s}", f"step@{s}"
+
+            def fetch(ctx, _s=s):
+                self.stragglers.started("data_fetch", _s)
+                batch = self.source.batch_at(_s)
+                self.stragglers.finished("data_fetch", _s)
+                return {"step": _s, "digest": payload_digest(batch)}
+
+            g.add(fetch_id, fetch, data={"step": s})
+
+            def run_step(ctx, _s=s, _fid=fetch_id, **deps):
+                meta = deps[_fid]
+                batch = self.source.batch_at(_s)  # DI: regenerate (pure fn)
+                jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+                state["params"], state["opt"], metrics = self._train_step(
+                    state["params"], state["opt"], jbatch)
+                out = {k: float(v) for k, v in metrics.items()}
+                out["step"] = _s
+                out["data_digest"] = meta["digest"]
+                want = replay_digests.get(_s)
+                got = payload_digest(out)
+                if want is not None and want != got:
+                    raise RuntimeError(
+                        f"non-deterministic replay at step {_s}: "
+                        f"journal={want} recomputed={got}")
+                return out
+
+            deps = [fetch_id] + ([prev] if prev else [])
+            g.add(step_id, run_step, deps=deps,
+                  data={"incarnation": incarnation})
+            prev = step_id
+
+        def checkpoint(ctx, **deps):
+            last = deps[prev]
+            next_step = last["step"] + 1
+            tag = f"step{next_step:08d}"
+            ref_p = self.store.save(tag, jax.device_get(state["params"]),
+                                    {"next_step": next_step},
+                                    async_=False)
+            ref_o = self.store.save(tag + "-opt", jax.device_get(state["opt"]),
+                                    {"next_step": next_step},
+                                    async_=self.tc.async_checkpoint)
+            self.journal.append(JournalRecord(
+                kind="CKPT", node_id=tag, ref=f"{ref_p};{ref_o}",
+                meta={"next_step": next_step}))
+            return WithContext({"ref": ref_p, "next_step": next_step},
+                               {"last_ckpt": ref_p})
+
+        g.add(f"ckpt@{end}", checkpoint, deps=[prev])
+        return g
+
+    # -- main loop ----------------------------------------------------------------
+    def train(self) -> Dict[str, Any]:
+        if self.heartbeat:
+            self.heartbeat.start()
+        t0 = time.time()
+        # replay digests from previous incarnations (determinism check) +
+        # incarnation nonce (see _round_graph docstring)
+        replay_digests: Dict[int, str] = {}
+        incarnation = 0
+        if os.path.exists(self.journal.path):
+            for rec in self.journal.records():
+                if rec.kind == "RUN_START":
+                    incarnation += 1
+                if rec.kind == "NODE_COMMIT" and rec.node_id.startswith("step@"):
+                    if isinstance(rec.payload, dict) and "step" in rec.payload:
+                        replay_digests[int(rec.payload["step"])] = \
+                            rec.output_digest
+
+        start, params, opt_state = self.recover()
+        state = {"params": params, "opt": opt_state}
+        executor = LocalExecutor(max_workers=4, journal=self.journal)
+        self.rules.install()
+        try:
+            with self.mesh:
+                s = start
+                while s < self.tc.num_steps:
+                    e = min(s + self.tc.checkpoint_every, self.tc.num_steps)
+                    graph = self._round_graph(s, e, state, replay_digests,
+                                              incarnation=incarnation)
+                    report = executor.run(graph)
+                    for nid in sorted(n for n in report.outputs
+                                      if n.startswith("step@")):
+                        m = report.outputs[nid]
+                        self.metrics_log.append(m)
+                        if m["step"] % self.tc.log_every == 0:
+                            print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+                                  f"gnorm {m['grad_norm']:.3f} "
+                                  f"lr {m['lr']:.2e}", flush=True)
+                    s = e
+        finally:
+            self.rules.uninstall()
+            self.store.wait()
+            self.journal.flush()
+            if self.heartbeat:
+                self.heartbeat.stop()
+        wall = time.time() - t0
+        out = {"steps": self.tc.num_steps - start, "wall_s": wall,
+               "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log
+               else None,
+               "steps_per_s": (self.tc.num_steps - start) / max(wall, 1e-9)}
+        with open(os.path.join(self.tc.run_dir, "summary.json"), "w") as fh:
+            json.dump({**out, "log": self.metrics_log}, fh, indent=1)
+        return out

@@ -1,0 +1,101 @@
+"""Context ξ-union semantics (§4.1) — unit + hypothesis property tests."""
+import string
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Context, ContextEntry, EMPTY_CONTEXT
+
+
+def test_origin_context_and_data_fold():
+    root = Context.origin({"env": "prod", "seed": 42})
+    assert root.get("env") == "prod"
+    c = root.with_data({"step": 1}, origin="R")
+    # ξ(R) = ξ(∅) ∪ Ψ(R)
+    assert c.get("seed") == 42 and c.get("step") == 1
+    assert "∅" in c.origins() and "R" in c.origins()
+
+
+def test_union_preserves_all_facts():
+    root = Context.origin({"x": 0})
+    a = root.with_data({"shard": 0}, origin="A")
+    b = root.with_data({"shard": 1}, origin="B")
+    u = a | b
+    assert set(u.get_all("shard")) == {0, 1}
+    assert u.provenance("shard") == ("A", "B")  # deterministic order
+
+
+def test_get_resolves_latest_lamport():
+    c = Context.origin({"k": "old"})
+    c2 = c.with_data({"k": "new"}, origin="n1")
+    assert c2.get("k") == "new"
+    assert c2.get_all("k") == ("old", "new")
+
+
+def test_digest_stability_and_sensitivity():
+    a = Context.origin({"a": 1, "b": [1, 2]})
+    b = Context.origin({"b": [1, 2], "a": 1})  # insertion order must not matter
+    assert a.digest() == b.digest()
+    c = Context.origin({"a": 1, "b": [2, 1]})
+    assert a.digest() != c.digest()
+
+
+def test_wire_roundtrip():
+    c = Context.origin({"a": 1}).with_data({"b": {"x": [1.5, None, "s"]}}, origin="n")
+    rt = Context.from_wire(c.to_wire())
+    assert rt == c and rt.digest() == c.digest()
+
+
+def test_empty_context():
+    assert len(EMPTY_CONTEXT) == 0
+    assert EMPTY_CONTEXT.get("missing", "d") == "d"
+    assert (EMPTY_CONTEXT | EMPTY_CONTEXT) == EMPTY_CONTEXT
+
+
+# ---------------------------------------------------------------------------
+# property tests: ξ-union is a commutative, associative, idempotent monoid
+# ---------------------------------------------------------------------------
+_keys = st.text(string.ascii_lowercase, min_size=1, max_size=4)
+_vals = st.one_of(st.integers(-5, 5), st.text(string.ascii_letters, max_size=4),
+                  st.lists(st.integers(0, 3), max_size=3))
+
+
+@st.composite
+def contexts(draw):
+    n = draw(st.integers(0, 5))
+    entries = [ContextEntry.make(draw(_keys), draw(_vals),
+                                 origin=draw(_keys), lamport=draw(st.integers(0, 3)))
+               for _ in range(n)]
+    return Context(entries)
+
+
+@settings(max_examples=200, deadline=None)
+@given(contexts(), contexts())
+def test_union_commutative(a, b):
+    assert (a | b) == (b | a)
+    assert (a | b).digest() == (b | a).digest()
+
+
+@settings(max_examples=200, deadline=None)
+@given(contexts(), contexts(), contexts())
+def test_union_associative(a, b, c):
+    assert ((a | b) | c) == (a | (b | c))
+
+
+@settings(max_examples=200, deadline=None)
+@given(contexts())
+def test_union_idempotent_with_identity(a):
+    assert (a | a) == a
+    assert (a | EMPTY_CONTEXT) == a
+
+
+@settings(max_examples=100, deadline=None)
+@given(contexts(), contexts())
+def test_union_is_superset(a, b):
+    u = a | b
+    assert a.keys() | b.keys() == u.keys()
+    for k in a.keys():
+        uvals = list(u.get_all(k))
+        for v in a.get_all(k):
+            assert v in uvals

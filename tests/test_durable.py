@@ -1,0 +1,175 @@
+"""Durable execution (§4.2): journal crash-safety, replay, effectively-once."""
+import os
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Context, ContextGraph, Journal, JournalRecord, LocalExecutor,
+                        ReplayCache, WithContext, decode_payload, encode_payload,
+                        payload_digest)
+
+
+def test_payload_codec_roundtrip():
+    obj = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+           "b": [1, "s", None, 2.5], "c": {"nested": np.int64(7)}}
+    rt = decode_payload(encode_payload(obj))
+    np.testing.assert_array_equal(rt["a"], obj["a"])
+    assert rt["b"] == obj["b"]
+
+
+def test_payload_digest_sensitivity():
+    a = {"x": np.ones((2, 2), np.float32)}
+    b = {"x": np.ones((2, 2), np.float32)}
+    c = {"x": np.ones((2, 2), np.float64)}
+    d = {"x": np.ones((4,), np.float32)}
+    assert payload_digest(a) == payload_digest(b)
+    assert payload_digest(a) != payload_digest(c)  # dtype matters
+    assert payload_digest(a) != payload_digest(d)  # shape matters
+
+
+def test_journal_append_read_roundtrip(tmp_path):
+    p = str(tmp_path / "j.wal")
+    with Journal(p, sync="batch") as j:
+        for i in range(5):
+            j.append(JournalRecord(kind="NODE_COMMIT", node_id=f"n{i}",
+                                   payload={"i": i}))
+    recs = list(Journal(p, sync="never").records())
+    assert [r.node_id for r in recs] == [f"n{i}" for i in range(5)]
+    assert recs[3].payload == {"i": 3}
+
+
+def test_journal_torn_tail_recovery(tmp_path):
+    """A torn (partial) final record must be truncated, earlier records kept."""
+    p = str(tmp_path / "j.wal")
+    with Journal(p, sync="always") as j:
+        j.append(JournalRecord(kind="NODE_COMMIT", node_id="good"))
+    size = os.path.getsize(p)
+    with open(p, "ab") as fh:  # simulate crash mid-append
+        fh.write(b"\x99" * 7)
+    j2 = Journal(p, sync="never")
+    recs = list(j2.records())
+    assert [r.node_id for r in recs] == ["good"]
+    assert os.path.getsize(p) == size
+    j2.close()
+
+
+def test_journal_corrupt_middle_stops_at_corruption(tmp_path):
+    p = str(tmp_path / "j.wal")
+    with Journal(p, sync="batch") as j:
+        j.append(JournalRecord(kind="NODE_COMMIT", node_id="a"))
+        j.append(JournalRecord(kind="NODE_COMMIT", node_id="b"))
+    data = open(p, "rb").read()
+    with open(p, "wb") as fh:  # flip a byte inside the first record body
+        fh.write(data[:10] + bytes([data[10] ^ 0xFF]) + data[11:])
+    assert list(Journal(p, sync="never").records()) == []
+
+
+def test_replay_skips_committed_nodes(tmp_path):
+    p = str(tmp_path / "j.wal")
+    calls = {"n": 0}
+
+    def build():
+        g = ContextGraph(origin=Context.origin({"run": 1}))
+
+        def expensive(ctx):
+            calls["n"] += 1
+            return 42
+
+        g.add("exp", expensive)
+        g.add("post", lambda ctx, exp: exp + 1, deps=["exp"])
+        return g
+
+    with Journal(p, sync="always") as j:
+        rep1 = LocalExecutor(journal=j).run(build())
+    assert calls["n"] == 1 and rep1.outputs["post"] == 43
+    with Journal(p, sync="always") as j:
+        rep2 = LocalExecutor(journal=j).run(build())
+    assert calls["n"] == 1  # effectively-once: not re-executed
+    assert set(rep2.replayed) == {"exp", "post"}
+    assert rep2.outputs == rep1.outputs
+
+
+def test_replay_invalidated_by_context_change(tmp_path):
+    p = str(tmp_path / "j.wal")
+
+    def build(seed):
+        g = ContextGraph(origin=Context.origin({"seed": seed}))
+        g.add("n", lambda ctx: ctx.get("seed") * 10)
+        return g
+
+    with Journal(p, sync="batch") as j:
+        LocalExecutor(journal=j).run(build(1))
+    with Journal(p, sync="batch") as j:
+        rep = LocalExecutor(journal=j).run(build(2))  # different ξ ⇒ re-execute
+    assert rep.outputs["n"] == 20 and rep.replayed == ()
+
+
+def test_retry_then_success(tmp_path):
+    attempts = {"n": 0}
+    g = ContextGraph()
+
+    def flaky(ctx):
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    g.add("f", flaky, retries=3)
+    rep = LocalExecutor().run(g)
+    assert rep.outputs["f"] == "ok" and attempts["n"] == 3
+
+
+def test_failure_after_retries_journaled(tmp_path):
+    p = str(tmp_path / "j.wal")
+    g = ContextGraph()
+    g.add("bad", lambda ctx: 1 / 0, retries=1)
+    with Journal(p, sync="batch") as j:
+        with pytest.raises(ZeroDivisionError):
+            LocalExecutor(journal=j).run(g)
+    kinds = [r.kind for r in Journal(p, sync="never").records()]
+    assert "NODE_FAIL" in kinds
+
+
+def test_with_context_facts_flow_downstream():
+    g = ContextGraph()
+    g.add("a", lambda ctx: WithContext(1, {"emitted": "yes"}))
+    seen = {}
+
+    def b(ctx, a):
+        seen["emitted"] = ctx.get("emitted")
+        return a
+
+    g.add("b", b, deps=["a"])
+    LocalExecutor().run(g)
+    assert seen["emitted"] == "yes"
+
+
+def test_concurrent_journal_appends(tmp_path):
+    p = str(tmp_path / "j.wal")
+    j = Journal(p, sync="batch")
+
+    def writer(k):
+        for i in range(50):
+            j.append(JournalRecord(kind="NODE_COMMIT", node_id=f"t{k}-{i}"))
+
+    ts = [threading.Thread(target=writer, args=(k,)) for k in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    j.close()
+    assert len(list(Journal(p, sync="never").records())) == 200
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["NODE_COMMIT", "NODE_START", "CKPT"]),
+                          st.integers(0, 99)), max_size=20))
+def test_journal_roundtrip_property(tmp_path_factory, recs):
+    p = str(tmp_path_factory.mktemp("wal") / "j.wal")
+    with Journal(p, sync="never") as j:
+        for kind, i in recs:
+            j.append(JournalRecord(kind=kind, node_id=f"n{i}", payload={"i": i}))
+        j.flush()
+    out = [(r.kind, r.payload["i"]) for r in Journal(p, sync="never").records()]
+    assert out == list(recs)

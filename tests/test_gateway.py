@@ -1,0 +1,152 @@
+"""Gateway (§3.3): allocation algorithms, silo queue, failure rerouting."""
+import time
+
+import pytest
+
+from repro.core import (AllocationError, Context, Gateway, InProcWorker, TaskRegistry,
+                        WorkerHandle, context_affinity, least_loaded, power_of_two,
+                        round_robin)
+
+
+def _cluster(n=4, fail=None):
+    reg = TaskRegistry()
+
+    @reg.task("add")
+    def add(ctx, a, b):
+        return a + b
+
+    @reg.task("slow")
+    def slow(ctx, dt=0.05):
+        time.sleep(dt)
+        return dt
+
+    @reg.task("whoami")
+    def whoami(ctx):
+        return ctx.get("gateway", "?")
+
+    @reg.task("boom")
+    def boom(ctx):
+        raise ValueError("app error")
+
+    return reg, [InProcWorker(f"w{i}", reg) for i in range(n)]
+
+
+def test_basic_dispatch_and_result():
+    reg, workers = _cluster()
+    with Gateway(workers) as gw:
+        fut = gw.submit("add", inputs={"a": 2, "b": 3})
+        assert fut.result(timeout=5) == 5
+
+
+def test_round_robin_spreads_load():
+    reg, workers = _cluster(3)
+    with Gateway(workers, allocation=("round_robin",)) as gw:
+        futs = gw.map("add", [{"a": i, "b": 0} for i in range(9)])
+        [f.result(timeout=5) for f in futs]
+    counts = [w.state.completed for w in workers]
+    assert sum(counts) == 9 and max(counts) <= 5  # roughly spread
+
+
+def test_silo_priority_ordering():
+    reg, workers = _cluster(1)
+    order = []
+
+    @reg.task("record")
+    def record(ctx, tag):
+        order.append(tag)
+        return tag
+
+    gw = Gateway(workers, silo=True, dispatch_threads=1)
+    # enqueue BEFORE starting dispatch so priorities decide order
+    gw.submit("record", inputs={"tag": "low"}, priority=9)
+    gw.submit("record", inputs={"tag": "high"}, priority=0)
+    f = gw.submit("record", inputs={"tag": "mid"}, priority=5)
+    with gw:
+        f.result(timeout=5)
+        time.sleep(0.1)
+    assert order[0] == "high" and set(order) == {"low", "mid", "high"}
+
+
+def test_system_failure_reroutes_to_live_worker():
+    reg, workers = _cluster(2)
+    workers[0].alive = False  # system-level death: heartbeat gone
+    with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+        fut = gw.submit("add", inputs={"a": 1, "b": 1})
+        assert fut.result(timeout=5) == 2
+    assert workers[1].state.completed >= 1
+
+
+def test_application_failure_distinguished():
+    """App raises -> status error -> retries -> surfaced; heartbeat stays OK."""
+    reg, workers = _cluster(2)
+    with Gateway(workers) as gw:
+        fut = gw.submit("boom", max_attempts=2)
+        with pytest.raises(RuntimeError):
+            fut.result(timeout=5)
+        assert all(h.live for h in gw.handles)  # system-level all healthy
+
+
+def test_all_workers_down_allocation_error():
+    reg, workers = _cluster(2)
+    for w in workers:
+        w.alive = False
+    with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+        fut = gw.submit("add", inputs={"a": 1, "b": 1}, max_attempts=1)
+        with pytest.raises((AllocationError, TimeoutError, ConnectionError)):
+            fut.result(timeout=10)
+
+
+def test_worker_down_callback_fires():
+    reg, workers = _cluster(2)
+    downs = []
+    gw = Gateway(workers, heartbeat_interval_s=0.05)
+    gw.on_worker_down = lambda h: downs.append(h.name)
+    with gw:
+        workers[0].alive = False
+        deadline = time.time() + 5
+        while not downs and time.time() < deadline:
+            time.sleep(0.02)
+    assert "w0" in downs
+
+
+def test_context_affinity_prefers_holder():
+    reg, workers = _cluster(3)
+    with Gateway(workers, allocation=("context_affinity", "least_loaded")) as gw:
+        gw.submit("add", inputs={"a": 0, "b": 0}, affinity_key="shard7").result(timeout=5)
+        holder = [h.name for h in gw.handles if "shard7" in h.held_contexts]
+        assert len(holder) == 1
+        for _ in range(5):
+            gw.submit("add", inputs={"a": 0, "b": 0}, affinity_key="shard7").result(timeout=5)
+        holders_after = [h.name for h in gw.handles if "shard7" in h.held_contexts]
+        assert holders_after == holder  # affinity kept routing to the same worker
+
+
+def test_allocation_algorithms_pure():
+    handles = [WorkerHandle(worker=None, name=f"w{i}") for i in range(4)]
+    handles[2].inflight = 5
+    req = type("R", (), {"affinity_key": "", "task_name": "t"})()
+    assert least_loaded(handles, req, {}).name != "w2"
+    assert power_of_two(handles, req, {"rng": __import__("random").Random(0)}) is not None
+    assert round_robin(handles, req, {}) is not None
+    assert context_affinity(handles, req, {}) is None  # no key -> falls through
+    handles[1].held_contexts.add("k")
+    req2 = type("R", (), {"affinity_key": "k", "task_name": "t"})()
+    assert context_affinity(handles, req2, {}).name == "w1"
+
+
+def test_cluster_context_snapshot():
+    reg, workers = _cluster(2)
+    with Gateway(workers) as gw:
+        gw.submit("add", inputs={"a": 1, "b": 2}).result(timeout=5)
+        ctx = gw.cluster_context()
+        assert ctx.get("worker/w0/live") in (True, False)
+        assert "worker/w1/live" in ctx.keys()
+
+
+def test_allocation_fast():
+    """§5: gateway decisions must not become the scaled-up bottleneck."""
+    reg, workers = _cluster(8)
+    with Gateway(workers, allocation=("least_loaded",)) as gw:
+        futs = gw.map("add", [{"a": i, "b": i} for i in range(200)])
+        [f.result(timeout=10) for f in futs]
+        assert gw.mean_alloc_us() < 1000  # < 1ms/decision

@@ -1,0 +1,139 @@
+"""ContextGraph: contraction (union nodes), topo scheduling, ξ propagation."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Context, ContextGraph, CycleError, LocalExecutor, UnionNode, toposort_levels
+
+
+def _noop(ctx, **kw):
+    return sorted(kw)
+
+
+def test_linear_chain_contexts():
+    g = ContextGraph(origin=Context.origin({"env": 1}))
+    g.add("a", _noop, data={"da": 1})
+    g.add("b", _noop, deps=["a"], data={"db": 2})
+    g.add("c", _noop, deps=["b"])
+    xi = g.propagate_contexts()
+    assert xi["a"].keys() == {"env", "da"}
+    assert xi["b"].keys() == {"env", "da", "db"}
+    assert xi["c"].keys() == {"env", "da", "db"}  # c has no Ψ of its own
+
+
+def test_multiple_independent_origins_union():
+    # Figure 2: F unions contexts of its independent origins
+    g = ContextGraph()
+    g.add("d", _noop, data={"d": 1})
+    g.add("e", _noop, data={"e": 1})
+    g.add("f", _noop, deps=["d", "e"])
+    xi = g.propagate_contexts()
+    assert xi["f"].keys() == {"d", "e"}
+
+
+def test_codependent_nodes_form_union_node():
+    # Figure 2: A and B co-dependent → union node A' with merged ξ and Ψ
+    g = ContextGraph()
+    g.add("A", _noop, deps=["B"], data={"pa": 1})
+    g.add("B", _noop, deps=["A"], data={"pb": 2})
+    g.add("child", _noop, deps=["A"])
+    exec_nodes, m2g = g.contract()
+    assert m2g["A"] == m2g["B"] and m2g["A"].startswith("∪")
+    union = exec_nodes[m2g["A"]]
+    assert isinstance(union, UnionNode)
+    xi = g.propagate_contexts(exec_nodes)
+    assert xi[m2g["A"]].keys() == {"pa", "pb"}
+    # children inherit from A', not from A or B individually
+    assert xi["child"].keys() == {"pa", "pb"}
+
+
+def test_three_node_cycle_contracts_to_single_union():
+    g = ContextGraph()
+    g.add("x", _noop, deps=["z"])
+    g.add("y", _noop, deps=["x"])
+    g.add("z", _noop, deps=["y"])
+    exec_nodes, m2g = g.contract()
+    assert len({m2g[n] for n in "xyz"}) == 1
+    levels, _, _ = g.schedule()
+    assert len(levels) == 1
+
+
+def test_self_loop_contracts():
+    g = ContextGraph()
+    g.add("s", lambda ctx, s=None: 1 if s is None else s + 1, deps=["s"])
+    exec_nodes, m2g = g.contract()
+    assert isinstance(exec_nodes[m2g["s"]], UnionNode)
+
+
+def test_unknown_dep_raises():
+    g = ContextGraph()
+    g.add("a", _noop, deps=["ghost"])
+    with pytest.raises(KeyError):
+        g.validate()
+
+
+def test_toposort_levels_parallelism():
+    ids = ["a", "b", "c", "d"]
+    deps = {"a": [], "b": [], "c": ["a", "b"], "d": ["c"]}
+    levels = toposort_levels(ids, deps)
+    assert levels == [["a", "b"], ["c"], ["d"]]
+
+
+def test_toposort_cycle_detection():
+    with pytest.raises(CycleError):
+        toposort_levels(["a", "b"], {"a": ["b"], "b": ["a"]})
+
+
+def test_duplicate_node_rejected():
+    g = ContextGraph()
+    g.add("a", _noop)
+    with pytest.raises(ValueError):
+        g.add("a", _noop)
+
+
+def test_diamond_execution_order_and_injection():
+    g = ContextGraph()
+    g.add("src", lambda ctx: 10)
+    g.add("l", lambda ctx, src: src + 1, deps=["src"])
+    g.add("r", lambda ctx, src: src * 2, deps=["src"])
+    g.add("join", lambda ctx, l, r: (l, r), deps=["l", "r"])
+    rep = LocalExecutor().run(g)
+    assert rep.outputs["join"] == (11, 20)
+
+
+# ---------------------------------------------------------------------------
+# property: random DAGs — ξ(n) ⊇ ξ(p) for every parent p (monotone inheritance)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 12), st.data())
+def test_context_inheritance_monotone(n, data):
+    g = ContextGraph(origin=Context.origin({"root": 0}))
+    ids = [f"n{i}" for i in range(n)]
+    for i, nid in enumerate(ids):
+        pool = ids[:i]
+        k = data.draw(st.integers(0, min(3, len(pool))))
+        deps = data.draw(st.permutations(pool)) [:k] if pool else []
+        g.add(nid, _noop, deps=deps, data={f"d{nid}": i})
+    exec_nodes, m2g = g.contract()
+    xi = g.propagate_contexts(exec_nodes)
+    gdeps = ContextGraph.group_deps(exec_nodes, m2g)
+    for gid in exec_nodes:
+        for p in gdeps[gid]:
+            assert xi[p].keys() <= xi[gid].keys()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10), st.data())
+def test_random_cyclic_graph_always_schedules(n, data):
+    """Any digraph (cycles allowed) must contract to a schedulable DAG."""
+    g = ContextGraph()
+    ids = [f"n{i}" for i in range(n)]
+    edges = data.draw(st.sets(
+        st.tuples(st.sampled_from(ids), st.sampled_from(ids)), max_size=2 * n))
+    dep_map = {i: [] for i in ids}
+    for a, b in edges:
+        dep_map[a].append(b)
+    for nid in ids:
+        g.add(nid, _noop, deps=sorted(set(dep_map[nid])))
+    levels, exec_nodes, m2g = g.schedule()  # must not raise
+    assert sum(len(l) for l in levels) == len(exec_nodes)

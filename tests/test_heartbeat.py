@@ -1,0 +1,111 @@
+"""HeartbeatServer (§3.1) + the system/application failure split (§3.2)."""
+import time
+
+import pytest
+
+from repro.core import (Context, FailureKind, HeartbeatServer, InProcWorker,
+                        LivenessDetector, StragglerWatch, TaskRegistry,
+                        WorkerClient, WorkerServer, check_heartbeat, telemetry)
+
+
+def test_telemetry_shape():
+    t = telemetry({"worker": "x"})
+    assert t["ok"] is True
+    assert {"cpu", "memory", "disk", "devices", "uptime_s"} <= set(t)
+    assert 0 <= t["cpu"]["used_frac"] <= 1
+    assert t["worker"] == "x"
+
+
+def test_heartbeat_http_roundtrip():
+    with HeartbeatServer() as hb:
+        resp = check_heartbeat(hb.address, timeout=2)
+        assert resp is not None and resp["ok"] is True
+    assert check_heartbeat(hb.address, timeout=0.5) is None  # stopped ⇒ dead
+
+
+def test_worker_server_task_over_http():
+    reg = TaskRegistry()
+
+    @reg.task("mul")
+    def mul(ctx, x, y):
+        return x * y
+
+    with WorkerServer("w0", reg) as ws:
+        client = WorkerClient("w0", ws.address, ws.heartbeat_server.address)
+        assert client.heartbeat() is not None
+        out = client.run_task("mul", Context.origin({"z": 1}), {"x": 6, "y": 7})
+        assert out["status"] == "ok" and out["output"] == 42
+
+
+def test_system_vs_application_failure_split():
+    """The paper's §3.2 troubleshooting matrix, end to end over HTTP."""
+    reg = TaskRegistry()
+    reg.register("noop", lambda ctx: None)
+    ws = WorkerServer("w0", reg).start()
+    client = WorkerClient("w0", ws.address, ws.heartbeat_server.address, timeout=1.0)
+
+    # healthy: both respond
+    assert client.heartbeat() is not None
+    assert client.run_task("noop", Context(), {})["status"] == "ok"
+
+    # application-level failure: app down, heartbeat alive
+    ws.crash_application()
+    assert client.heartbeat() is not None          # heartbeat still OK
+    with pytest.raises(TimeoutError):
+        client.run_task("noop", Context(), {})     # app unreachable
+
+    # system-level failure: heartbeat down too
+    ws.heartbeat_server.stop()
+    assert client.heartbeat() is None
+
+
+def test_liveness_detector_taxonomy():
+    hb_state = {"up": True}
+    app_state = {"up": True}
+    det = LivenessDetector(
+        heartbeat_probe=lambda w: {"ok": True} if hb_state["up"] else None,
+        app_probe=lambda w: app_state["up"],
+        suspect_after_s=0.0)
+    assert det.check("w").kind == FailureKind.HEALTHY
+    app_state["up"] = False
+    assert det.check("w").kind == FailureKind.APPLICATION
+    hb_state["up"] = False
+    assert det.check("w").kind == FailureKind.SYSTEM
+
+
+def test_liveness_grace_window():
+    det = LivenessDetector(heartbeat_probe=lambda w: None,
+                           app_probe=lambda w: True, suspect_after_s=10.0)
+    det._last_ok["w"] = time.time()
+    assert det.check("w").kind == FailureKind.HEALTHY  # within grace
+
+
+def test_middleware_rejection():
+    reg = TaskRegistry()
+    reg.register("secret", lambda ctx: "classified")
+    deny = lambda name, meta: "forbidden" if name == "secret" else None
+    w = InProcWorker("w0", reg, middleware=[deny])
+    out = w.run_task("secret", Context(), {})
+    assert out["status"] == "rejected" and out["reason"] == "forbidden"
+
+
+def test_application_error_reported_not_crashing():
+    reg = TaskRegistry()
+    reg.register("div", lambda ctx, x: 1 / x)
+    w = InProcWorker("w0", reg)
+    out = w.run_task("div", Context(), {"x": 0})
+    assert out["status"] == "error" and "ZeroDivisionError" in out["error"]
+    assert w.heartbeat() is not None  # worker survives the app error
+
+
+def test_straggler_watch():
+    sw = StragglerWatch(threshold=2.0, min_samples=3)
+    for i in range(3):
+        sw.started("t", i)
+        sw.finished("t", i)
+    sw.started("t", "slow")
+    time.sleep(max(0.05, 3 * (sw.median("t") or 0.01)))
+    sus = sw.stragglers()
+    assert any(tok == "slow" for _, tok, _, _ in sus)
+    sw.finished("t", "slow")
+    assert not any(tok == "slow" for _, tok, _, _ in sw.stragglers())

@@ -1,0 +1,215 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per kernel; asserts allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rglru import rglru_pallas
+from repro.kernels.rwkv6 import wkv6_pallas
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FLASH_CASES = [
+    # (B, Hq, Hkv, Sq, Sk, D, causal, window, dtype)
+    (1, 2, 2, 128, 128, 64, True, None, jnp.float32),
+    (2, 4, 2, 128, 128, 64, True, None, jnp.float32),    # GQA
+    (1, 8, 1, 256, 256, 128, True, None, jnp.float32),   # MQA
+    (1, 2, 2, 128, 128, 64, False, None, jnp.float32),   # bidirectional
+    (1, 2, 2, 128, 128, 64, True, 64, jnp.float32),      # local window
+    (1, 2, 1, 100, 100, 32, True, None, jnp.float32),    # ragged (pad path)
+    (1, 2, 2, 64, 192, 32, True, None, jnp.float32),     # Sq < Sk (chunked q)
+    (1, 2, 2, 128, 128, 64, True, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_kernel_matches_dense_oracle(case):
+    B, Hq, Hkv, Sq, Sk, D, causal, window, dtype = case
+    q = rand((B, Hq, Sq, D), dtype)
+    k = rand((B, Hkv, Sk, D), dtype)
+    v = rand((B, Hkv, Sk, D), dtype)
+    out = flash_attention_pallas(q, k, v, causal, window, None, 64, 64, True)
+    want = ref.flash_attention_dense_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_kernel_mla_head_dims():
+    """k head dim ≠ v head dim (MLA): 48 vs 32."""
+    q = rand((1, 2, 64, 48))
+    k = rand((1, 2, 64, 48))
+    v = rand((1, 2, 64, 32))
+    out = flash_attention_pallas(q, k, v, True, None, None, 32, 32, True)
+    want = ref.flash_attention_dense_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kernel_grad_matches_oracle_grad():
+    q = rand((1, 2, 64, 32))
+    k = rand((1, 2, 64, 32))
+    v = rand((1, 2, 64, 32))
+
+    def f_kernel(q, k, v):
+        return flash_attention_pallas(q, k, v, True, None, None,
+                                      32, 32, True).sum()
+
+    def f_ref(q, k, v):
+        return ref.flash_attention_dense_ref(q, k, v, causal=True).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 2), st.integers(1, 4),
+       st.booleans(), st.sampled_from([None, 32]))
+def test_flash_kernel_property_sweep(b, hkv_pow, sq_blocks, causal, window):
+    hkv = 2 ** hkv_pow
+    hq = hkv * 2
+    sq = 64 * sq_blocks
+    q = rand((b, hq, sq, 32))
+    k = rand((b, hkv, sq, 32))
+    v = rand((b, hkv, sq, 32))
+    out = flash_attention_pallas(q, k, v, causal, window, None, 64, 64, True)
+    want = ref.flash_attention_dense_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+def decays(shape):
+    """per-step log decay within the documented clamp [-4, -1e-4]."""
+    logw = -np.minimum(np.exp(RNG.normal(size=shape)), 4.0)
+    return jnp.asarray(np.exp(np.minimum(logw, -1e-4)), jnp.float32)
+
+
+WKV_CASES = [
+    # (B, H, T, K, V, chunk, with_state)
+    (1, 1, 32, 16, 16, 16, False),
+    (2, 3, 64, 32, 32, 16, True),
+    (1, 2, 128, 64, 64, 16, True),
+    (2, 1, 48, 16, 32, 16, False),   # K != V
+]
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_kernel_matches_sequential_oracle(case):
+    B, H, T, K, V, chunk, with_state = case
+    r = rand((B, H, T, K))
+    k = rand((B, H, T, K))
+    v = rand((B, H, T, V))
+    w = decays((B, H, T, K))
+    u = rand((H, K))
+    s0 = rand((B, H, K, V)) if with_state else None
+    out, sT = wkv6_pallas(r, k, v, w, u, initial_state=s0, chunk=chunk,
+                          interpret=True)
+    want, sT_want = ref.wkv6_ref(r, k, v, w, u, initial_state=s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_ops_pads_ragged_T():
+    B, H, T, K = 1, 2, 21, 16     # T not a multiple of the chunk
+    r = rand((B, H, T, K))
+    k = rand((B, H, T, K))
+    v = rand((B, H, T, K))
+    w = decays((B, H, T, K))
+    u = rand((H, K))
+    out, sT = ops.wkv6(r, k, v, w, u, impl="pallas")
+    want, sT_want = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_state_chaining_equals_one_shot():
+    """Running two halves with carried state == one full pass (decode)."""
+    B, H, T, K = 1, 2, 64, 16
+    r, k, v = rand((B, H, T, K)), rand((B, H, T, K)), rand((B, H, T, K))
+    w, u = decays((B, H, T, K)), rand((H, K))
+    full, s_full = ops.wkv6(r, k, v, w, u, impl="ref")
+    h = T // 2
+    o1, s1 = ops.wkv6(r[:, :, :h], k[:, :, :h], v[:, :, :h], w[:, :, :h], u,
+                      impl="ref")
+    o2, s2 = ops.wkv6(r[:, :, h:], k[:, :, h:], v[:, :, h:], w[:, :, h:], u,
+                      initial_state=s1, impl="ref")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 2)),
+                               np.asarray(full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+RGLRU_CASES = [
+    (1, 64, 32, 64, False),
+    (2, 128, 96, 64, True),     # W > block → channel blocking
+    (1, 100, 48, 32, True),     # ragged T and W (pad path)
+]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rglru_kernel_matches_sequential_oracle(case):
+    B, T, W, chunk, with_state = case
+    x = rand((B, T, W))
+    a = jnp.asarray(1 / (1 + np.exp(-RNG.normal(size=(B, T, W)))), jnp.float32)
+    h0 = rand((B, W)) if with_state else None
+    h, hT = rglru_pallas(x, a, initial_state=h0, chunk=chunk, block_w=64,
+                         interpret=True)
+    want, hT_want = ref.rglru_ref(x, a, initial_state=h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rglru_state_chaining_equals_one_shot():
+    B, T, W = 2, 64, 32
+    x = rand((B, T, W))
+    a = jnp.asarray(1 / (1 + np.exp(-RNG.normal(size=(B, T, W)))), jnp.float32)
+    full, s_full = ops.rglru(x, a, impl="ref")
+    h = T // 2
+    o1, s1 = ops.rglru(x[:, :h], a[:, :h], impl="ref")
+    o2, s2 = ops.rglru(x[:, h:], a[:, h:], initial_state=s1, impl="ref")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(full), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ref_blocked_equals_dense_large_window_cases():
+    q = rand((1, 2, 96, 32))
+    k = rand((1, 2, 96, 32))
+    v = rand((1, 2, 96, 32))
+    for window in (1, 16, 96, 200):
+        a = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                    block_k=32)
+        b = ref.flash_attention_dense_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)

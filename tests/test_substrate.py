@@ -1,0 +1,205 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint store, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule, global_norm)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, schedule="constant",
+                      clip_norm=1e9)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks_params():
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.5, schedule="constant")
+    params = {"w": jnp.ones((4,))}
+    state = adamw_init(params, cfg)
+    zeros = {"w": jnp.zeros((4,))}
+    for _ in range(50):
+        params, state, _ = adamw_update(params, zeros, state, cfg)
+    assert float(params["w"].max()) < 1.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - np.sqrt(250)) < 1e-3
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_cosine_schedule_shape():
+    lr0 = cosine_schedule(jnp.asarray(0), 1e-3, warmup=10, total=100)
+    lr_mid = cosine_schedule(jnp.asarray(10), 1e-3, warmup=10, total=100)
+    lr_end = cosine_schedule(jnp.asarray(100), 1e-3, warmup=10, total=100)
+    assert float(lr0) < float(lr_mid)
+    assert float(lr_end) < 1e-6 + 0.0 * float(lr_mid)
+
+
+def test_adamw_bf16_state_dtype():
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    state = adamw_init({"w": jnp.ones((4,), jnp.bfloat16)}, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_data_determinism():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4, seed=7)
+    src = TokenSource(cfg)
+    a = src.batch_at(5)
+    b = src.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = src.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    kw = dict(vocab_size=1000, seq_len=16, global_batch=8, seed=1)
+    full = TokenSource(DataConfig(**kw)).batch_at(3)["tokens"]
+    h0 = TokenSource(DataConfig(**kw, num_hosts=2, host_index=0)).batch_at(3)
+    h1 = TokenSource(DataConfig(**kw, num_hosts=2, host_index=1)).batch_at(3)
+    np.testing.assert_array_equal(np.vstack([h0["tokens"], h1["tokens"]]), full)
+
+
+def test_loader_prefetch_and_resume():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2, seed=0)
+    src = TokenSource(cfg)
+    with ShardedLoader(src, start_step=10) as loader:
+        step, batch = next(loader)
+        assert step == 10
+        step2, _ = next(loader)
+        assert step2 == 11
+    np.testing.assert_array_equal(batch["tokens"], src.batch_at(10)["tokens"])
+
+
+def test_token_range():
+    cfg = DataConfig(vocab_size=50, seq_len=64, global_batch=2)
+    t = TokenSource(cfg).batch_at(0)["tokens"]
+    assert t.min() >= 0 and t.max() < 50
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"layer": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                      "b": np.zeros(4, np.float32)},
+            "step": np.asarray(7, np.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    ref = store.save("step1", _tree(), {"next_step": 1})
+    assert ref.startswith("step1@")
+    out = store.restore("step1", _tree())
+    np.testing.assert_array_equal(out["layer"]["w"], _tree()["layer"]["w"])
+    assert store.manifest("step1")["meta"]["next_step"] == 1
+
+
+def test_checkpoint_atomic_publish_and_gc(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for i in range(4):
+        store.save(f"step{i}", _tree())
+    assert store.list() == ["step2", "step3"]
+    assert store.latest() == "step3"
+
+
+def test_checkpoint_async_save(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save("a", _tree(), async_=True)
+    store.wait()
+    assert store.latest() == "a"
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save("x", _tree())
+    bad = _tree()
+    bad["layer"]["w"] = np.zeros((2, 2), np.float32)
+    with pytest.raises(ValueError):
+        store.restore("x", bad)
+
+
+def test_checkpoint_ref_digest_verified(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    ref = store.save("y", _tree())
+    store.resolve(ref, _tree())  # ok
+    with pytest.raises(ValueError):
+        store.resolve("y@deadbeefdeadbeef", _tree())
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+def test_param_spec_conflict_resolution():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.sharding.specs import ShardingOptions, ShardingRules
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules(get_config("deepseek-v3-671b"), mesh,
+                          ShardingOptions())
+    # expert tensors: experts wins model; embed gets fsdp; moe_mlp falls back
+    spec = rules.param_spec(("experts", "embed", "moe_mlp"))
+    assert spec[0] == "model" and spec[2] is None
+
+
+def test_sanitize_drops_nondivisible_axes():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.sharding.specs import ShardingOptions, ShardingRules
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules(get_config("yi-6b"), mesh, ShardingOptions())
+    # fake 16-wide mesh shapes by direct table inspection is overkill; the
+    # sanitize contract: axis dropped when dim % axis_size != 0
+    spec = rules.sanitize(P("model", None), (10, 4))
+    assert spec[0] == "model"  # model axis size 1 divides everything
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 2}
+
+    rules.mesh = FakeMesh()
+    spec = rules.sanitize(P("model", None), (10, 4))
+    assert spec[0] is None
+    spec = rules.sanitize(P(("data", "model"), None), (4, 4))
+    assert spec[0] == "data"  # divisible prefix kept
+
+
+def test_cache_spec_tree_covers_all_leaf_kinds():
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.sharding.specs import ShardingOptions, ShardingRules
+    from repro.configs import smoke_variant
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("yi-6b", "deepseek-v3-671b", "rwkv6-7b", "recurrentgemma-9b",
+                 "seamless-m4t-large-v2"):
+        cfg = smoke_variant(get_config(arch))
+        model = build(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(2, 32))
+        rules = ShardingRules(cfg, mesh, ShardingOptions())
+        tree = rules.cache_sharding_tree(cache)
+        assert jax.tree.structure(tree, is_leaf=lambda x: hasattr(x, "spec")) \
+            .num_leaves == jax.tree.structure(cache).num_leaves

@@ -1,0 +1,159 @@
+"""End-to-end behaviour tests for the SerPyTor system.
+
+These exercise the paper's full loop: context-aware graph → gateway dispatch
+over heartbeat-monitored workers → durable journal → failure recovery —
+plus the JAX integration (a distributed-graph-orchestrated train round).
+"""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClusterExecutor, Context, ContextGraph, Gateway,
+                        InProcWorker, Journal, LocalExecutor, TaskRegistry,
+                        WithContext)
+
+
+# ---------------------------------------------------------------------------
+# the paper's Figure-2 execution, end to end
+# ---------------------------------------------------------------------------
+def fig2_graph():
+    g = ContextGraph(origin=Context.origin({"env": "test"}), name="fig2")
+    g.add("D", lambda ctx: 10, data={"src": "D"})
+    g.add("E", lambda ctx: 32, data={"src": "E"})
+    g.add("A", lambda ctx, B=None: (B or 0) + 1, deps=["B"], data={"pa": 1})
+    g.add("B", lambda ctx, A=None: (A or 0) + 2, deps=["A"], data={"pb": 2})
+    g.add("F", lambda ctx, D, E: WithContext(D + E, {"f": D + E}),
+          deps=["D", "E"])
+    g.add("G", lambda ctx, F, A: F + A, deps=["F", "A"])
+    return g
+
+
+def test_fig2_executes_with_union_node_and_contexts():
+    rep = LocalExecutor().run(fig2_graph())
+    assert rep.outputs["F"] == 42
+    assert rep.outputs["G"] == 43  # F + member A of the union node
+    union = [k for k in rep.outputs if k.startswith("∪")]
+    assert union and set(rep.outputs[union[0]]) == {"A", "B"}
+    # G's context saw facts from both branches (union rule)
+    assert rep.contexts["G"].get("f") == 42
+    assert rep.contexts["G"].get("pa") == 1
+
+
+def test_fig2_full_durable_replay(tmp_path):
+    p = str(tmp_path / "j.wal")
+    with Journal(p, sync="always") as j:
+        r1 = LocalExecutor(journal=j).run(fig2_graph())
+    with Journal(p, sync="always") as j:
+        r2 = LocalExecutor(journal=j).run(fig2_graph())
+    assert set(r2.replayed) == set(r1.executed)  # zero re-execution
+    assert r2.executed == ()
+    assert r2.outputs == r1.outputs
+
+
+# ---------------------------------------------------------------------------
+# cluster execution with failures
+# ---------------------------------------------------------------------------
+def _cluster(n=3):
+    reg = TaskRegistry()
+    return reg, [InProcWorker(f"w{i}", reg) for i in range(n)]
+
+
+def test_cluster_executor_runs_named_task_graph(tmp_path):
+    reg, workers = _cluster()
+    reg.register("double", lambda ctx, **kw: 2 * list(kw.values())[0])
+    g = ContextGraph(origin=Context.origin({"run": "map-reduce"}))
+    for i in range(6):
+        g.add(f"in{i}", lambda ctx, _i=i: _i)
+        g.add(f"map{i}", "double", deps=[f"in{i}"])
+    g.add("sum", lambda ctx, **kw: sum(v for v in kw.values()
+                                       if isinstance(v, int)),
+          deps=[f"map{i}" for i in range(6)])
+    with Gateway(workers) as gw:
+        with Journal(str(tmp_path / "c.wal"), sync="batch") as j:
+            rep = ClusterExecutor(gw, journal=j).run(g)
+    assert rep.outputs["sum"] == sum(2 * i for i in range(6))
+
+
+def test_cluster_executor_survives_worker_death(tmp_path):
+    reg, workers = _cluster(3)
+    reg.register("slowish", lambda ctx: time.sleep(0.01) or 1)
+    g = ContextGraph()
+    for i in range(12):
+        g.add(f"t{i}", "slowish")
+    with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+        workers[0].alive = False  # dies before dispatch completes
+        rep = ClusterExecutor(gw, speculative=False).run(g)
+    assert all(rep.outputs[f"t{i}"] == 1 for i in range(12))
+
+
+def test_speculative_execution_covers_straggler():
+    reg, workers = _cluster(2)
+    calls = {"n": 0}
+
+    def sometimes_slow(ctx):
+        calls["n"] += 1
+        if calls["n"] == 5:       # one pathological straggler
+            time.sleep(1.0)
+        else:
+            time.sleep(0.01)
+        return 1
+
+    reg.register("work", sometimes_slow)
+    g = ContextGraph()
+    for i in range(8):
+        g.add(f"t{i}", "work")
+    with Gateway(workers) as gw:
+        ex = ClusterExecutor(gw, speculative=True)
+        ex.straggler.threshold = 3.0
+        t0 = time.time()
+        rep = ex.run(g)
+        wall = time.time() - t0
+    assert all(rep.outputs[f"t{i}"] == 1 for i in range(8))
+    assert wall < 5.0  # did not serialize behind the straggler
+
+
+# ---------------------------------------------------------------------------
+# JAX integration: a training round as a SerPyTor graph
+# ---------------------------------------------------------------------------
+def test_graph_orchestrated_train_round(tmp_path):
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.train.steps import make_train_step
+
+    cfg = dataclasses.replace(
+        get_config("serpytor-demo-100m"), num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=128, vocab_size=512)
+    model = build(cfg)
+    params, _ = model.init(jax.random.key(0))
+    opt = adamw_init(params, AdamWConfig())
+    step = jax.jit(make_train_step(model, AdamWConfig()))
+    state = {"p": params, "o": opt}
+    rng = np.random.default_rng(0)
+    batches = {s: rng.integers(0, 512, (2, 32)).tolist() for s in range(3)}
+
+    g = ContextGraph(origin=Context.origin({"run": "round0"}))
+    prev = None
+    for s in range(3):
+        g.add(f"data@{s}", lambda ctx, _s=s: batches[_s], data={"step": s})
+
+        def run_step(ctx, _s=s, **deps):
+            toks = jnp.asarray(deps[f"data@{_s}"], jnp.int32)
+            state["p"], state["o"], m = step(state["p"], state["o"],
+                                             {"tokens": toks})
+            return {"loss": float(m["loss"]), "step": _s}
+
+        g.add(f"step@{s}", run_step,
+              deps=[f"data@{s}"] + ([prev] if prev else []))
+        prev = f"step@{s}"
+    with Journal(str(tmp_path / "t.wal"), sync="batch") as j:
+        rep = LocalExecutor(journal=j).run(g)
+    losses = [rep.outputs[f"step@{s}"]["loss"] for s in range(3)]
+    assert all(np.isfinite(l) for l in losses)
+    assert [rep.outputs[f"step@{s}"]["step"] for s in range(3)] == [0, 1, 2]

@@ -1,0 +1,103 @@
+"""Trainer integration: durable rounds, checkpoint/restart, crash recovery."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def _tc(tmp, **kw):
+    base = dict(run_dir=str(tmp), num_steps=6, checkpoint_every=3,
+                log_every=100, global_batch=2, seq_len=32, heartbeat=False,
+                journal_sync="batch",
+                opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=6,
+                                clip_norm=1.0))
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return smoke_variant(get_config("serpytor-demo-100m"))
+
+
+def test_train_runs_and_reduces_loss(tmp_path, small_cfg):
+    tr = Trainer(small_cfg, _tc(tmp_path / "runA", num_steps=8,
+                                checkpoint_every=4))
+    out = tr.train()
+    assert out["steps"] == 8
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]  # learning on zipf data
+
+
+def test_checkpoints_written_every_round(tmp_path, small_cfg):
+    tr = Trainer(small_cfg, _tc(tmp_path / "runB"))
+    tr.train()
+    tags = tr.store.list()
+    assert "step00000003" in tags and "step00000006" in tags
+
+
+def test_restart_resumes_from_snapshot(tmp_path, small_cfg):
+    run = tmp_path / "runC"
+    tr1 = Trainer(small_cfg, _tc(run, num_steps=3, checkpoint_every=3))
+    tr1.train()
+
+    # same run_dir, more steps: must resume at 3, not recompute 0-2
+    tr2 = Trainer(small_cfg, _tc(run, num_steps=6, checkpoint_every=3))
+    out = tr2.train()
+    assert out["steps"] == 3  # only the new steps ran
+    steps_run = [m["step"] for m in tr2.metrics_log]
+    assert steps_run == [3, 4, 5]
+
+
+def test_crash_recovery_resumes_and_matches_uninterrupted(tmp_path, small_cfg):
+    """Interrupted-at-step-4 run == uninterrupted run (durable execution)."""
+    base = _tc(tmp_path / "runD", num_steps=6, checkpoint_every=2)
+
+    # uninterrupted reference
+    ref = Trainer(small_cfg, _tc(tmp_path / "runRef", num_steps=6,
+                                 checkpoint_every=2))
+    ref.train()
+    ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log}
+
+    # crash after step 3 (two rounds committed: ckpt@2, ckpt@4)
+    tr1 = Trainer(small_cfg, _tc(tmp_path / "runD", num_steps=4,
+                                 checkpoint_every=2))
+    tr1.train()
+    del tr1  # "crash"
+
+    tr2 = Trainer(small_cfg, _tc(tmp_path / "runD", num_steps=6,
+                                 checkpoint_every=2))
+    tr2.train()
+    got = {m["step"]: m["loss"] for m in tr2.metrics_log}
+    for s in (4, 5):
+        assert abs(got[s] - ref_losses[s]) < 1e-4, \
+            f"step {s}: resumed {got[s]} != reference {ref_losses[s]}"
+
+
+def test_journal_has_step_commits(tmp_path, small_cfg):
+    from repro.core import Journal
+
+    run = tmp_path / "runE"
+    tr = Trainer(small_cfg, _tc(run, num_steps=3, checkpoint_every=3))
+    tr.train()
+    kinds = {}
+    for rec in Journal(str(run / "journal.wal"), sync="never").records():
+        kinds.setdefault(rec.kind, []).append(rec.node_id)
+    assert any(n.startswith("step@") for n in kinds.get("NODE_COMMIT", []))
+    assert "CKPT" in kinds
+    assert "RUN_START" in kinds and "RUN_END" in kinds
+
+
+def test_summary_written(tmp_path, small_cfg):
+    run = tmp_path / "runF"
+    Trainer(small_cfg, _tc(run, num_steps=2, checkpoint_every=2)).train()
+    summary = json.load(open(run / "summary.json"))
+    assert summary["steps"] == 2 and len(summary["log"]) == 2
