@@ -1,0 +1,119 @@
+"""Wire-codec benchmark: canonical bytes, digests, and the context-union
+hot path under each available backend, plus the per-entry digest cache win.
+
+What it measures (median µs per call, CSV like benchmarks/run.py):
+
+  canonical_bytes/<codec>    encode a mixed fact payload to canonical form
+  canonical_digest/<codec>   ...plus sha256
+  entry_make/<codec>         ContextEntry.make (canonical encode at insert)
+  union_digest/<codec>       union two 64-fact contexts + digest the result
+                             (the journal-commit hot path: with memoized
+                             per-entry digests this re-hashes only 16-hex
+                             strings, never re-serializes values)
+  union_digest_cold          same, but entry digest caches deliberately
+                             dropped — the speedup shows what the cache buys
+  payload_encode/decode      compressed msgpack pytree codec (journal body)
+
+Run:  PYTHONPATH=src python -m benchmarks.wire_bench [--repeat N]
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro import wire
+from repro.core.context import Context, ContextEntry
+
+
+def timeit(fn: Callable[[], None], repeat: int, inner: int = 1) -> float:
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            fn()
+        ts.append((time.perf_counter() - t0) * 1e6 / inner)
+    return statistics.median(ts)
+
+
+def record(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def fact_payload(i: int) -> dict:
+    return {"step": i, "loss": 2.75 / (i + 1), "shard": [i, i + 1],
+            "meta": {"host": f"h{i % 4}", "ok": True},
+            "arr": np.arange(8, dtype=np.int32)}
+
+
+def build_context(n: int, origin: str) -> Context:
+    return Context(ContextEntry.make(f"k{i}", fact_payload(i), origin, i % 7)
+                   for i in range(n))
+
+
+def drop_entry_caches(ctx: Context) -> None:
+    for e in ctx._entries:
+        object.__setattr__(e, "_digest", None)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeat", type=int, default=7)
+    ap.add_argument("--entries", type=int, default=64)
+    args = ap.parse_args()
+
+    payload = fact_payload(3)
+    codecs = wire.available_codecs()
+    print(f"# codecs available: {codecs}; zstd={wire.zstd_available()}")
+
+    for name in codecs:
+        codec = wire.get_codec(name)
+        record(f"canonical_bytes/{name}",
+               timeit(lambda: codec.canonical_bytes(payload), args.repeat, 200))
+        record(f"canonical_digest/{name}",
+               timeit(lambda: codec.canonical_digest(payload), args.repeat, 200))
+
+    for name in codecs:
+        wire.set_default_codec(name)
+        record(f"entry_make/{name}",
+               timeit(lambda: ContextEntry.make("k", payload, "bench"),
+                      args.repeat, 200))
+
+        a = build_context(args.entries, "A")
+        b = build_context(args.entries, "B")
+        a.digest(), b.digest()  # warm entry caches
+
+        def union_digest():
+            (a | b).digest()
+
+        record(f"union_digest/{name}", timeit(union_digest, args.repeat, 50),
+               f"{2 * args.entries}_facts")
+    wire.set_default_codec(None)
+
+    # what the per-entry cache buys: same union+digest with caches dropped
+    a = build_context(args.entries, "A")
+    b = build_context(args.entries, "B")
+
+    def union_digest_cold():
+        drop_entry_caches(a)
+        drop_entry_caches(b)
+        (a | b).digest()
+
+    warm = timeit(lambda: (a | b).digest(), args.repeat, 50)
+    cold = timeit(union_digest_cold, args.repeat, 50)
+    record("union_digest_cold", cold, f"cache_speedup={cold / max(warm, 1e-9):.1f}x")
+
+    tree = {"w": np.ones((64, 64), np.float32), "step": 7,
+            "opt": {"m": np.zeros((64, 64), np.float32)}}
+    blob = wire.encode_payload(tree)
+    record("payload_encode", timeit(lambda: wire.encode_payload(tree),
+                                    args.repeat, 20), f"{len(blob)}B")
+    record("payload_decode", timeit(lambda: wire.decode_payload(blob),
+                                    args.repeat, 20))
+
+
+if __name__ == "__main__":
+    main()

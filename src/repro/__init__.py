@@ -1,0 +1,21 @@
+"""SerPyTor reproduction: context-aware durable graph execution on JAX.
+
+Kept intentionally light: importing ``repro`` must not pull in jax or any
+optional dependency (tests/test_wire.py asserts the import works on a bare
+stdlib+msgpack environment). Heavy subsystems load on attribute access.
+"""
+from importlib import import_module
+from typing import Any
+
+__version__ = "0.2.0"
+
+_SUBMODULES = ("core", "wire", "checkpoint", "data", "serve", "models",
+               "kernels", "train", "configs", "launch", "optim", "sharding")
+
+__all__ = ["__version__", *_SUBMODULES]
+
+
+def __getattr__(name: str) -> Any:
+    if name in _SUBMODULES:
+        return import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,7 +2,9 @@
 
 Layout: <root>/<tag>/
     manifest.json       — pytree structure, shapes, dtypes, shard map, digest
-    shard-<i>.npz.zst   — zstd-compressed npz of this host's param shards
+    shard-<i>.npz.zst   — compressed npz of this host's param shards
+                          (repro.wire tagged frame: zstd when installed,
+                          zlib fallback — self-describing either way)
 
 Design points:
   - atomic publish: writes go to <tag>.tmp/ and are renamed into place only
@@ -20,7 +22,6 @@ Design points:
 from __future__ import annotations
 
 import hashlib
-import json
 import os
 import shutil
 import threading
@@ -28,9 +29,10 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
-import zstandard as zstd
 
 import jax
+
+from repro.wire import JsonCodec, compress, decompress
 
 __all__ = ["CheckpointStore"]
 
@@ -119,7 +121,7 @@ class CheckpointStore:
 
         buf = io.BytesIO()
         np.savez(buf, **{k.replace("/", "|"): v for k, v in flat.items()})
-        comp = zstd.ZstdCompressor(level=3).compress(buf.getvalue())
+        comp = compress(buf.getvalue(), level=3)
         with open(shard_path, "wb") as fh:
             fh.write(comp)
             fh.flush()
@@ -135,8 +137,8 @@ class CheckpointStore:
             "meta": extra_meta or {},
         }
         mpath = os.path.join(tmp, "manifest.json")
-        with open(mpath, "w") as fh:
-            json.dump(manifest, fh, indent=1)
+        with open(mpath, "wb") as fh:
+            fh.write(JsonCodec().encode(manifest, pretty=True))
             fh.flush()
             os.fsync(fh.fileno())
         # atomic publish
@@ -168,8 +170,8 @@ class CheckpointStore:
         return tags[-1] if tags else None
 
     def manifest(self, tag: str) -> dict:
-        with open(os.path.join(self.root, tag, "manifest.json")) as fh:
-            return json.load(fh)
+        with open(os.path.join(self.root, tag, "manifest.json"), "rb") as fh:
+            return JsonCodec().decode(fh.read())
 
     def restore(self, tag: str, like: Any, dtype_map: Optional[Callable] = None
                 ) -> Any:
@@ -177,7 +179,7 @@ class CheckpointStore:
         path = os.path.join(self.root, tag,
                             f"shard-{self.host_index}.npz.zst")
         with open(path, "rb") as fh:
-            raw = zstd.ZstdDecompressor().decompress(fh.read())
+            raw = decompress(fh.read())
         import io
 
         npz = np.load(io.BytesIO(raw))

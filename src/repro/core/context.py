@@ -12,45 +12,23 @@ We realize the union semantics exactly: a Context is an immutable frozenset of
 overwrites a fact; ``get`` resolves a key to the *latest* fact (max lamport,
 ties broken by origin ordering) which gives deterministic reads on replay.
 
-Every value must be canonically serializable (orjson with numpy support) so
-that context digests are stable across processes — the digest is what the
-durable journal records to prove a replayed node saw the same ξ.
+Every value must be canonically serializable (see repro.wire's normalization
+rules — numpy/jax arrays, sets and bytes are handled) so that context digests
+are stable across processes — the digest is what the durable journal records
+to prove a replayed node saw the same ξ. Serialization is delegated to
+``repro.wire``: canonical bytes are backend-stable, so the digest of a
+context is the same whichever wire codec the host selected (stdlib json,
+msgpack, or the optional fast backend).
 """
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator, Mapping, Optional, Tuple
 
-import orjson
+from repro.wire import DIGEST_HEX_LEN, canonical_bytes, canonical_digest, from_canonical
 
 __all__ = ["ContextEntry", "Context", "EMPTY_CONTEXT", "canonical_digest"]
-
-
-def _canonical_bytes(value: Any) -> bytes:
-    """Canonical byte representation for hashing (sorted keys, numpy ok)."""
-    return orjson.dumps(
-        value,
-        option=orjson.OPT_SORT_KEYS | orjson.OPT_SERIALIZE_NUMPY,
-        default=_fallback_encode,
-    )
-
-
-def _fallback_encode(value: Any) -> Any:
-    # jax arrays / scalars expose __array__; tuples of ints etc. are native.
-    if hasattr(value, "__array__"):
-        import numpy as np
-
-        return np.asarray(value).tolist()
-    if isinstance(value, (set, frozenset)):
-        return sorted(value)
-    if isinstance(value, bytes):
-        return value.hex()
-    raise TypeError(f"context value of type {type(value)!r} is not serializable")
-
-
-def canonical_digest(value: Any) -> str:
-    return hashlib.sha256(_canonical_bytes(value)).hexdigest()[:16]
 
 
 @dataclass(frozen=True, order=True)
@@ -60,21 +38,41 @@ class ContextEntry:
     ``lamport`` orders facts causally: a node writing a fact stamps it with
     1 + max(lamport of every inherited fact). ``origin`` is the id of the node
     (or external source) that produced the fact.
+
+    ``value_json`` is the wire canonical form, computed once at construction —
+    entries are immutable, so it doubles as a per-entry serialization cache;
+    ``digest`` memoizes the per-entry hash the set digest is built from.
     """
 
     key: str
     origin: str
     lamport: int
     value_json: bytes  # canonical encoding — hashable, deterministic
+    _digest: Optional[str] = field(default=None, compare=False, repr=False)
 
     @property
     def value(self) -> Any:
-        return orjson.loads(self.value_json)
+        return from_canonical(self.value_json)
+
+    @property
+    def digest(self) -> str:
+        """Memoized per-entry digest (entries are frozen, so compute once)."""
+        if self._digest is None:
+            h = hashlib.sha256()
+            h.update(self.key.encode())
+            h.update(b"\x00")
+            h.update(self.origin.encode())
+            h.update(b"\x00")
+            h.update(str(self.lamport).encode())
+            h.update(b"\x00")
+            h.update(self.value_json)
+            object.__setattr__(self, "_digest", h.hexdigest()[:DIGEST_HEX_LEN])
+        return self._digest
 
     @staticmethod
     def make(key: str, value: Any, origin: str, lamport: int = 0) -> "ContextEntry":
         return ContextEntry(key=key, origin=origin, lamport=lamport,
-                            value_json=_canonical_bytes(value))
+                            value_json=canonical_bytes(value))
 
 
 class Context:
@@ -151,12 +149,19 @@ class Context:
 
     # -- identity ----------------------------------------------------------
     def digest(self) -> str:
-        """Stable digest of the full fact set (not just the resolved view)."""
+        """Stable digest of the full fact set (not just the resolved view).
+
+        Combines the memoized per-entry digests in sorted order, so after a
+        union only the 16-hex-char entry digests are hashed — no value is
+        re-serialized (the context-union hot path; see benchmarks/wire_bench.py
+        and docs/journal-format.md §4 for the exact algorithm).
+        """
         if self._digest is None:
-            payload = sorted(
-                (e.key, e.origin, e.lamport, e.value_json.decode()) for e in self._entries
-            )
-            self._digest = canonical_digest(payload)
+            h = hashlib.sha256()
+            for d in sorted(e.digest for e in self._entries):
+                h.update(d.encode())
+                h.update(b"\n")
+            self._digest = h.hexdigest()[:DIGEST_HEX_LEN]
         return self._digest
 
     # -- dunder ------------------------------------------------------------

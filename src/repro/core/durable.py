@@ -11,26 +11,28 @@ recorded output — effectively-once semantics on top of at-least-once retries.
 Large payloads (model/optimizer state) are stored by reference: the journal
 holds a ``ref`` string resolved by the checkpoint store, never raw tensors.
 
-The journal format is length-prefixed msgpack records with a crc32 per record,
-zstd-compressed payload bodies. Torn tails (a crash mid-append) are detected
-and truncated on open — an explicit durability requirement.
+The journal format is length-prefixed msgpack records with a crc32 per record
+and tagged-compression payload bodies (zstd when available, zlib fallback) —
+see docs/journal-format.md for the full spec. Torn tails (a crash mid-append)
+are detected and truncated on open — an explicit durability requirement.
+
+The payload codec lives in ``repro.wire.payload``; ``encode_payload``,
+``decode_payload`` and ``payload_digest`` are re-exported here for
+compatibility with seed-era call sites.
 """
 from __future__ import annotations
 
 import binascii
-import io
 import os
 import struct
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Tuple
 
-import msgpack
-import numpy as np
-import zstandard as zstd
+from repro.wire import decode_payload, encode_payload, payload_digest
 
-from .context import Context, canonical_digest
+from .context import Context
 
 __all__ = [
     "Journal", "JournalRecord", "ReplayCache", "encode_payload", "decode_payload",
@@ -38,68 +40,6 @@ __all__ = [
 ]
 
 _HEADER = struct.Struct("<II")  # (length, crc32)
-
-
-# --------------------------------------------------------------------------
-# payload codec: arbitrary pytrees of np/jax arrays + python scalars
-# --------------------------------------------------------------------------
-
-def _pack_default(obj: Any) -> Any:
-    if hasattr(obj, "__array__"):  # np/jax arrays
-        arr = np.asarray(obj)
-        return msgpack.ExtType(1, msgpack.packb(
-            (arr.dtype.str, arr.shape, arr.tobytes()), use_bin_type=True))
-    if isinstance(obj, complex):
-        return msgpack.ExtType(2, msgpack.packb((obj.real, obj.imag)))
-    raise TypeError(f"unpackable type {type(obj)!r}")
-
-
-def _unpack_ext(code: int, data: bytes) -> Any:
-    if code == 1:
-        dtype, shape, raw = msgpack.unpackb(data, raw=False)
-        return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape)
-    if code == 2:
-        re_, im = msgpack.unpackb(data)
-        return complex(re_, im)
-    return msgpack.ExtType(code, data)
-
-
-def encode_payload(obj: Any) -> bytes:
-    body = msgpack.packb(obj, default=_pack_default, use_bin_type=True)
-    return zstd.ZstdCompressor(level=3).compress(body)
-
-
-def decode_payload(buf: bytes) -> Any:
-    body = zstd.ZstdDecompressor().decompress(buf)
-    return msgpack.unpackb(body, ext_hook=_unpack_ext, raw=False, strict_map_key=False)
-
-
-def payload_digest(obj: Any) -> str:
-    """Digest of a payload pytree — used as the deterministic input/output id."""
-    import hashlib
-
-    h = hashlib.sha256()
-
-    def feed(x: Any) -> None:
-        if isinstance(x, Mapping):
-            for k in sorted(x, key=str):
-                h.update(str(k).encode())
-                feed(x[k])
-        elif isinstance(x, (list, tuple)):
-            h.update(b"[")
-            for v in x:
-                feed(v)
-            h.update(b"]")
-        elif hasattr(x, "__array__"):
-            arr = np.asarray(x)
-            h.update(arr.dtype.str.encode())
-            h.update(str(arr.shape).encode())
-            h.update(np.ascontiguousarray(arr).tobytes())
-        else:
-            h.update(repr(x).encode())
-
-    feed(obj)
-    return h.hexdigest()[:16]
 
 
 # --------------------------------------------------------------------------

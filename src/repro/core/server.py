@@ -12,7 +12,6 @@ that asymmetry is what the failure detector reads.
 """
 from __future__ import annotations
 
-import json
 import threading
 import time
 import traceback
@@ -20,8 +19,9 @@ import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Callable, Dict, List, Mapping, Optional
 
+from repro.wire import canonical_bytes, decode_payload, encode_payload
+
 from .context import Context
-from .durable import decode_payload, encode_payload
 from .heartbeat import HeartbeatServer
 
 __all__ = ["TaskRegistry", "WorkerServer", "WorkerClient", "InProcWorker", "Middleware"]
@@ -153,7 +153,7 @@ class _AppHandler(BaseHTTPRequestHandler):
 
     def do_GET(self) -> None:  # noqa: N802
         if self.path.rstrip("/") == "/tasks":
-            body = json.dumps(self.server.registry.names()).encode()  # type: ignore[attr-defined]
+            body = canonical_bytes(self.server.registry.names())  # type: ignore[attr-defined]
             self.send_response(200)
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()

@@ -112,6 +112,6 @@ class ShardedLoader:
 
 def batch_digest(batch: Dict[str, np.ndarray]) -> str:
     """Digest used by the durable journal to prove replayed data identity."""
-    from repro.core.durable import payload_digest
+    from repro.wire import payload_digest
 
     return payload_digest(batch)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.durable import payload_digest
+from repro.wire import payload_digest
 
 __all__ = ["Request", "Generation", "ContinuousBatcher"]
 

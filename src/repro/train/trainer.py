@@ -36,7 +36,8 @@ from repro.checkpoint.store import CheckpointStore
 from repro.configs.base import ModelConfig
 from repro.core import (Context, ContextGraph, HeartbeatServer, Journal,
                         JournalRecord, LocalExecutor, StragglerWatch,
-                        WithContext, canonical_digest, payload_digest)
+                        WithContext)
+from repro.wire import canonical_digest, payload_digest
 from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource
 from repro.models import build
 from repro.optim.adamw import AdamWConfig

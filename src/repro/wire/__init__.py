@@ -1,0 +1,119 @@
+"""repro.wire — pluggable canonical-serialization subsystem.
+
+One import point for everything that turns values into bytes:
+
+  - ``Codec`` backends: ``json`` (stdlib, zero-dependency default),
+    ``msgpack`` (binary transport, array-preserving), ``orjson`` (optional
+    fast JSON, auto-selected when importable — the ``repro[fast]`` extra);
+  - ``canonical_bytes`` / ``canonical_digest``: the backend-stable hashing
+    form (identical bytes under every codec — see docs/journal-format.md);
+  - ``encode_payload`` / ``decode_payload`` / ``payload_digest``: the
+    compressed msgpack pytree codec used by the journal and worker RPC;
+  - ``compress`` / ``decompress``: tagged-frame compression (zstd → zlib
+    fallback).
+
+Backend selection: ``REPRO_WIRE_CODEC`` env var (``json`` | ``msgpack`` |
+``orjson``) wins, else orjson when importable, else stdlib json. Override at
+runtime with :func:`set_default_codec`.
+"""
+from __future__ import annotations
+
+import json as _json
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+from .base import Codec, DIGEST_HEX_LEN, normalize, stdlib_canonical
+from .compress import compress, decompress, zstd_available
+from .json_codec import JsonCodec
+from .msgpack_codec import MsgpackCodec
+from .payload import decode_payload, encode_payload, payload_digest
+
+__all__ = [
+    "Codec", "JsonCodec", "MsgpackCodec", "DIGEST_HEX_LEN",
+    "normalize", "stdlib_canonical",
+    "available_codecs", "get_codec", "default_codec", "set_default_codec",
+    "canonical_bytes", "canonical_digest", "from_canonical",
+    "encode_payload", "decode_payload", "payload_digest",
+    "compress", "decompress", "zstd_available",
+]
+
+ENV_VAR = "REPRO_WIRE_CODEC"
+
+
+def _make_orjson() -> Codec:
+    from .orjson_codec import OrjsonCodec  # ImportError if orjson absent
+
+    return OrjsonCodec()
+
+
+_FACTORIES: Dict[str, Callable[[], Codec]] = {
+    "json": JsonCodec,
+    "msgpack": MsgpackCodec,
+    "orjson": _make_orjson,
+}
+_instances: Dict[str, Codec] = {}
+_default: Optional[Codec] = None
+
+
+def available_codecs() -> List[str]:
+    """Names of codecs importable in this environment."""
+    out = []
+    for name in _FACTORIES:
+        try:
+            get_codec(name)
+            out.append(name)
+        except ImportError:
+            pass
+    return out
+
+
+def get_codec(name: str) -> Codec:
+    if name not in _FACTORIES:
+        raise KeyError(f"unknown wire codec {name!r}; choose from {sorted(_FACTORIES)}")
+    if name not in _instances:
+        _instances[name] = _FACTORIES[name]()
+    return _instances[name]
+
+
+def default_codec() -> Codec:
+    """The active codec: $REPRO_WIRE_CODEC > orjson-if-available > json."""
+    global _default
+    if _default is None:
+        forced = os.environ.get(ENV_VAR, "").strip()
+        if forced:
+            _default = get_codec(forced)
+        else:
+            try:
+                _default = get_codec("orjson")
+            except ImportError:
+                _default = get_codec("json")
+    return _default
+
+
+def set_default_codec(name: Optional[str]) -> Codec:
+    """Force the process-wide default codec (None re-runs auto-selection)."""
+    global _default
+    _default = None if name is None else get_codec(name)
+    return default_codec()
+
+
+# -- canonical form (backend-stable: same bytes whatever the codec) ----------
+
+def canonical_bytes(value: Any) -> bytes:
+    return default_codec().canonical_bytes(value)
+
+
+def canonical_digest(value: Any) -> str:
+    return default_codec().canonical_digest(value)
+
+
+try:
+    from orjson import loads as _canonical_loads  # fastest JSON parser present
+except ImportError:
+    _canonical_loads = _json.loads
+
+
+def from_canonical(data: bytes) -> Any:
+    """Parse canonical bytes. Canonical form is always JSON, so this is
+    codec-independent — a msgpack-transport host still parses digest bytes."""
+    return _canonical_loads(data)

@@ -1,0 +1,103 @@
+"""Codec protocol + canonicalization rules shared by every wire backend.
+
+The wire subsystem separates two concerns that the seed conflated:
+
+  1. **Transport encoding** (``Codec.encode`` / ``Codec.decode``) — how a
+     value travels between processes. Backends are free to pick any
+     self-describing byte format (JSON text, msgpack binary, ...).
+  2. **Canonical bytes** (``Codec.canonical_bytes``) — the *hashing* form.
+     This is defined once, independent of the transport backend: UTF-8 JSON
+     of the normalized value tree, sorted keys, compact separators. Every
+     codec MUST produce byte-identical canonical bytes for the same value —
+     that is the backend-stability guarantee the durable journal relies on
+     (a digest recorded under orjson replays under stdlib json and vice
+     versa). See docs/journal-format.md §3.
+
+Normalization rules (applied before canonical encoding):
+  - mappings     → dict, keys sorted lexicographically (non-``str`` keys are
+    a ``TypeError`` — coercion would collide distinct values on one digest)
+  - list / tuple → list
+  - set / frozenset → sorted list
+  - bytes / bytearray → lowercase hex string
+  - objects with ``__array__`` (numpy / jax arrays and scalars) → nested
+    lists of native scalars via ``np.asarray(x).tolist()``
+  - NaN / ±Inf floats → ``None`` (matches orjson's observable behaviour,
+    which the seed's digests inherited)
+  - str / int / float / bool / None pass through
+Anything else raises ``TypeError``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+from abc import ABC, abstractmethod
+from typing import Any, Mapping
+
+__all__ = ["Codec", "normalize", "stdlib_canonical", "DIGEST_HEX_LEN"]
+
+DIGEST_HEX_LEN = 16  # sha256 truncated to 64 bits of hex — the journal id width
+
+
+def normalize(value: Any) -> Any:
+    """Reduce ``value`` to a JSON-native tree with deterministic ordering."""
+    if value is None or isinstance(value, (str, bool, int)):
+        return value
+    if isinstance(value, float):
+        return value if math.isfinite(value) else None
+    if isinstance(value, Mapping):
+        for k in value:
+            if not isinstance(k, str):
+                # coercing with str(k) would let {1: 'a'} and {'1': 'a'}
+                # collide on one digest — reject, as the seed encoder did
+                raise TypeError(
+                    f"mapping keys must be str for canonical encoding, "
+                    f"got {type(k).__name__!r}")
+        return {k: normalize(value[k]) for k in sorted(value)}
+    if isinstance(value, (list, tuple)):
+        return [normalize(v) for v in value]
+    if isinstance(value, (set, frozenset)):
+        return [normalize(v) for v in sorted(value)]
+    if isinstance(value, (bytes, bytearray)):
+        return bytes(value).hex()
+    if hasattr(value, "__array__"):
+        import numpy as np
+
+        return normalize(np.asarray(value).tolist())
+    raise TypeError(f"wire value of type {type(value)!r} is not serializable")
+
+
+def stdlib_canonical(tree: Any) -> bytes:
+    """Canonical JSON bytes of an already-normalized tree (stdlib encoder)."""
+    return json.dumps(tree, ensure_ascii=False, allow_nan=False,
+                      separators=(",", ":")).encode("utf-8")
+
+
+class Codec(ABC):
+    """A wire backend: transport encoding + the shared canonical form."""
+
+    name: str = "abstract"
+
+    @abstractmethod
+    def encode(self, obj: Any) -> bytes:
+        """Transport encoding — need not be canonical, must round-trip."""
+
+    @abstractmethod
+    def decode(self, data: bytes) -> Any:
+        """Inverse of :meth:`encode`."""
+
+    def canonical_bytes(self, value: Any) -> bytes:
+        """Backend-stable hashing form: canonical JSON of the normalized tree.
+
+        Produced by the stdlib encoder for EVERY backend. Transport codecs
+        must not substitute their own JSON writer here — e.g. orjson formats
+        ``1e-05`` as ``1e-5`` and rejects >64-bit ints, which would fork
+        digests across hosts (byte-identity enforced by tests/test_wire.py).
+        """
+        return stdlib_canonical(normalize(value))
+
+    def canonical_digest(self, value: Any) -> str:
+        return hashlib.sha256(self.canonical_bytes(value)).hexdigest()[:DIGEST_HEX_LEN]
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} name={self.name!r}>"

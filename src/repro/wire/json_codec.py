@@ -1,0 +1,28 @@
+"""Zero-dependency stdlib JSON codec — the default wire backend.
+
+Transport encoding IS the canonical form (sorted keys, compact, UTF-8), so
+``encode(x) == canonical_bytes(x)`` here. ``pretty=True`` produces the
+indented human-readable variant used for on-disk manifests.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from .base import Codec, normalize, stdlib_canonical
+
+__all__ = ["JsonCodec"]
+
+
+class JsonCodec(Codec):
+    name = "json"
+
+    def encode(self, obj: Any, pretty: bool = False) -> bytes:
+        tree = normalize(obj)
+        if pretty:
+            return json.dumps(tree, ensure_ascii=False, allow_nan=False,
+                              indent=1).encode("utf-8")
+        return stdlib_canonical(tree)
+
+    def decode(self, data: bytes) -> Any:
+        return json.loads(data)

@@ -1,0 +1,58 @@
+"""Binary msgpack codec — the fast transport backend for cross-host RPC.
+
+Transport encoding preserves numpy/jax arrays losslessly via ExtType frames
+(dtype, shape, raw buffer) instead of flattening them to lists — this is what
+the worker HTTP transport and the durable journal ship. Canonical bytes are
+inherited from :class:`Codec`: msgpack maps have no canonical key order, so
+the hashing form stays the shared canonical JSON — digests computed on a
+msgpack-transport host match digests computed anywhere else.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import msgpack
+
+from .base import Codec
+
+__all__ = ["MsgpackCodec", "EXT_NDARRAY", "EXT_COMPLEX", "pack_default", "unpack_ext"]
+
+EXT_NDARRAY = 1
+EXT_COMPLEX = 2
+
+
+def pack_default(obj: Any) -> Any:
+    if hasattr(obj, "__array__"):  # np/jax arrays and scalars
+        import numpy as np
+
+        arr = np.asarray(obj)
+        return msgpack.ExtType(EXT_NDARRAY, msgpack.packb(
+            (arr.dtype.str, arr.shape, arr.tobytes()), use_bin_type=True))
+    if isinstance(obj, complex):
+        return msgpack.ExtType(EXT_COMPLEX, msgpack.packb((obj.real, obj.imag)))
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    raise TypeError(f"unpackable type {type(obj)!r}")
+
+
+def unpack_ext(code: int, data: bytes) -> Any:
+    if code == EXT_NDARRAY:
+        import numpy as np
+
+        dtype, shape, raw = msgpack.unpackb(data, raw=False)
+        return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape)
+    if code == EXT_COMPLEX:
+        re_, im = msgpack.unpackb(data)
+        return complex(re_, im)
+    return msgpack.ExtType(code, data)
+
+
+class MsgpackCodec(Codec):
+    name = "msgpack"
+
+    def encode(self, obj: Any) -> bytes:
+        return msgpack.packb(obj, default=pack_default, use_bin_type=True)
+
+    def decode(self, data: bytes) -> Any:
+        return msgpack.unpackb(data, ext_hook=unpack_ext, raw=False,
+                               strict_map_key=False)

@@ -1,0 +1,32 @@
+"""orjson codec — optional fast JSON backend (``pip install repro[fast]``).
+
+Importing this module raises ImportError when orjson is absent; the registry
+in ``repro.wire`` gates on that, so the rest of the system never needs orjson.
+
+orjson accelerates *transport* encode/decode only. ``canonical_bytes`` is
+deliberately NOT overridden: orjson's Rust float writer formats scientific
+notation differently from Python's repr (``1e-5`` vs ``1e-05``) and rejects
+ints outside 64 bits, so reusing it for the hashing form would break the
+backend-stability guarantee on exactly the hosts that install the fast
+extra. The canonical form is produced by one encoder everywhere — see
+``Codec.canonical_bytes`` in base.py and docs/journal-format.md §3.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import orjson
+
+from .base import Codec, normalize
+
+__all__ = ["OrjsonCodec"]
+
+
+class OrjsonCodec(Codec):
+    name = "orjson"
+
+    def encode(self, obj: Any) -> bytes:
+        return orjson.dumps(normalize(obj))
+
+    def decode(self, data: bytes) -> Any:
+        return orjson.loads(data)

@@ -1,0 +1,61 @@
+"""Payload codec: arbitrary pytrees of np/jax arrays + python scalars.
+
+This is the journal/RPC *body* format (moved here from ``core.durable`` so
+every layer shares one implementation): msgpack with ExtType array frames,
+wrapped in a tagged compression frame (see :mod:`repro.wire.compress`).
+
+``payload_digest`` is the deterministic identity of a payload pytree — it
+feeds sha256 directly from array buffers (no serialization round-trip), so
+it is compression- and codec-independent by construction.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Mapping
+
+import msgpack
+
+from .base import DIGEST_HEX_LEN
+from .compress import compress, decompress
+from .msgpack_codec import pack_default, unpack_ext
+
+__all__ = ["encode_payload", "decode_payload", "payload_digest"]
+
+
+def encode_payload(obj: Any, level: int = 3) -> bytes:
+    body = msgpack.packb(obj, default=pack_default, use_bin_type=True)
+    return compress(body, level=level)
+
+
+def decode_payload(buf: bytes) -> Any:
+    body = decompress(buf)
+    return msgpack.unpackb(body, ext_hook=unpack_ext, raw=False,
+                           strict_map_key=False)
+
+
+def payload_digest(obj: Any) -> str:
+    """Digest of a payload pytree — used as the deterministic input/output id."""
+    import numpy as np
+
+    h = hashlib.sha256()
+
+    def feed(x: Any) -> None:
+        if isinstance(x, Mapping):
+            for k in sorted(x, key=str):
+                h.update(str(k).encode())
+                feed(x[k])
+        elif isinstance(x, (list, tuple)):
+            h.update(b"[")
+            for v in x:
+                feed(v)
+            h.update(b"]")
+        elif hasattr(x, "__array__"):
+            arr = np.asarray(x)
+            h.update(arr.dtype.str.encode())
+            h.update(str(arr.shape).encode())
+            h.update(np.ascontiguousarray(arr).tobytes())
+        else:
+            h.update(repr(x).encode())
+
+    feed(obj)
+    return h.hexdigest()[:DIGEST_HEX_LEN]

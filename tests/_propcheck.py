@@ -1,0 +1,51 @@
+"""Optional-hypothesis shim: property tests skip cleanly when hypothesis is
+absent (bare environment), and run normally when it is installed.
+
+Usage in a test module::
+
+    from _propcheck import HAS_HYPOTHESIS, given, settings, st
+
+When hypothesis is missing, ``@given(...)`` turns the test into a skipped
+test (visible in the report), ``@settings(...)`` is a no-op, and ``st.*``
+strategy constructors return inert placeholders so module-level strategy
+definitions still evaluate.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = getattr(fn, "__name__", "property_test")
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _InertStrategy:
+        """Absorbs any strategy-building call chain without side effects."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *_args, **_kwargs):
+            return self
+
+    st = _InertStrategy()
+
+__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st"]

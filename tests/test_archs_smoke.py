@@ -112,7 +112,7 @@ def test_param_count_positive_and_annotated(arch, built):
     n = param_count_from_tree(params)
     assert n > 1e5
     # every param leaf has a logical-axes annotation of matching rank
-    leaves_p = jax.tree.leaves_with_path(params)
+    leaves_p = jax.tree_util.tree_leaves_with_path(params)
     flat_axes = {jax.tree_util.keystr(kp): v for kp, v in
                  jax.tree_util.tree_leaves_with_path(
                      axes, is_leaf=lambda x: isinstance(x, tuple))}

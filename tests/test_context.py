@@ -2,8 +2,7 @@
 import string
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import HAS_HYPOTHESIS, given, settings, st
 
 from repro.core import Context, ContextEntry, EMPTY_CONTEXT
 

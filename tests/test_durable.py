@@ -4,8 +4,7 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import HAS_HYPOTHESIS, given, settings, st
 
 from repro.core import (Context, ContextGraph, Journal, JournalRecord, LocalExecutor,
                         ReplayCache, WithContext, decode_payload, encode_payload,

@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import HAS_HYPOTHESIS, given, settings, st
 
 from repro.checkpoint.store import CheckpointStore
 from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource

@@ -1,0 +1,271 @@
+"""repro.wire: codec round-trips, backend-stable digests, compression,
+and the no-orjson import regression the seed shipped with."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import wire
+from repro.core import Context, ContextEntry
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _codecs():
+    out = [wire.get_codec("json"), wire.get_codec("msgpack")]
+    try:
+        out.append(wire.get_codec("orjson"))
+    except ImportError:
+        pass
+    return out
+
+
+CODECS = _codecs()
+IDS = [c.name for c in CODECS]
+
+SAMPLES = [
+    None,
+    True,
+    -17,
+    3.5,
+    "héllo ∪ wörld",
+    [1, 2, [3, {"k": "v"}]],
+    {"b": 1, "a": [None, 2.25], "c": {"nested": True}},
+    {"weird keys": {"1": "a", "0": "b"}},
+]
+
+
+# -- transport round-trips ---------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS, ids=IDS)
+@pytest.mark.parametrize("value", SAMPLES, ids=range(len(SAMPLES)))
+def test_roundtrip(codec, value):
+    assert codec.decode(codec.encode(value)) == value
+
+
+def test_msgpack_preserves_arrays():
+    codec = wire.get_codec("msgpack")
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    out = codec.decode(codec.encode({"x": arr, "c": 1 + 2j}))
+    np.testing.assert_array_equal(out["x"], arr)
+    assert out["x"].dtype == np.float32
+    assert out["c"] == 1 + 2j
+
+
+# -- the backend-stability guarantee ----------------------------------------
+
+@pytest.mark.parametrize("value", SAMPLES + [
+    {"arr": np.arange(6).reshape(2, 3)},
+    {"s": {3, 1, 2}, "b": b"\x00\xff"},
+], ids=range(len(SAMPLES) + 2))
+def test_canonical_bytes_identical_across_codecs(value):
+    blobs = {c.name: c.canonical_bytes(value) for c in CODECS}
+    assert len(set(blobs.values())) == 1, blobs
+    digests = {c.name: c.canonical_digest(value) for c in CODECS}
+    assert len(set(digests.values())) == 1, digests
+
+
+def test_canonical_is_insertion_order_independent():
+    a = wire.canonical_digest({"x": 1, "y": 2})
+    b = wire.canonical_digest({"y": 2, "x": 1})
+    assert a == b
+
+
+def test_from_canonical_inverts_canonical_bytes():
+    v = {"a": [1, 2.5, None, "s"], "b": {"k": False}}
+    assert wire.from_canonical(wire.canonical_bytes(v)) == v
+
+
+def test_nonfinite_floats_normalize_to_null():
+    assert wire.from_canonical(wire.canonical_bytes(float("nan"))) is None
+    assert wire.from_canonical(wire.canonical_bytes(float("inf"))) is None
+
+
+def test_unserializable_raises():
+    with pytest.raises(TypeError):
+        wire.canonical_bytes(object())
+
+
+def test_non_str_mapping_keys_rejected():
+    """str(key) coercion would collide {1: 'a'} with {'1': 'a'} on one
+    digest — canonical encoding must refuse instead."""
+    for codec in CODECS:
+        with pytest.raises(TypeError, match="keys must be str"):
+            codec.canonical_bytes({1: "a"})
+
+
+@pytest.mark.parametrize("value", [1e-05, 1e16, [1e-300, -2.5e-08], 2**70],
+                        ids=["exp-neg", "exp-pos", "tiny", "bigint"])
+def test_canonical_float_and_bigint_formatting(value):
+    """Values whose formatting differs between JSON writers (orjson emits
+    1e-5, stdlib 1e-05; orjson rejects >64-bit ints) — every backend must
+    emit the single stdlib canonical form."""
+    blobs = {c.name: c.canonical_bytes(value) for c in CODECS}
+    assert len(set(blobs.values())) == 1, blobs
+    assert wire.from_canonical(wire.canonical_bytes(value)) == value
+
+
+# -- codec selection ---------------------------------------------------------
+
+def test_default_codec_selection_and_override():
+    prev = wire.default_codec().name
+    try:
+        assert wire.set_default_codec("msgpack").name == "msgpack"
+        assert wire.default_codec().name == "msgpack"
+        # canonical form stays JSON even under a binary transport codec
+        assert wire.canonical_bytes({"a": 1}) == b'{"a":1}'
+        auto = wire.set_default_codec(None)
+        assert auto.name in ("orjson", "json")
+    finally:
+        wire.set_default_codec(prev)
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(KeyError):
+        wire.get_codec("bson")
+
+
+def test_available_codecs_contains_builtins():
+    names = wire.available_codecs()
+    assert "json" in names and "msgpack" in names
+
+
+# -- compression -------------------------------------------------------------
+
+def test_compress_roundtrip_and_tagging():
+    from repro.wire.compress import TAG_ZLIB, TAG_ZSTD
+
+    data = b"serpytor " * 500
+    frame = wire.compress(data)
+    assert frame[0] in (TAG_ZLIB, TAG_ZSTD)
+    assert wire.decompress(frame) == data
+    assert len(frame) < len(data)
+
+
+def test_decompress_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown compression tag"):
+        wire.decompress(b"\x7fnot-a-frame")
+
+
+@pytest.mark.skipif(wire.zstd_available(),
+                    reason="install-hint path only exists without zstandard")
+def test_legacy_zstd_frame_gets_actionable_error():
+    """A seed-era untagged zstd frame (magic 0x28B52FFD) on a zlib-only host
+    must point at the zstandard install, not claim an unknown tag."""
+    with pytest.raises(ImportError, match="zstandard"):
+        wire.decompress(b"\x28\xb5\x2f\xfd fake-zstd-body")
+
+
+# -- payload codec -----------------------------------------------------------
+
+def test_payload_roundtrip_pytree():
+    tree = {"w": np.ones((4, 4), np.float32), "step": 7,
+            "nested": [np.arange(3), {"b": 2.5}]}
+    out = wire.decode_payload(wire.encode_payload(tree))
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    np.testing.assert_array_equal(out["nested"][0], np.arange(3))
+    assert out["step"] == 7 and out["nested"][1]["b"] == 2.5
+
+
+def test_payload_digest_deterministic_and_sensitive():
+    a = {"x": np.arange(5, dtype=np.int32)}
+    b = {"x": np.arange(5, dtype=np.int32)}
+    c = {"x": np.arange(5, dtype=np.int64)}
+    assert wire.payload_digest(a) == wire.payload_digest(b)
+    assert wire.payload_digest(a) != wire.payload_digest(c)
+
+
+# -- context digest caching over wire ---------------------------------------
+
+def test_entry_digest_memoized():
+    e = ContextEntry.make("k", {"v": 1}, origin="o")
+    d1 = e.digest
+    assert e._digest == d1  # cached on first access
+    assert e.digest == d1
+
+
+def test_context_digest_stable_across_codecs():
+    digests = set()
+    prev = wire.default_codec().name
+    try:
+        for c in CODECS:
+            wire.set_default_codec(c.name)
+            ctx = Context.origin({"a": 1, "arr": [1, 2, 3]}).with_data(
+                {"b": "x"}, origin="n1")
+            digests.add(ctx.digest())
+    finally:
+        wire.set_default_codec(prev)
+    assert len(digests) == 1, digests
+
+
+def test_union_reuses_entry_digests():
+    a = Context.origin({"a": 1})
+    b = Context.origin({"b": 2})
+    u = a | b
+    entry_digests = {e.digest for e in u}
+    for e in list(a) + list(b):
+        assert e.digest in entry_digests  # same memoized entries, not copies
+
+
+# -- regression: bare-environment import (the seed break) --------------------
+
+_BLOCKER = """
+import sys
+
+class _Block:
+    BLOCKED = {blocked!r}
+    def find_spec(self, name, path=None, target=None):
+        if name in self.BLOCKED:
+            raise ImportError(f"{{name}} blocked for bare-environment test")
+        return None
+
+sys.meta_path.insert(0, _Block())
+import repro
+from repro import wire
+assert wire.default_codec().name == "json", wire.default_codec().name
+from repro.core import Context
+ctx = Context.origin({{"env": "bare", "n": [1, 2]}})
+assert len(ctx.digest()) == 16
+rt = Context.from_wire(ctx.to_wire())
+assert rt == ctx and rt.digest() == ctx.digest()
+print("BARE-OK", ctx.digest())
+"""
+
+
+def test_import_and_digest_without_orjson_or_zstd():
+    """`import repro` + context digests must work with orjson AND zstandard
+    blocked — the zero-dependency promise the seed broke."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("REPRO_WIRE_CODEC", None)
+    code = _BLOCKER.format(blocked=("orjson", "zstandard"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "BARE-OK" in proc.stdout
+
+
+def test_env_var_forces_codec():
+    env = dict(os.environ, PYTHONPATH=SRC, REPRO_WIRE_CODEC="msgpack")
+    code = ("from repro import wire; "
+            "assert wire.default_codec().name == 'msgpack'; print('ENV-OK')")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "ENV-OK" in proc.stdout
+
+
+def test_digest_matches_bare_subprocess():
+    """Digest computed in THIS process (whatever codec auto-selected) equals
+    the digest computed in a subprocess with only stdlib json available —
+    the cross-host stability claim of docs/journal-format.md."""
+    ctx = Context.origin({"env": "bare", "n": [1, 2]})
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("REPRO_WIRE_CODEC", None)
+    code = _BLOCKER.format(blocked=("orjson", "zstandard"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    bare_digest = proc.stdout.strip().split()[-1]
+    assert bare_digest == ctx.digest()
