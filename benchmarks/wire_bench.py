@@ -39,7 +39,11 @@ def timeit(fn: Callable[[], None], repeat: int, inner: int = 1) -> float:
     return statistics.median(ts)
 
 
+RESULTS: list = []  # (name, median_us, derived) — dumped by --json
+
+
 def record(name: str, us: float, derived: str = "") -> None:
+    RESULTS.append({"name": name, "median_us": round(us, 2), "derived": derived})
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 
@@ -63,7 +67,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--repeat", type=int, default=7)
     ap.add_argument("--entries", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, assert-no-crash (the CI gate)")
+    ap.add_argument("--json", type=str, default="",
+                    help="write results to this path")
     args = ap.parse_args()
+    if args.smoke:
+        args.repeat, args.entries = 1, 8
 
     payload = fact_payload(3)
     codecs = wire.available_codecs()
@@ -113,6 +123,14 @@ def main() -> None:
                                     args.repeat, 20), f"{len(blob)}B")
     record("payload_decode", timeit(lambda: wire.decode_payload(blob),
                                     args.repeat, 20))
+
+    if args.json:
+        import json as _json
+
+        with open(args.json, "w") as fh:
+            _json.dump({"codecs": codecs, "zstd": wire.zstd_available(),
+                        "results": RESULTS}, fh, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -6,10 +6,16 @@
  3. verifies the resumed trajectory equals an uninterrupted reference run
     (bitwise data determinism + journal digest verification)
 
-Run:  PYTHONPATH=src python examples/durable_recovery.py
+Run:  PYTHONPATH=src python examples/durable_recovery.py [--base-dir DIR]
+
+Writes to a throwaway temp directory by default; pass --base-dir (or set
+SERPYTOR_DEMO_DIR) to keep the journals/checkpoints somewhere inspectable.
 """
+import argparse
 import dataclasses
+import os
 import shutil
+import tempfile
 
 import numpy as np
 
@@ -34,17 +40,32 @@ class CrashAt(Exception):
     pass
 
 
-def main() -> None:
-    for d in ("runs/recovery_demo", "runs/recovery_ref"):
+def main(base_dir: str = "") -> None:
+    base = base_dir or os.environ.get("SERPYTOR_DEMO_DIR") or ""
+    ephemeral = not base
+    if ephemeral:
+        base = tempfile.mkdtemp(prefix="serpytor-recovery-")
+    try:
+        _run_demo(base)
+    finally:
+        if ephemeral:  # throwaway means throwaway: don't leak ~100 MB in /tmp
+            shutil.rmtree(base, ignore_errors=True)
+
+
+def _run_demo(base: str) -> None:
+    demo_dir = os.path.join(base, "recovery_demo")
+    ref_dir = os.path.join(base, "recovery_ref")
+    print(f"run artifacts under: {base}")
+    for d in (demo_dir, ref_dir):
         shutil.rmtree(d, ignore_errors=True)
 
     print("=== reference run (uninterrupted, 20 steps) ===")
-    ref = Trainer(CFG, tc("runs/recovery_ref", 20))
+    ref = Trainer(CFG, tc(ref_dir, 20))
     ref.train()
     ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log}
 
     print("\n=== run A: crash after step 11 ===")
-    crash = Trainer(CFG, tc("runs/recovery_demo", 20))
+    crash = Trainer(CFG, tc(demo_dir, 20))
     orig = crash._train_step
 
     def crashing_step(params, opt_state, batch):
@@ -63,7 +84,7 @@ def main() -> None:
         crash.journal.close()
 
     print("\n=== run B: restart in the same run_dir ===")
-    resumed = Trainer(CFG, tc("runs/recovery_demo", 20))
+    resumed = Trainer(CFG, tc(demo_dir, 20))
     print("latest snapshot:", resumed.store.latest())
     resumed.train()
     got = {m["step"]: m["loss"] for m in resumed.metrics_log}
@@ -78,4 +99,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description="durable-recovery demo")
+    ap.add_argument("--base-dir", default="",
+                    help="where to write run artifacts (default: a fresh tempdir)")
+    main(ap.parse_args().base_dir)

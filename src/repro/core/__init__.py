@@ -11,7 +11,8 @@ from .gateway import (AllocationError, Gateway, TaskRequest, WorkerHandle,
                       context_affinity, least_loaded, power_of_two, round_robin)
 from .graph import ContextGraph, CycleError, Node, UnionNode, toposort_levels
 from .heartbeat import HeartbeatServer, check_heartbeat, telemetry
-from .server import InProcWorker, TaskRegistry, WorkerClient, WorkerServer
+from .server import (FlakyWorker, InProcWorker, TaskRegistry, WorkerClient,
+                     WorkerServer)
 
 __all__ = [
     "Context", "ContextEntry", "EMPTY_CONTEXT", "canonical_digest",
@@ -23,5 +24,5 @@ __all__ = [
     "round_robin", "least_loaded", "power_of_two", "context_affinity",
     "ContextGraph", "Node", "UnionNode", "CycleError", "toposort_levels",
     "HeartbeatServer", "check_heartbeat", "telemetry",
-    "TaskRegistry", "WorkerServer", "WorkerClient", "InProcWorker",
+    "TaskRegistry", "WorkerServer", "WorkerClient", "InProcWorker", "FlakyWorker",
 ]

@@ -27,6 +27,7 @@ import os
 import struct
 import threading
 import time
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Tuple
 
@@ -48,7 +49,7 @@ _HEADER = struct.Struct("<II")  # (length, crc32)
 
 @dataclass
 class JournalRecord:
-    kind: str                      # RUN_START | NODE_START | NODE_COMMIT | NODE_FAIL | RUN_END | CKPT
+    kind: str                      # RUN_START | NODE_START | NODE_COMMIT | NODE_REQUEUE | NODE_FAIL | RUN_END | CKPT
     node_id: str = ""
     context_digest: str = ""
     input_digest: str = ""
@@ -133,6 +134,14 @@ class Journal:
         self._fh.close()
 
     # -- read -----------------------------------------------------------------
+    def kinds(self) -> Dict[str, int]:
+        """Histogram of record kinds — cheap integrity/debug view of a run.
+
+        E.g. a fault-tolerant cluster run reads as RUN_START=1, NODE_START=n,
+        NODE_REQUEUE=k (worker evictions), NODE_COMMIT=n, RUN_END=1.
+        """
+        return dict(Counter(rec.kind for rec in self.records()))
+
     def records(self) -> Iterator[JournalRecord]:
         with open(self.path, "rb") as fh:
             data = fh.read()

@@ -12,15 +12,21 @@ deterministic member order, with intra-group outputs injected among members.
 
 ``LocalExecutor`` runs tasks on a thread pool with dependency-counted
 readiness (maximum overlap). ``ClusterExecutor`` dispatches named tasks
-through a Gateway to remote/in-proc workers, with speculative re-execution
-of stragglers (first commit wins — duplicates are idempotent by replay).
+through a Gateway to remote/in-proc workers with the same barrier-free
+dependency-counted readiness, event-driven completion consumption, global
+straggler speculation, and requeue-on-eviction fault tolerance (first
+commit wins — duplicates are idempotent by replay). The full dispatch/
+readiness/eviction/speculation state machine is specified in
+docs/distributed-execution.md.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
+from collections import deque
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from .context import Context, EMPTY_CONTEXT
@@ -32,6 +38,8 @@ from .graph import ContextGraph, Node, UnionNode
 __all__ = ["WithContext", "ExecutionReport", "LocalExecutor", "ClusterExecutor"]
 
 _INLINE_LIMIT = 1 << 20  # 1 MiB: larger outputs must go through the spill store
+
+_RUN_TOKENS = itertools.count()  # distinguishes concurrent runs on one gateway
 
 
 @dataclass
@@ -84,20 +92,36 @@ class _BaseExecutor:
             self.journal.append(rec)
         self.replay.record(rec)
 
-    def _lookup(self, node_id: str, ctx_digest: str, in_digest: str) -> Optional[Any]:
+    @staticmethod
+    def _readiness(exec_nodes: Mapping[str, Any],
+                   member_to_group: Mapping[str, str]):
+        """Dependency-counted scheduling state shared by both executors:
+        (gdeps, deps_left, children)."""
+        gdeps = ContextGraph.group_deps(exec_nodes, member_to_group)
+        deps_left = {nid: len(gdeps[nid]) for nid in exec_nodes}
+        children: Dict[str, List[str]] = {nid: [] for nid in exec_nodes}
+        for nid in exec_nodes:
+            for d in gdeps[nid]:
+                children[d].append(nid)
+        return gdeps, deps_left, children
+
+    def _lookup(self, node_id: str, ctx_digest: str, in_digest: str
+                ) -> "Optional[_Found]":
         rec = self.replay.lookup(node_id, ctx_digest, in_digest)
         if rec is None:
             return None
+        facts = rec.meta.get("facts")
         if rec.ref:
             if self._spill_get is None:
                 return None  # cannot resolve; re-execute
-            return _Found(self._spill_get(rec.ref))
-        return _Found(rec.payload)
+            return _Found(self._spill_get(rec.ref), facts)
+        return _Found(rec.payload, facts)
 
 
 @dataclass
 class _Found:
     value: Any
+    facts: Optional[Mapping[str, Any]] = None  # journaled WithContext facts
 
 
 def _inject_inputs(node: Node, outputs: Mapping[str, Any],
@@ -131,12 +155,7 @@ class LocalExecutor(_BaseExecutor):
         lock = threading.Lock()
 
         # dependency counting for maximal overlap (scheduling-level deps)
-        gdeps = ContextGraph.group_deps(exec_nodes, member_to_group)
-        deps_left = {nid: len(gdeps[nid]) for nid in exec_nodes}
-        children: Dict[str, List[str]] = {nid: [] for nid in exec_nodes}
-        for nid in exec_nodes:
-            for d in gdeps[nid]:
-                children[d].append(nid)
+        gdeps, deps_left, children = self._readiness(exec_nodes, member_to_group)
 
         if self.journal is not None:
             self.journal.append(JournalRecord(kind="RUN_START", node_id=graph.name,
@@ -203,12 +222,10 @@ class LocalExecutor(_BaseExecutor):
         in_d = payload_digest(inputs)
         hit = self._lookup(node.id, ctx_d, in_d)
         if hit is not None:
-            rec = self.replay.lookup(node.id, ctx_d, in_d)
-            facts = rec.meta.get("facts") if rec is not None else None
-            if facts:
+            if hit.facts:
                 # re-emit journaled context facts so downstream ξ digests
                 # match the original run exactly (replay completeness)
-                return WithContext(hit.value, facts), True
+                return WithContext(hit.value, hit.facts), True
             return hit.value, True
         if node.fn is None:
             raise ValueError(f"node {node.id!r} has no callable")
@@ -281,88 +298,251 @@ class LocalExecutor(_BaseExecutor):
             executed.append(group.id)
 
 
+@dataclass
+class _Inflight:
+    """Scheduler-side state of a node currently dispatched through the gateway."""
+
+    node: Node
+    ctx: Context
+    ctx_digest: str
+    input_digest: str
+    inputs: Dict[str, Any]
+    futures: List[Future] = field(default_factory=list)  # still-live attempts
+    copies: int = 0    # total submissions ever made (speculation budget)
+    attempts: int = 0  # gateway-level requeues observed (evictions, failures)
+
+
 class ClusterExecutor(_BaseExecutor):
-    """Gateway-dispatched executor: nodes name registry tasks on workers.
+    """Gateway-dispatched executor: barrier-free dependency-counted dataflow.
 
     Node.fn may be a string (registry task name) — required for remote
     dispatch — or a callable (executed gateway-side, e.g. reductions).
-    Stragglers get a speculative duplicate after ``straggler.threshold ×
-    median`` elapsed; the first completion wins.
+
+    Scheduling is event-driven, not staged: a node is dispatched the moment
+    its last dependency commits (no toposort-level barriers), and completions
+    are consumed from a condition-variable pump fed by future callbacks — the
+    scheduler blocks in ``Condition.wait``, never in a sleep-poll loop.
+
+    Straggler speculation is global rather than per-level: on every
+    ``speculation_tick_s`` wakeup without completions, any inflight node whose
+    elapsed time exceeds ``straggler.threshold × median`` of same-task
+    completions gets a duplicate on another worker, up to ``max_copies``.
+    The first completion wins; duplicates are idempotent by durable replay.
+
+    Fault tolerance: when the gateway evicts a dead worker (heartbeat lost or
+    system-level failure), in-flight requests are requeued on survivors and
+    each requeue is journaled as a ``NODE_REQUEUE`` record carrying the
+    attempt count. See docs/distributed-execution.md for the state machine.
     """
 
-    def __init__(self, gateway: Gateway, speculative: bool = True, **kw):
+    def __init__(self, gateway: Gateway, speculative: bool = True,
+                 speculation_tick_s: float = 0.05, max_copies: int = 3, **kw):
         super().__init__(**kw)
         self.gateway = gateway
         self.speculative = speculative
+        self.speculation_tick_s = speculation_tick_s
+        self.max_copies = max_copies
         self.straggler = StragglerWatch()
 
     def run(self, graph: ContextGraph) -> ExecutionReport:
         t0 = time.time()
-        levels, exec_nodes, member_to_group = graph.schedule()
+        _levels, exec_nodes, member_to_group = graph.schedule()  # validates DAG
+        gdeps, deps_left, children = self._readiness(exec_nodes, member_to_group)
+        run_token = f"{graph.name}#{next(_RUN_TOKENS)}"  # this run's requests
+
         outputs: Dict[str, Any] = {}
         out_ctx: Dict[str, Context] = {}
         replayed: List[str] = []
         executed: List[str] = []
+        ready = deque(sorted(nid for nid, c in deps_left.items() if c == 0))
+        cv = threading.Condition()
+        completions: deque = deque()  # (nid, Future) pairs, fed by callbacks
+        inflight: Dict[str, _Inflight] = {}
+
         if self.journal is not None:
             self.journal.append(JournalRecord(kind="RUN_START", node_id=graph.name,
                                               meta={"nodes": len(exec_nodes)}))
-        for level in levels:
-            pending: Dict[str, Tuple[Node, Context, str, str, List[Future], float]] = {}
-            for nid in level:
-                node = exec_nodes[nid]
-                if isinstance(node, UnionNode):
-                    raise NotImplementedError(
-                        "union nodes execute locally; contract before remote dispatch")
-                parents = [out_ctx[member_to_group.get(d, d)] for d in node.deps]
-                ctx = Context.union_all(parents) if parents else graph.origin_context
-                if node.data:
-                    ctx = ctx.with_data(node.data, origin=node.id)
-                inputs = _inject_inputs(node, outputs, member_to_group)
-                ctx_d, in_d = ctx.digest(), payload_digest(inputs)
-                hit = self._lookup(nid, ctx_d, in_d)
-                if hit is not None:
-                    outputs[nid], out_ctx[nid] = hit.value, ctx
-                    replayed.append(nid)
+
+        def pump(nid: str, fut: Future) -> None:
+            # runs on gateway threads: hand the completion to the scheduler
+            with cv:
+                completions.append((nid, fut))
+                cv.notify()
+
+        def on_requeue(req: Any, reason: str) -> None:
+            # gateway requeued one of our requests (eviction / worker failure);
+            # requests of other runs/clients sharing the gateway chain through
+            if req.meta.get("run") != run_token:
+                if prev_requeue is not None:
+                    prev_requeue(req, reason)
+                return
+            nid = req.meta.get("node", "")
+            with cv:
+                st = inflight.get(nid)
+                if st is not None:
+                    st.attempts += 1
+            if st is not None and self.journal is not None:
+                self.journal.append(JournalRecord(
+                    kind="NODE_REQUEUE", node_id=nid, attempt=req.attempts,
+                    meta={"task": req.task_name, "reason": reason}))
+
+        def finish(nid: str, value: Any, ctx: Context, was_replayed: bool) -> None:
+            outputs[nid] = value
+            out_ctx[nid] = ctx
+            (replayed if was_replayed else executed).append(nid)
+            for c in children[nid]:
+                deps_left[c] -= 1
+                if deps_left[c] == 0:
+                    ready.append(c)
+
+        def dispatch(nid: str) -> None:
+            node = exec_nodes[nid]
+            if isinstance(node, UnionNode):
+                raise NotImplementedError(
+                    "union nodes execute locally; contract before remote dispatch")
+            parents = [out_ctx[d] for d in gdeps[nid]]
+            ctx = Context.union_all(parents) if parents else graph.origin_context
+            if node.data:
+                ctx = ctx.with_data(node.data, origin=node.id)
+            inputs = _inject_inputs(node, outputs, member_to_group)
+            ctx_d, in_d = ctx.digest(), payload_digest(inputs)
+            hit = self._lookup(nid, ctx_d, in_d)
+            if hit is not None:
+                if hit.facts:
+                    # re-emit journaled context facts so downstream ξ digests
+                    # match the original run exactly (replay completeness)
+                    ctx = ctx.with_data(hit.facts, origin=nid)
+                finish(nid, hit.value, ctx, True)
+                return
+            if self.journal is not None:
+                self.journal.append(JournalRecord(
+                    kind="NODE_START", node_id=nid,
+                    context_digest=ctx_d, input_digest=in_d))
+            if callable(node.fn):
+                attempt = 0
+                while True:  # immediate retries: never sleep in the scheduler
+                    try:
+                        value = node.fn(ctx, **inputs)
+                        break
+                    except Exception:
+                        attempt += 1
+                        if attempt > node.retries:
+                            if self.journal is not None:
+                                self.journal.append(JournalRecord(
+                                    kind="NODE_FAIL", node_id=nid,
+                                    context_digest=ctx_d, input_digest=in_d,
+                                    attempt=attempt))
+                                self.journal.flush()
+                            raise
+                meta = None
+                if isinstance(value, WithContext):
+                    meta = {"facts": dict(value.facts)}
+                    ctx = ctx.with_data(value.facts, origin=nid)
+                    value = value.output
+                self._commit(nid, ctx_d, in_d, value, attempt, meta=meta)
+                finish(nid, value, ctx, False)
+                return
+            # register BEFORE submit: a requeue can fire the instant the
+            # gateway pops the request, and it must find the node inflight
+            st = _Inflight(node, ctx, ctx_d, in_d, dict(inputs))
+            with cv:
+                inflight[nid] = st
+            self.straggler.started(str(node.fn), nid)
+            fut = self.gateway.submit(
+                str(node.fn), ctx, inputs,
+                affinity_key=str(node.resources.get("affinity", "")),
+                meta={"node": nid, "run": run_token})
+            with cv:
+                st.futures.append(fut)
+                st.copies += 1
+            fut.add_done_callback(lambda f, _n=nid: pump(_n, f))
+
+        def speculate() -> None:
+            with cv:
+                candidates = [(nid, st) for nid, st in inflight.items()
+                              if st.copies < self.max_copies]
+            for nid, st in candidates:
+                if st.node.resources.get("affinity"):
+                    # pinned to worker-held state: a copy elsewhere could be
+                    # wrong, a copy on the holder is useless — don't race it
                     continue
-                if callable(node.fn):
-                    value = node.fn(ctx, **inputs)
-                    if isinstance(value, WithContext):
-                        ctx = ctx.with_data(value.facts, origin=nid)
-                        value = value.output
-                    self._commit(nid, ctx_d, in_d, value, 0)
-                    outputs[nid], out_ctx[nid] = value, ctx
-                    executed.append(nid)
+                name = str(st.node.fn)
+                if not self.straggler.should_speculate(name, nid, st.copies,
+                                                       self.max_copies):
                     continue
-                fut = self.gateway.submit(str(node.fn), ctx, inputs,
-                                          affinity_key=str(node.resources.get(
-                                              "affinity", "")))
-                self.straggler.started(str(node.fn), nid)
-                pending[nid] = (node, ctx, ctx_d, in_d, [fut], time.time())
-            # wait with straggler mitigation
-            while pending:
-                for nid in list(pending):
-                    node, ctx, ctx_d, in_d, futs, started = pending[nid]
-                    done = next((f for f in futs if f.done()), None)
-                    if done is not None:
-                        value = done.result()
-                        self.straggler.finished(str(node.fn), nid)
-                        self._commit(nid, ctx_d, in_d, value, len(futs) - 1)
-                        outputs[nid], out_ctx[nid] = value, ctx
-                        executed.append(nid)
-                        del pending[nid]
-                        continue
-                    med = self.straggler.median(str(node.fn))
-                    if (self.speculative and med is not None and len(futs) < 3
-                            and time.time() - started > self.straggler.threshold * med):
-                        futs.append(self.gateway.submit(str(node.fn), ctx,
-                                                        dict(_inject_inputs(
-                                                            node, outputs,
-                                                            member_to_group))))
-                if pending:
-                    time.sleep(0.002)
-        if self.journal is not None:
-            self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
-            self.journal.flush()
+                dup = self.gateway.submit(
+                    name, st.ctx, dict(st.inputs),
+                    meta={"node": nid, "run": run_token, "speculative": True})
+                with cv:
+                    st.futures.append(dup)
+                    st.copies += 1
+                dup.add_done_callback(lambda f, _n=nid: pump(_n, f))
+
+        prev_requeue = self.gateway.on_requeue
+        self.gateway.on_requeue = on_requeue
+        try:
+            total = len(exec_nodes)
+            while len(replayed) + len(executed) < total:
+                while ready:
+                    dispatch(ready.popleft())
+                if len(replayed) + len(executed) >= total:
+                    break
+                with cv:
+                    if not completions:
+                        if not inflight:
+                            left = total - len(replayed) - len(executed)
+                            raise RuntimeError(
+                                f"scheduler stalled: {left} nodes unfinished "
+                                "with nothing in flight")
+                        cv.wait(self.speculation_tick_s if self.speculative
+                                else None)
+                    drained = []
+                    while completions:
+                        drained.append(completions.popleft())
+                if not drained:
+                    if self.speculative:
+                        speculate()
+                    continue
+                for nid, fut in drained:
+                    with cv:
+                        st = inflight.get(nid)
+                        stale = st is None or fut not in st.futures
+                    if stale:
+                        continue  # duplicate of an already-committed node
+                    try:
+                        value = fut.result()
+                    except Exception:
+                        with cv:
+                            st.futures.remove(fut)
+                            copies_left = len(st.futures)
+                        if copies_left:
+                            continue  # a speculative copy may still win
+                        with cv:
+                            del inflight[nid]
+                        self.straggler.finished(str(st.node.fn), nid)
+                        if self.journal is not None:
+                            self.journal.append(JournalRecord(
+                                kind="NODE_FAIL", node_id=nid,
+                                context_digest=st.ctx_digest,
+                                input_digest=st.input_digest, attempt=st.attempts))
+                            self.journal.flush()
+                        raise
+                    with cv:
+                        copies = st.copies
+                        requeues = st.attempts
+                        del inflight[nid]
+                    self.straggler.finished(str(st.node.fn), nid)
+                    self._commit(nid, st.ctx_digest, st.input_digest, value,
+                                 requeues + copies - 1)
+                    finish(nid, value, st.ctx, False)
+            if self.journal is not None:
+                self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
+                self.journal.flush()
+        finally:
+            if self.gateway.on_requeue is on_requeue:  # don't clobber a later client
+                self.gateway.on_requeue = prev_requeue
+            with cv:
+                inflight.clear()  # keep a dead chained handler's closure cheap
         return ExecutionReport(outputs=outputs, contexts=out_ctx,
                                replayed=tuple(replayed), executed=tuple(executed),
                                wall_s=time.time() - t0)

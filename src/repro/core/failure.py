@@ -115,6 +115,26 @@ class StragglerWatch:
             xs = self._done.get(task_name, [])
             return statistics.median(xs) if len(xs) >= self.min_samples else None
 
+    def should_speculate(self, task_name: str, token: Any, copies: int,
+                         max_copies: int = 3) -> bool:
+        """True when (task_name, token) is a straggler and a copy is allowed.
+
+        The global-speculation decision used by the dataflow executor: the
+        running attempt has been out longer than ``threshold × median`` of
+        completed same-name tasks, and fewer than ``max_copies`` attempts
+        (original + duplicates) exist.
+        """
+        if copies >= max_copies:
+            return False
+        with self._lock:
+            xs = self._done.get(task_name, [])
+            if len(xs) < self.min_samples:
+                return False
+            t0 = self._running.get((task_name, token))
+            if t0 is None:
+                return False
+            return time.time() - t0 > self.threshold * statistics.median(xs)
+
     def stragglers(self) -> List[tuple]:
         """[(task_name, token, elapsed, median), ...] currently suspect."""
         now = time.time()

@@ -19,7 +19,7 @@ import random
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -42,8 +42,10 @@ class TaskRequest:
     affinity_key: str = ""             # context-affinity routing hint
     future: Future = field(default_factory=Future)
     submitted_at: float = field(default_factory=time.time)
-    attempts: int = 0
+    attempts: int = 0                  # failure budget: real execution failures/evictions
+    backoffs: int = 0                  # empty-pool waits — NOT charged to the budget
     max_attempts: int = 3
+    meta: Dict[str, Any] = field(default_factory=dict)  # caller attribution
 
 
 @dataclass
@@ -60,6 +62,10 @@ class WorkerHandle:
     completed: int = 0
     ewma_latency_s: float = 0.0        # straggler detection input
     held_contexts: set = field(default_factory=set)  # affinity state
+    hb_misses: int = 0                 # consecutive failed heartbeat probes
+    inflight_reqs: Dict[int, "TaskRequest"] = field(default_factory=dict)
+    # ^ id(req) → req for every request currently running on this worker;
+    #   the eviction path drains it to requeue orphans on survivors.
 
     def load_score(self) -> float:
         """Cheap load proxy: inflight + reported cpu usage."""
@@ -129,6 +135,7 @@ class Gateway:
                  silo: bool = False,
                  heartbeat_interval_s: float = 0.5,
                  dispatch_threads: int = 8,
+                 evict_after_misses: int = 2,
                  name: str = "gateway"):
         self.name = name
         self.handles: List[WorkerHandle] = [
@@ -147,11 +154,14 @@ class Gateway:
         self._cv = threading.Condition()
         self._stop = threading.Event()
         self._hb_interval = heartbeat_interval_s
+        self.evict_after_misses = evict_after_misses
         self._threads: List[threading.Thread] = []
         self._dispatch_threads = dispatch_threads
+        self._track_lock = threading.Lock()  # guards inflight counters/registries
         self.on_worker_down: Optional[Callable[[WorkerHandle], None]] = None
+        self.on_requeue: Optional[Callable[[TaskRequest, str], None]] = None
         self.metrics = {"scheduled": 0, "rejected": 0, "requeued": 0,
-                        "alloc_ns_total": 0, "alloc_calls": 0}
+                        "evicted": 0, "alloc_ns_total": 0, "alloc_calls": 0}
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "Gateway":
@@ -183,10 +193,11 @@ class Gateway:
     # -- submission ------------------------------------------------------------
     def submit(self, task_name: str, ctx: Context = EMPTY_CONTEXT,
                inputs: Optional[Mapping[str, Any]] = None, *, priority: int = 0,
-               affinity_key: str = "", max_attempts: int = 3) -> Future:
+               affinity_key: str = "", max_attempts: int = 3,
+               meta: Optional[Mapping[str, Any]] = None) -> Future:
         req = TaskRequest(task_name=task_name, ctx=ctx, inputs=dict(inputs or {}),
                           priority=priority, affinity_key=affinity_key,
-                          max_attempts=max_attempts)
+                          max_attempts=max_attempts, meta=dict(meta or {}))
         with self._cv:
             if self.silo:
                 heapq.heappush(self._silo, (priority, next(self._silo_counter), req))
@@ -232,19 +243,21 @@ class Gateway:
                 continue
             handle = self._allocate(req)
             if handle is None:
-                # no live workers: retry later rather than dropping (degrade)
+                # no live workers: retry later rather than dropping (degrade).
+                # Queue-waiting is not a task failure: it burns the separate
+                # backoff budget, never req.attempts.
                 time.sleep(0.05)
-                req.attempts += 1
-                if req.attempts >= req.max_attempts * 4:
-                    req.future.set_exception(
-                        AllocationError("no live workers available"))
+                req.backoffs += 1
+                if req.backoffs >= req.max_attempts * 4:
+                    self._fail(req, AllocationError("no live workers available"))
                     self.metrics["rejected"] += 1
                 else:
-                    self._resubmit(req)
+                    self._resubmit(req, "no live workers (backoff)", notify=False)
                 continue
             self._run_on(handle, req)
 
-    def _resubmit(self, req: TaskRequest) -> None:
+    def _resubmit(self, req: TaskRequest, reason: str = "", *,
+                  notify: bool = True) -> None:
         with self._cv:
             if self.silo:
                 heapq.heappush(self._silo, (req.priority, next(self._silo_counter), req))
@@ -252,37 +265,100 @@ class Gateway:
                 self._queue.append(req)
             self._cv.notify()
         self.metrics["requeued"] += 1
+        if notify and self.on_requeue is not None:
+            try:
+                self.on_requeue(req, reason)
+            except Exception:
+                pass  # observer errors must not take down dispatch
+
+    @staticmethod
+    def _fail(req: TaskRequest, exc: BaseException) -> None:
+        # a dispatch thread and the heartbeat eviction path may race to
+        # resolve the same future; losing that race is benign (first wins)
+        try:
+            if not req.future.done():
+                req.future.set_exception(exc)
+        except InvalidStateError:
+            pass
+
+    @staticmethod
+    def _resolve(req: TaskRequest, value: Any) -> None:
+        try:
+            if not req.future.done():  # speculative duplicates race benignly
+                req.future.set_result(value)
+        except InvalidStateError:
+            pass
+
+    def _release(self, handle: WorkerHandle, req: TaskRequest) -> bool:
+        """Unregister a returned request; False ⇒ eviction already requeued it."""
+        with self._track_lock:
+            handle.inflight = max(0, handle.inflight - 1)
+            return handle.inflight_reqs.pop(id(req), None) is not None
+
+    def _evict(self, handle: WorkerHandle, reason: str) -> None:
+        """Requeue every in-flight request of a dead worker on survivors.
+
+        Consumes the heartbeat verdict: called when the monitor (or a
+        system-level transport error) declares the worker dead. Orphaned
+        requests are re-enqueued with their attempt count bumped; callers
+        that registered ``on_requeue`` (the ClusterExecutor) journal each
+        one. Idempotent — a request is drained exactly once.
+        """
+        with self._track_lock:
+            orphans = list(handle.inflight_reqs.values())
+            handle.inflight_reqs.clear()
+        for req in orphans:
+            if req.future.done():
+                continue
+            req.attempts += 1
+            self.metrics["evicted"] += 1
+            if req.attempts >= req.max_attempts:
+                self._fail(req, AllocationError(
+                    f"task {req.task_name} lost with evicted worker {handle.name}"))
+            else:
+                self._resubmit(req, f"{reason}: evicted from {handle.name}")
 
     def _run_on(self, handle: WorkerHandle, req: TaskRequest) -> None:
-        handle.inflight += 1
+        with self._track_lock:
+            handle.inflight += 1
+            handle.inflight_reqs[id(req)] = req
         t0 = time.time()
         try:
             result = handle.worker.run_task(req.task_name, req.ctx, req.inputs)
         except ConnectionError:
-            # system-level failure: mark dead, requeue elsewhere
-            handle.live = False
-            handle.inflight -= 1
-            if self.on_worker_down:
+            # system-level failure: mark dead, requeue elsewhere. Siblings
+            # still executing on the handle are NOT evicted here — in-flight
+            # calls may yet succeed, and the heartbeat path (consecutive
+            # misses) recovers the truly-stuck ones without double-running
+            # the healthy ones.
+            owned = self._release(handle, req)
+            with self._track_lock:
+                was_live, handle.live = handle.live, False
+            if was_live and self.on_worker_down:  # once per death, not per call
                 self.on_worker_down(handle)
+            if not owned:
+                return  # heartbeat eviction already requeued this request
             req.attempts += 1
             if req.attempts >= req.max_attempts:
-                req.future.set_exception(AllocationError(
+                self._fail(req, AllocationError(
                     f"task {req.task_name} exhausted retries (system failures)"))
             else:
-                self._resubmit(req)
+                self._resubmit(req, f"system failure on {handle.name}")
             return
         except TimeoutError as exc:
             # application-level failure: heartbeat may still be fine
+            owned = self._release(handle, req)
             handle.app_live = False
-            handle.inflight -= 1
+            if not owned:
+                return
             req.attempts += 1
             if req.attempts >= req.max_attempts:
-                req.future.set_exception(exc)
+                self._fail(req, exc)
             else:
-                self._resubmit(req)
+                self._resubmit(req, f"application failure on {handle.name}")
             return
         dt = time.time() - t0
-        handle.inflight -= 1
+        owned = self._release(handle, req)
         handle.completed += 1
         handle.ewma_latency_s = (0.8 * handle.ewma_latency_s + 0.2 * dt
                                  if handle.ewma_latency_s else dt)
@@ -291,19 +367,20 @@ class Gateway:
         self.metrics["scheduled"] += 1
         status = result.get("status")
         if status == "ok":
-            if not req.future.done():  # speculative duplicates race benignly
-                req.future.set_result(result["output"])
+            self._resolve(req, result["output"])
         elif status == "rejected":
-            req.future.set_exception(PermissionError(result.get("reason", "rejected")))
+            if not owned:
+                return  # a requeued copy owns the outcome now
+            self._fail(req, PermissionError(result.get("reason", "rejected")))
             self.metrics["rejected"] += 1
         else:
+            if not owned:
+                return  # already requeued by eviction; don't double-count
             req.attempts += 1
             if req.attempts >= req.max_attempts:
-                if not req.future.done():
-                    req.future.set_exception(
-                        RuntimeError(result.get("error", "task failed")))
+                self._fail(req, RuntimeError(result.get("error", "task failed")))
             else:
-                self._resubmit(req)
+                self._resubmit(req, f"application error on {handle.name}")
 
     def _refresh_heartbeats(self) -> None:
         for h in self.handles:
@@ -312,14 +389,22 @@ class Gateway:
                 tel = h.worker.heartbeat()
             except Exception:
                 tel = None
-            was_live = h.live
-            h.live = tel is not None
+            with self._track_lock:  # transition must be atomic vs _run_on's
+                was_live, h.live = h.live, tel is not None
             h.telemetry = tel
             h.last_seen = time.time() if tel else h.last_seen
+            h.hb_misses = 0 if tel is not None else h.hb_misses + 1
             if tel is not None:
                 h.app_live = getattr(h.worker, "app_alive", True)
             if was_live and not h.live and self.on_worker_down:
                 self.on_worker_down(h)
+            if (not h.live and h.inflight_reqs
+                    and h.hb_misses >= self.evict_after_misses):
+                # the heartbeat verdict drives recovery, not just routing —
+                # but a single missed probe is routing-only (self-heals on the
+                # next probe); eviction needs consecutive misses so one GC
+                # pause or network blip can't charge the task failure budget
+                self._evict(h, "heartbeat lost")
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():

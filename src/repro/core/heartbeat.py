@@ -134,10 +134,18 @@ class HeartbeatServer:
 
 
 def check_heartbeat(address: str, timeout: float = 1.0) -> Optional[Dict[str, Any]]:
-    """Poll a heartbeat endpoint. None ⇒ system-level failure (§3.2)."""
+    """Poll a heartbeat endpoint. None ⇒ system-level failure (§3.2).
+
+    A successful probe is stamped with ``probe_latency_s`` (round-trip time
+    as seen by the caller) so the gateway's cached telemetry carries a
+    network-health signal alongside the worker's self-report.
+    """
+    t0 = time.time()
     try:
         with urllib.request.urlopen(address.rstrip("/") + "/heartbeat",
                                     timeout=timeout) as resp:
-            return json.loads(resp.read())
+            report = json.loads(resp.read())
+        report["probe_latency_s"] = time.time() - t0
+        return report
     except Exception:
         return None

@@ -24,7 +24,8 @@ from repro.wire import canonical_bytes, decode_payload, encode_payload
 from .context import Context
 from .heartbeat import HeartbeatServer
 
-__all__ = ["TaskRegistry", "WorkerServer", "WorkerClient", "InProcWorker", "Middleware"]
+__all__ = ["TaskRegistry", "WorkerServer", "WorkerClient", "InProcWorker",
+           "FlakyWorker", "Middleware"]
 
 Middleware = Callable[[str, Mapping[str, Any]], Optional[str]]
 # middleware(task_name, meta) -> None (pass) or str (rejection reason)
@@ -126,6 +127,59 @@ class InProcWorker:
             time.sleep(self.latency_s)
         return _execute(self.registry, self.middleware, self.state,
                         task_name, ctx, inputs, self.fail_injector)
+
+
+class FlakyWorker(InProcWorker):
+    """Deterministic fault injection: an in-proc worker you can kill mid-graph.
+
+    The kill switch flips *system* liveness off — exactly the §3.2 failure the
+    heartbeat detector exists for: ``heartbeat()`` returns None and every
+    ``run_task`` raises ConnectionError. Two death modes:
+
+      - ``"drop"``  (default): in-flight and new calls fail fast with
+        ConnectionError — a clean crash the dispatch path detects itself.
+      - ``"hang"``: in-flight calls block (until :meth:`release` or
+        ``hang_timeout_s``) before failing — a silent partition; only the
+        gateway's heartbeat eviction can recover work stuck on this worker.
+
+    ``kill_after_starts=N`` arms the switch so the Nth task *start* triggers
+    it: the worker dies mid-flight with work accepted but never finished,
+    which is the scenario requeue-on-eviction must survive.
+    """
+
+    def __init__(self, name: str, registry: TaskRegistry, *,
+                 kill_after_starts: Optional[int] = None, mode: str = "drop",
+                 hang_timeout_s: float = 30.0, **kw):
+        assert mode in ("drop", "hang")
+        super().__init__(name, registry, **kw)
+        self.kill_after_starts = kill_after_starts
+        self.mode = mode
+        self.hang_timeout_s = hang_timeout_s
+        self.starts = 0
+        self._released = threading.Event()
+
+    def kill(self) -> None:
+        """Flip the switch: heartbeat goes dark, tasks fail per ``mode``."""
+        self.alive = False
+
+    def release(self) -> None:
+        """Unblock any calls parked by ``hang`` mode (test teardown hook)."""
+        self._released.set()
+
+    def run_task(self, task_name: str, ctx: Context,
+                 inputs: Mapping[str, Any]) -> Dict[str, Any]:
+        with self.state.lock:
+            self.starts += 1
+            armed = (self.kill_after_starts is not None
+                     and self.starts >= self.kill_after_starts)
+        if armed:
+            self.kill()
+        if not self.alive:
+            if self.mode == "hang":
+                self._released.wait(self.hang_timeout_s)
+            raise ConnectionError(
+                f"worker {self.name} died mid-task ({task_name})")
+        return super().run_task(task_name, ctx, inputs)
 
 
 class _AppHandler(BaseHTTPRequestHandler):

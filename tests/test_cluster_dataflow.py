@@ -1,0 +1,216 @@
+"""Barrier-free dataflow scheduling + worker-failure recovery (ClusterExecutor).
+
+Covers the post-level-barrier contract:
+  - a ready node dispatches the moment its deps commit, even while unrelated
+    same-level nodes are still running (no stage barrier),
+  - the wait path is event-driven (no sleep-polling),
+  - a worker killed mid-graph (fast-crash or silent hang) does not fail the
+    run: orphaned work is requeued on survivors, requeues are journaled with
+    attempt counts, and the dead worker is evicted from the gateway pool,
+  - a journal produced by a failure-scarred run replays cleanly.
+"""
+
+import inspect
+import threading
+import time
+
+from repro.core import (
+    ClusterExecutor,
+    ContextGraph,
+    FlakyWorker,
+    Gateway,
+    InProcWorker,
+    Journal,
+    TaskRegistry,
+    WithContext,
+)
+
+
+def test_child_dispatches_before_unrelated_sibling_finishes():
+    """The defining dataflow property: dependency-ready beats level-complete.
+
+    "slow" and "quick" share a toposort level. "dependent" needs only
+    "quick" — and is itself what *unblocks* "slow". A level-barrier
+    scheduler would wait out the 10 s block; the dataflow scheduler runs
+    "dependent" while "slow" is still parked.
+    """
+    reg = TaskRegistry()
+    release = threading.Event()
+    order = []
+
+    @reg.task("blocker")
+    def blocker(ctx):
+        release.wait(10.0)
+        order.append("blocker")
+        return "blocker-done"
+
+    @reg.task("fast")
+    def fast(ctx):
+        return "fast-done"
+
+    @reg.task("child")
+    def child(ctx, **kw):
+        order.append("child")
+        release.set()
+        return "child-done"
+
+    workers = [InProcWorker(f"w{i}", reg) for i in range(3)]
+    g = ContextGraph(name="barrier-free")
+    g.add("slow", "blocker")
+    g.add("quick", "fast")
+    g.add("dependent", "child", deps=["quick"])
+    t0 = time.time()
+    with Gateway(workers) as gw:
+        rep = ClusterExecutor(gw, speculative=False).run(g)
+    assert order[0] == "child"  # ran while same-level "slow" was still blocked
+    assert rep.outputs["dependent"] == "child-done"
+    assert rep.outputs["slow"] == "blocker-done"
+    assert time.time() - t0 < 9.0  # would be ~10 s under a level barrier
+
+
+def test_cluster_wait_path_has_no_sleep_polling():
+    src = inspect.getsource(ClusterExecutor)
+    assert "time.sleep" not in src  # completions arrive via Condition.wait
+
+
+def test_worker_killed_mid_graph_run_completes(tmp_path):
+    """Fast-crash death: the first task landing on w0 kills it mid-flight."""
+    reg = TaskRegistry()
+
+    @reg.task("work")
+    def work(ctx, **kw):
+        time.sleep(0.005)
+        return sum(v for v in kw.values() if isinstance(v, int)) + 1
+
+    flaky = FlakyWorker("w0", reg, kill_after_starts=1)
+    workers = [flaky, InProcWorker("w1", reg), InProcWorker("w2", reg)]
+    g = ContextGraph(name="kill-mid-run")
+    for i in range(8):
+        g.add(f"a{i}", "work")
+        g.add(f"b{i}", "work", deps=[f"a{i}"])
+    path = str(tmp_path / "kill.wal")
+    with Journal(path, sync="batch") as j:
+        with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+            rep = ClusterExecutor(gw, journal=j, speculative=False).run(g)
+            # eviction from the pool: the dead worker is no longer allocatable
+            assert "w0" not in [h.name for h in gw.live_workers()]
+        assert flaky.starts >= 1  # it really did accept work before dying
+        assert all(rep.outputs[f"b{i}"] == 2 for i in range(8))
+        # requeues are journaled with attempt counts
+        requeues = [r for r in j.records() if r.kind == "NODE_REQUEUE"]
+        assert requeues, "worker death must journal at least one NODE_REQUEUE"
+        assert all(r.attempt >= 1 for r in requeues)
+        assert all(r.node_id and r.meta.get("reason") for r in requeues)
+        kinds = j.kinds()
+        assert kinds["NODE_COMMIT"] == 16
+        assert kinds["RUN_END"] == 1
+
+
+def test_hung_worker_recovered_by_heartbeat_eviction():
+    """Silent-partition death: the task hangs, only the heartbeat can tell."""
+    reg = TaskRegistry()
+
+    @reg.task("work")
+    def work(ctx):
+        time.sleep(0.005)
+        return 1
+
+    flaky = FlakyWorker("w0", reg, kill_after_starts=1, mode="hang", hang_timeout_s=5.0)
+    workers = [flaky, InProcWorker("w1", reg)]
+    g = ContextGraph(name="hang-recovery")
+    for i in range(6):
+        g.add(f"t{i}", "work")
+    with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+        rep = ClusterExecutor(gw, speculative=False).run(g)
+        flaky.release()  # unpark the stuck dispatch thread before shutdown
+    assert all(rep.outputs[f"t{i}"] == 1 for i in range(6))
+    assert gw.metrics["evicted"] >= 1  # recovery came from the heartbeat path
+
+
+def test_failure_scarred_journal_replays_clean(tmp_path):
+    """A run that survived a worker death leaves a fully replayable journal."""
+    reg = TaskRegistry()
+
+    @reg.task("work")
+    def work(ctx, **kw):
+        return sum(v for v in kw.values() if isinstance(v, int)) + 1
+
+    g = ContextGraph(name="replay-after-failure")
+    for i in range(5):
+        g.add(f"a{i}", "work")
+        g.add(f"b{i}", "work", deps=[f"a{i}"])
+    path = str(tmp_path / "scarred.wal")
+
+    flaky = FlakyWorker("w0", reg, kill_after_starts=1)
+    workers = [flaky, InProcWorker("w1", reg)]
+    with Journal(path, sync="batch") as j:
+        with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+            r1 = ClusterExecutor(gw, journal=j, speculative=False).run(g)
+
+    survivors = [InProcWorker("w1", reg)]
+    with Journal(path, sync="batch") as j:
+        with Gateway(survivors) as gw:
+            r2 = ClusterExecutor(gw, journal=j, speculative=False).run(g)
+    assert r2.executed == ()  # zero re-execution
+    assert set(r2.replayed) == set(r1.executed)
+    assert r2.outputs == r1.outputs
+
+
+def test_callable_withcontext_facts_survive_replay(tmp_path):
+    """Gateway-side WithContext facts are journaled and re-emitted on replay,
+    keeping downstream ξ digests identical (zero re-execution)."""
+    reg = TaskRegistry()
+
+    @reg.task("consume")
+    def consume(ctx, **kw):
+        return ctx.get("flavor", "missing")
+
+    def emit(ctx):
+        return WithContext("out", {"flavor": "durian"})
+
+    g = ContextGraph(name="facts-replay")
+    g.add("emitter", emit)
+    g.add("reader", "consume", deps=["emitter"])
+    path = str(tmp_path / "facts.wal")
+    with Journal(path, sync="batch") as j:
+        with Gateway([InProcWorker("w0", reg)]) as gw:
+            r1 = ClusterExecutor(gw, journal=j).run(g)
+    with Journal(path, sync="batch") as j:
+        with Gateway([InProcWorker("w0", reg)]) as gw:
+            r2 = ClusterExecutor(gw, journal=j).run(g)
+    assert r1.outputs["reader"] == "durian"
+    assert r2.executed == ()  # facts re-emitted, digests identical, all replayed
+    assert r2.outputs == r1.outputs
+
+
+def test_global_speculation_covers_cross_level_straggler():
+    """Speculation is global: a straggler deep in the graph still gets a copy
+    while unrelated shallow nodes keep committing around it."""
+    reg = TaskRegistry()
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    @reg.task("work")
+    def work(ctx, **kw):
+        with lock:
+            calls["n"] += 1
+            n = calls["n"]
+        time.sleep(2.0 if n == 7 else 0.01)  # one pathological straggler
+        return sum(v for v in kw.values() if isinstance(v, int)) + 1
+
+    workers = [InProcWorker(f"w{i}", reg) for i in range(3)]
+    g = ContextGraph(name="global-speculation")
+    for i in range(6):
+        g.add(f"a{i}", "work")
+        g.add(f"b{i}", "work", deps=[f"a{i}"])
+    with Gateway(workers) as gw:
+        ex = ClusterExecutor(gw, speculative=True, speculation_tick_s=0.02)
+        ex.straggler.threshold = 3.0
+        t0 = time.time()
+        rep = ex.run(g)
+        wall = time.time() - t0
+    assert all(rep.outputs[f"b{i}"] == 2 for i in range(6))
+    # the run returned well before the 2 s straggler could have finished,
+    # and an extra (speculative) task execution was dispatched to cover it
+    assert wall < 1.5
+    assert calls["n"] >= 13

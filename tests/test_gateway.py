@@ -3,9 +3,9 @@ import time
 
 import pytest
 
-from repro.core import (AllocationError, Context, Gateway, InProcWorker, TaskRegistry,
-                        WorkerHandle, context_affinity, least_loaded, power_of_two,
-                        round_robin)
+from repro.core import (AllocationError, Context, FlakyWorker, Gateway, InProcWorker,
+                        TaskRegistry, WorkerHandle, context_affinity, least_loaded,
+                        power_of_two, round_robin)
 
 
 def _cluster(n=4, fail=None):
@@ -107,6 +107,22 @@ def test_worker_down_callback_fires():
         while not downs and time.time() < deadline:
             time.sleep(0.02)
     assert "w0" in downs
+
+
+def test_heartbeat_eviction_requeues_inflight_requests():
+    """A hung worker's in-flight requests move to survivors via the heartbeat
+    monitor — the dispatch path alone would block on the dead transport."""
+    reg, workers = _cluster(1)
+    flaky = FlakyWorker("wx", reg, kill_after_starts=1, mode="hang",
+                        hang_timeout_s=5.0)
+    requeues = []
+    with Gateway([flaky] + workers, heartbeat_interval_s=0.05) as gw:
+        gw.on_requeue = lambda req, reason: requeues.append(reason)
+        futs = gw.map("slow", [{"dt": 0.1}] * 4)
+        assert [f.result(timeout=5) for f in futs] == [0.1] * 4
+        flaky.release()
+    assert gw.metrics["evicted"] >= 1
+    assert any("evicted" in r for r in requeues)
 
 
 def test_context_affinity_prefers_holder():
