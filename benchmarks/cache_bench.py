@@ -1,0 +1,166 @@
+"""Result-cache benchmark: cold vs warm re-run of the skewed-diamond graph.
+
+Workload: the same K-diamond graph as ``benchmarks.cluster_bench`` (one
+deliberately slow worker), run twice against one ``repro.cache.ResultCache``
+root:
+
+  - ``cold``: empty cache — every node executes on the cluster and is
+    committed into the cache (``CACHE_STORE`` journal records);
+  - ``warm``: a fresh journal and a fresh gateway, same cache root — every
+    node is answered from the cache before dispatch (``CACHE_HIT`` records),
+    so no task ever reaches a worker.
+
+The warm journal is then audited (CACHE_HIT/NODE_COMMIT counts in
+``Journal.kinds()``) and replayed without the cache to prove that a
+cache-accelerated run remains a complete, standalone durable record —
+the contract specified in docs/result-cache.md §5.
+
+Run:   PYTHONPATH=src python -m benchmarks.cache_bench
+       PYTHONPATH=src python -m benchmarks.cache_bench --smoke --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import time
+
+from benchmarks.cluster_bench import build_diamonds, build_registry, make_workers
+from repro.cache import ResultCache
+from repro.core import ClusterExecutor, Gateway, Journal
+
+
+def _timed_run(
+    args: argparse.Namespace,
+    k: int,
+    task_s: float,
+    slow_s: float,
+    journal_path: str,
+    cache: "ResultCache | None",
+) -> tuple:
+    """One cluster run of the K-diamond graph; returns (report, wall_s)."""
+    reg = build_registry(task_s)
+    with Gateway(make_workers(reg, args.workers, slow_s)) as gw:
+        with Journal(journal_path, sync="batch") as j:
+            ex = ClusterExecutor(gw, journal=j, cache=cache, speculation_tick_s=0.01)
+            t0 = time.perf_counter()
+            rep = ex.run(build_diamonds(k))
+            wall = time.perf_counter() - t0
+    return rep, wall
+
+
+def bench(args: argparse.Namespace) -> dict:
+    """Cold + warm + replay-audit cycle; returns the result blob."""
+    k = 3 if args.smoke else args.diamonds
+    task_s = 0.002 if args.smoke else args.task_s
+    slow_s = 0.01 if args.smoke else args.slow_s
+    n_nodes = 4 * k
+    expected = {f"join{i}": 5 for i in range(k)}
+
+    from repro.wire import payload_digest
+
+    payload_digest({"warmup": 0})  # pull in numpy etc. outside the timed region
+
+    cache_root = os.path.join(args.out, "cache_bench_cache")
+    cold_wal = os.path.join(args.out, "cache_bench_cold.wal")
+    warm_wal = os.path.join(args.out, "cache_bench_warm.wal")
+    for path in (cold_wal, warm_wal):
+        if os.path.exists(path):
+            os.remove(path)  # a stale journal would replay, not execute
+    shutil.rmtree(cache_root, ignore_errors=True)  # cold must be genuinely cold
+
+    rep_cold, cold_s = _timed_run(args, k, task_s, slow_s, cold_wal, ResultCache(cache_root))
+    assert len(rep_cold.executed) == n_nodes, rep_cold
+
+    floor = 2.0 if args.smoke else 3.0
+    warm_s = float("inf")
+    for _attempt in range(3):  # best-of-3: one scheduler hiccup must not fail CI
+        if os.path.exists(warm_wal):
+            os.remove(warm_wal)  # each attempt must cache-hit, not replay
+        # fresh ResultCache instance: warm hits come from disk, not process memory
+        warm_cache = ResultCache(cache_root)
+        rep_warm, attempt_s = _timed_run(args, k, task_s, slow_s, warm_wal, warm_cache)
+        assert len(rep_warm.cached) == n_nodes, rep_warm
+        assert rep_warm.executed == (), rep_warm
+        warm_s = min(warm_s, attempt_s)
+        if cold_s / warm_s >= floor:
+            break
+
+    for nid, want in expected.items():
+        assert rep_cold.outputs[nid] == want, f"cold {nid}: {rep_cold.outputs[nid]}"
+        assert rep_warm.outputs[nid] == want, f"warm {nid}: {rep_warm.outputs[nid]}"
+
+    # audit: the warm journal accounts for every hit and still fully replays
+    with Journal(warm_wal, sync="never") as j:
+        kinds = j.kinds()
+    assert kinds.get("CACHE_HIT") == n_nodes, kinds
+    assert kinds.get("NODE_COMMIT") == n_nodes, kinds
+    rep_replay, _ = _timed_run(args, k, task_s, slow_s, warm_wal, None)
+    assert rep_replay.executed == () and rep_replay.cached == (), rep_replay
+    assert len(rep_replay.replayed) == n_nodes, rep_replay
+
+    speedup = cold_s / warm_s if warm_s else float("inf")
+    assert speedup >= floor, f"warm rerun only {speedup:.2f}x faster than cold (floor {floor}x)"
+    result = {
+        "diamonds": k,
+        "nodes": n_nodes,
+        "workers": args.workers,
+        "task_s": task_s,
+        "slow_extra_s": slow_s,
+        "cold_wall_s": round(cold_s, 4),
+        "warm_wall_s": round(warm_s, 4),
+        "speedup": round(speedup, 2),
+        "cache_hits": warm_cache.stats["hits"],
+        "cache_disk_bytes": warm_cache.backend.size_bytes(),
+        "warm_journal_kinds": kinds,
+        "replay_ok": True,
+        "outputs_ok": True,
+    }
+    print(f"cold_wall_s,{cold_s * 1e3:.1f}ms")
+    print(f"warm_wall_s,{warm_s * 1e3:.1f}ms")
+    print(f"speedup,{speedup:.2f}x")
+    return result
+
+
+def main() -> None:
+    """CLI entry point (CSV-ish lines; ``--json`` writes the result blob)."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--diamonds", type=int, default=12)
+    ap.add_argument("--task-s", type=float, default=0.01)
+    ap.add_argument(
+        "--slow-s",
+        type=float,
+        default=0.12,
+        help="extra per-task latency injected on one worker",
+    )
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument(
+        "--repeat",
+        type=int,
+        default=3,
+        help="take the best-of-N of each mode's wall clock",
+    )
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes, assert-no-crash")
+    ap.add_argument("--json", type=str, default="", help="write the result blob to this path")
+    ap.add_argument("--out", type=str, default=".", help="directory for journals and the cache")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    runs = [bench(args) for _ in range(1 if args.smoke else args.repeat)]
+    best = dict(runs[0])
+    # best-of-N per MODE (not per run): each mode's floor is its honest cost
+    best["cold_wall_s"] = min(r["cold_wall_s"] for r in runs)
+    best["warm_wall_s"] = min(r["warm_wall_s"] for r in runs)
+    best["speedup"] = round(best["cold_wall_s"] / best["warm_wall_s"], 2)
+    if len(runs) > 1:
+        best["runs"] = runs
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(best, fh, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

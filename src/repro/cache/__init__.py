@@ -1,0 +1,40 @@
+"""repro.cache — content-addressed node-result cache for incremental re-runs.
+
+The durable journal (``repro.core.durable``) makes one *run* replayable; the
+result cache makes work reusable *across* runs, journals, and processes: a
+node whose function, inputs, and context ξ all digest to the same values as
+a previously committed execution is answered from the cache instead of being
+re-executed — the cross-run analogue of Spark-style lineage memoization.
+
+Usage::
+
+    from repro.cache import ResultCache
+    from repro.core import LocalExecutor
+
+    cache = ResultCache("runs/result-cache", max_bytes=512 << 20)
+    report = LocalExecutor(cache=cache).run(graph)   # cold: executes, stores
+    report = LocalExecutor(cache=cache).run(graph)   # warm: all cache hits
+
+Cache hits and stores are journaled (``CACHE_HIT`` / ``CACHE_STORE`` record
+kinds) so a cache-accelerated run remains fully replayable and auditable.
+The on-disk contract is specified in docs/result-cache.md with the same
+rigor as docs/journal-format.md.
+"""
+
+from .key import CacheKey
+from .store import (
+    CachedResult,
+    FileCacheBackend,
+    MemoryLRU,
+    ResultCache,
+    atomic_write_bytes,
+)
+
+__all__ = [
+    "CacheKey",
+    "CachedResult",
+    "FileCacheBackend",
+    "MemoryLRU",
+    "ResultCache",
+    "atomic_write_bytes",
+]

@@ -1,0 +1,60 @@
+"""Cache-key derivation for the content-addressed result cache.
+
+A cached node result is identified by the triple of digests that already
+defines replay identity in the durable journal (docs/journal-format.md §2),
+plus the *function digest* that replay gets implicitly from the node id:
+
+    (fn digest, input digest, context digest)
+
+All three components are 16-hex-char truncated sha256 values produced by the
+existing digest machinery — ``repro.core.graph.fn_digest`` for the callable
+or registry task name, ``repro.wire.payload_digest`` for the injected
+inputs, and ``Context.digest()`` for the full ξ fact set. Because the
+context digest is part of the key, *any* change to a context entry flips the
+key and the stale result is simply never found again — invalidation by
+construction, no explicit dirty-tracking (see docs/result-cache.md §4).
+
+The string form ``fn/inputs/context`` doubles as the eviction namespace:
+``ResultCache.evict(prefix)`` removes every entry whose id starts with the
+prefix, so ``evict(fn_digest)`` drops all results of one task implementation
+and ``evict(f"{fn_digest}/{input_digest}")`` narrows to one input set.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["CacheKey"]
+
+
+@dataclass(frozen=True)
+class CacheKey:
+    """Content-addressed identity of one node result: three 16-hex digests."""
+
+    fn: str
+    inputs: str
+    context: str
+
+    @property
+    def id(self) -> str:
+        """The canonical string form ``fn/inputs/context`` (eviction namespace)."""
+        return f"{self.fn}/{self.inputs}/{self.context}"
+
+    def relpath(self) -> str:
+        """Blob path relative to a cache root: ``<fn>/<inputs>.<context>``."""
+        return f"{self.fn}/{self.inputs}.{self.context}"
+
+    @staticmethod
+    def parse(key_id: str) -> "CacheKey":
+        """Inverse of :attr:`id` — raises ``ValueError`` on malformed ids."""
+        fn, inputs, context = key_id.split("/")
+        return CacheKey(fn=fn, inputs=inputs, context=context)
+
+    @staticmethod
+    def from_relpath(relpath: str) -> "CacheKey":
+        """Inverse of :meth:`relpath` — raises ``ValueError`` when malformed."""
+        fn, _, leaf = relpath.replace("\\", "/").partition("/")
+        inputs, sep, context = leaf.partition(".")
+        if not (fn and sep and inputs and context):
+            raise ValueError(f"not a cache blob path: {relpath!r}")
+        return CacheKey(fn=fn, inputs=inputs, context=context)

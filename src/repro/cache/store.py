@@ -1,0 +1,384 @@
+"""Result-cache storage: filesystem blob backend + in-memory LRU front.
+
+Layout on disk (shared content-addressed shape with the checkpoint store —
+one immutable, atomically-published file per digest-derived name):
+
+    <root>/<fn_digest>/<input_digest>.<context_digest>
+
+Each blob is one checksummed frame — the same ``(length: u32, crc32: u32)``
+little-endian header the durable journal uses (docs/journal-format.md §1) —
+whose body is a ``repro.wire.payload`` envelope::
+
+    {"v": <output pytree>, "f": <WithContext facts or None>, "o": <output digest>}
+
+A blob that fails the length/crc check or the payload decode is *corrupt*:
+it is unlinked and reported as a miss, so the executor falls back to
+recomputing the node (never a crash, never a wrong value). Writes are
+atomic (tmp + rename), so a crash mid-``put`` leaves either the old blob or
+no blob — readers can never observe a torn frame under its final name.
+
+Eviction is two-tier:
+
+  - ``evict(prefix)`` — explicit, namespace-addressed (see ``CacheKey``);
+  - a byte budget (``max_bytes``) enforced after every put by deleting the
+    least-recently-*used* blobs first (mtime is touched on every hit).
+"""
+
+from __future__ import annotations
+
+import binascii
+import os
+import struct
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Tuple
+
+from repro.wire import encode_payload, payload_digest
+from repro.wire.payload import PayloadDecodeError, decode_payload
+
+from .key import CacheKey
+
+__all__ = [
+    "CachedResult",
+    "FileCacheBackend",
+    "MemoryLRU",
+    "ResultCache",
+    "atomic_write_bytes",
+]
+
+_FRAME = struct.Struct("<II")  # (length, crc32) — the journal's frame header
+
+
+def atomic_write_bytes(path: str, data: bytes, fsync: bool = True) -> None:
+    """Publish ``data`` at ``path`` atomically (tmp file + rename).
+
+    Readers either see the complete new bytes or whatever was there before —
+    never a partial write. Shared by the cache backend and the checkpoint
+    store (both publish immutable content-addressed files).
+    """
+    tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+    with open(tmp, "wb") as fh:
+        fh.write(data)
+        fh.flush()
+        if fsync:
+            os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
+@dataclass
+class CachedResult:
+    """A decoded cache entry: the node output plus its journaled identity."""
+
+    value: Any
+    facts: Optional[Mapping[str, Any]]
+    output_digest: str
+
+
+class MemoryLRU:
+    """Thread-safe in-memory LRU front holding decoded ``CachedResult``s."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[str, CachedResult]" = OrderedDict()
+
+    def get(self, key: CacheKey) -> Optional[CachedResult]:
+        """Return the entry for ``key`` (refreshing recency) or None."""
+        with self._lock:
+            ent = self._entries.get(key.id)
+            if ent is not None:
+                self._entries.move_to_end(key.id)
+            return ent
+
+    def put(self, key: CacheKey, ent: CachedResult) -> None:
+        """Insert ``ent``, evicting the least-recently-used overflow."""
+        with self._lock:
+            self._entries[key.id] = ent
+            self._entries.move_to_end(key.id)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
+    def evict(self, prefix: str = "") -> int:
+        """Drop every entry whose key id starts with ``prefix``; return count."""
+        with self._lock:
+            doomed = [k for k in self._entries if k.startswith(prefix)]
+            for k in doomed:
+                del self._entries[k]
+            return len(doomed)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+class FileCacheBackend:
+    """Content-addressed blob files under ``root`` with a byte budget.
+
+    The budget is enforced with a cheap running byte total (exact-rescanned
+    only inside a sweep) and a low watermark: when a put pushes the total
+    past ``max_bytes``, least-recently-used blobs are deleted down to ~90%
+    of the budget, so sweeps amortize instead of firing on every put at
+    capacity.
+    """
+
+    def __init__(self, root: str, max_bytes: Optional[int] = None, fsync: bool = False):
+        self.root = root
+        self.max_bytes = max_bytes
+        self.fsync = fsync
+        self.corrupt_drops = 0  # frames that failed the length/crc check
+        self._approx_bytes: Optional[int] = None  # lazily seeded running total
+        os.makedirs(root, exist_ok=True)
+        self._sweep_stale_tmp()
+
+    def _sweep_stale_tmp(self, max_age_s: float = 3600.0) -> None:
+        """Remove tmp files orphaned by a crash mid-``atomic_write_bytes``.
+
+        Age-gated so a concurrent writer's in-flight tmp file is left alone;
+        anything older than ``max_age_s`` is a leak no rename will ever claim.
+        """
+        now = time.time()
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for name in filenames:
+                if ".tmp." not in name:
+                    continue
+                full = os.path.join(dirpath, name)
+                try:
+                    if now - os.path.getmtime(full) >= max_age_s:
+                        os.remove(full)
+                except OSError:
+                    pass
+
+    # -- paths ---------------------------------------------------------------
+    def path_for(self, key: CacheKey) -> str:
+        """Absolute blob path for ``key`` (``<root>/<fn>/<inputs>.<context>``)."""
+        return os.path.join(self.root, key.fn, f"{key.inputs}.{key.context}")
+
+    def _blobs(self) -> Iterator[Tuple[str, str]]:
+        """Yield (relpath, abspath) for every blob file under the root."""
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for name in filenames:
+                if name.endswith(".tmp") or ".tmp." in name:
+                    continue
+                full = os.path.join(dirpath, name)
+                yield os.path.relpath(full, self.root), full
+
+    # -- blob IO -------------------------------------------------------------
+    def put(self, key: CacheKey, body: bytes) -> str:
+        """Frame, checksum, and atomically publish ``body``; return its path."""
+        path = self.path_for(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        frame = _FRAME.pack(len(body), binascii.crc32(body)) + body
+        atomic_write_bytes(path, frame, fsync=self.fsync)
+        if self.max_bytes is not None:
+            if self._approx_bytes is None:
+                self._approx_bytes = self.size_bytes()
+            else:
+                self._approx_bytes += len(frame)
+            if self._approx_bytes > self.max_bytes:
+                self._enforce_budget(keep=path)
+        return path
+
+    def get(self, key: CacheKey) -> Optional[bytes]:
+        """Return the verified body for ``key``, or None (missing/corrupt).
+
+        A short, torn, or checksum-failing frame is deleted on sight so the
+        slot can be recomputed and re-stored.
+        """
+        path = self.path_for(key)
+        try:
+            with open(path, "rb") as fh:
+                data = fh.read()
+        except OSError:
+            return None
+        header = _FRAME.size
+        if len(data) < header:
+            self.corrupt_drops += 1
+            self._drop(path)
+            return None
+        length, crc = _FRAME.unpack_from(data)
+        body = data[header:]
+        if len(body) != length or binascii.crc32(body) != crc:
+            self.corrupt_drops += 1
+            self._drop(path)
+            return None
+        try:
+            os.utime(path)  # recency signal for the byte-budget eviction
+        except OSError:
+            pass
+        return body
+
+    def _drop(self, path: str) -> None:
+        try:
+            size = os.path.getsize(path)
+        except OSError:
+            size = 0
+        try:
+            os.remove(path)
+        except OSError:
+            return
+        if self._approx_bytes is not None:
+            self._approx_bytes = max(0, self._approx_bytes - size)
+
+    # -- eviction ------------------------------------------------------------
+    def evict(self, prefix: str = "") -> int:
+        """Delete every blob whose key id starts with ``prefix``; return count."""
+        n = 0
+        for rel, full in list(self._blobs()):
+            try:
+                key = CacheKey.from_relpath(rel)
+            except ValueError:
+                continue
+            if key.id.startswith(prefix):
+                self._drop(full)
+                n += 1
+        self._prune_empty_dirs()
+        return n
+
+    def size_bytes(self) -> int:
+        """Total bytes currently held by blob files."""
+        total = 0
+        for _rel, full in self._blobs():
+            try:
+                total += os.path.getsize(full)
+            except OSError:
+                pass
+        return total
+
+    def _enforce_budget(self, keep: str = "") -> int:
+        """Delete least-recently-used blobs down to ~90% of ``max_bytes``.
+
+        The just-written blob (``keep``) survives even when it alone exceeds
+        the budget — a cache that rejects its newest entry thrashes. The
+        exact rescan happens only here, and the running total is re-seeded
+        from it.
+        """
+        assert self.max_bytes is not None
+        target = self.max_bytes * 9 // 10  # low watermark: amortize sweeps
+        stat: List[Tuple[float, int, str]] = []
+        total = 0
+        for _rel, full in self._blobs():
+            try:
+                st = os.stat(full)
+            except OSError:
+                continue
+            stat.append((st.st_mtime, st.st_size, full))
+            total += st.st_size
+        dropped = 0
+        if total > self.max_bytes:
+            for _mtime, size, full in sorted(stat):
+                if total <= target:
+                    break
+                if full == keep:
+                    continue
+                self._drop(full)
+                total -= size
+                dropped += 1
+        self._approx_bytes = total
+        if dropped:
+            self._prune_empty_dirs()
+        return dropped
+
+    def _prune_empty_dirs(self) -> None:
+        for dirpath, dirnames, filenames in os.walk(self.root, topdown=False):
+            if dirpath != self.root and not dirnames and not filenames:
+                try:
+                    os.rmdir(dirpath)
+                except OSError:
+                    pass
+
+
+class ResultCache:
+    """Two-tier content-addressed result cache: LRU front, file-blob back.
+
+    ``root=None`` runs memory-only (useful for tests and single-process
+    runs); with a root, entries survive process restarts and are shared by
+    every executor pointed at the same directory. All methods are safe to
+    call from executor worker threads.
+    """
+
+    def __init__(
+        self,
+        root: Optional[str] = None,
+        *,
+        backend: Optional[FileCacheBackend] = None,
+        memory_entries: int = 256,
+        max_bytes: Optional[int] = None,
+        fsync: bool = False,
+    ):
+        if backend is None and root is not None:
+            backend = FileCacheBackend(root, max_bytes=max_bytes, fsync=fsync)
+        self.backend = backend
+        self.memory = MemoryLRU(memory_entries)
+        self.stats: Dict[str, int] = {
+            "hits": 0,
+            "misses": 0,
+            "stores": 0,
+            "corrupt": 0,
+            "evicted": 0,
+            "uncacheable": 0,
+        }
+
+    def get(self, key: CacheKey) -> Optional[CachedResult]:
+        """Look ``key`` up (memory first, then disk); None on miss/corruption."""
+        ent = self.memory.get(key)
+        if ent is not None:
+            self.stats["hits"] += 1
+            return ent
+        if self.backend is not None:
+            before = self.backend.corrupt_drops
+            body = self.backend.get(key)
+            self.stats["corrupt"] += self.backend.corrupt_drops - before
+            if body is not None:
+                try:
+                    env = decode_payload(body)
+                    ent = CachedResult(value=env["v"], facts=env["f"], output_digest=env["o"])
+                except (PayloadDecodeError, KeyError, TypeError):
+                    # frame checksum passed but the envelope didn't decode —
+                    # e.g. written by an incompatible future version
+                    self.stats["corrupt"] += 1
+                    self.backend._drop(self.backend.path_for(key))
+                    ent = None
+                if ent is not None:
+                    self.memory.put(key, ent)
+                    self.stats["hits"] += 1
+                    return ent
+        self.stats["misses"] += 1
+        return None
+
+    def put(
+        self, key: CacheKey, value: Any, facts: Optional[Mapping[str, Any]] = None
+    ) -> CachedResult:
+        """Store a node output (and its WithContext facts) under ``key``.
+
+        Raises whatever the payload codec raises for unserializable values —
+        executors treat that as "uncacheable" and continue uncached.
+        """
+        ent = CachedResult(
+            value=value,
+            facts=dict(facts) if facts else None,
+            output_digest=payload_digest(value),
+        )
+        body = encode_payload({"v": ent.value, "f": ent.facts, "o": ent.output_digest})
+        if self.backend is not None:
+            self.backend.put(key, body)
+        self.memory.put(key, ent)
+        self.stats["stores"] += 1
+        return ent
+
+    def evict(self, prefix: str = "") -> int:
+        """Remove every entry (both tiers) whose key id starts with ``prefix``.
+
+        ``evict(fn_digest)`` invalidates one task implementation wholesale;
+        ``evict("")`` clears the cache. Returns the number of *disk* blobs
+        removed (memory-tier evictions are not separately counted).
+        """
+        self.memory.evict(prefix)
+        n = self.backend.evict(prefix) if self.backend is not None else 0
+        self.stats["evicted"] += n
+        return n
+
+    def clear(self) -> int:
+        """Drop everything — ``evict("")``."""
+        return self.evict("")

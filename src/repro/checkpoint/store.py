@@ -9,7 +9,10 @@ Layout: <root>/<tag>/
 Design points:
   - atomic publish: writes go to <tag>.tmp/ and are renamed into place only
     after the manifest fsync — a crash mid-save never corrupts the latest
-    complete checkpoint (the durable-execution contract for large payloads);
+    complete checkpoint (the durable-execution contract for large payloads).
+    Individual files use the same content-addressed atomic-write helper as
+    the result cache (repro.cache.store.atomic_write_bytes): immutable
+    bytes published by tmp-write + rename, never mutated in place;
   - the journal stores only the checkpoint *ref* (tag + digest), never
     tensors (§4.2: event history + blob store);
   - async mode hands the (already device-fetched) arrays to a writer thread
@@ -32,6 +35,7 @@ import numpy as np
 
 import jax
 
+from repro.cache.store import atomic_write_bytes
 from repro.wire import JsonCodec, compress, decompress
 
 __all__ = ["CheckpointStore"]
@@ -122,10 +126,7 @@ class CheckpointStore:
         buf = io.BytesIO()
         np.savez(buf, **{k.replace("/", "|"): v for k, v in flat.items()})
         comp = compress(buf.getvalue(), level=3)
-        with open(shard_path, "wb") as fh:
-            fh.write(comp)
-            fh.flush()
-            os.fsync(fh.fileno())
+        atomic_write_bytes(shard_path, comp)
         manifest = {
             "tag": tag,
             "digest": self._digest(flat),
@@ -137,10 +138,7 @@ class CheckpointStore:
             "meta": extra_meta or {},
         }
         mpath = os.path.join(tmp, "manifest.json")
-        with open(mpath, "wb") as fh:
-            fh.write(JsonCodec().encode(manifest, pretty=True))
-            fh.flush()
-            os.fsync(fh.fileno())
+        atomic_write_bytes(mpath, JsonCodec().encode(manifest, pretty=True))
         # atomic publish
         if os.path.isdir(final):
             shutil.rmtree(final)

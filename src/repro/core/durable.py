@@ -49,7 +49,10 @@ _HEADER = struct.Struct("<II")  # (length, crc32)
 
 @dataclass
 class JournalRecord:
-    kind: str                      # RUN_START | NODE_START | NODE_COMMIT | NODE_REQUEUE | NODE_FAIL | RUN_END | CKPT
+    """One journal event — see docs/journal-format.md §2 for the field contract."""
+
+    kind: str                      # RUN_START | NODE_START | NODE_COMMIT | NODE_REQUEUE
+    #                              # | CACHE_HIT | CACHE_STORE | NODE_FAIL | RUN_END | CKPT
     node_id: str = ""
     context_digest: str = ""
     input_digest: str = ""
@@ -138,7 +141,9 @@ class Journal:
         """Histogram of record kinds — cheap integrity/debug view of a run.
 
         E.g. a fault-tolerant cluster run reads as RUN_START=1, NODE_START=n,
-        NODE_REQUEUE=k (worker evictions), NODE_COMMIT=n, RUN_END=1.
+        NODE_REQUEUE=k (worker evictions), NODE_COMMIT=n, RUN_END=1; a
+        cache-accelerated run additionally shows CACHE_HIT=h and
+        CACHE_STORE=n-h (every hit still commits, so NODE_COMMIT stays n).
         """
         return dict(Counter(rec.kind for rec in self.records()))
 

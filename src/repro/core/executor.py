@@ -18,6 +18,12 @@ straggler speculation, and requeue-on-eviction fault tolerance (first
 commit wins — duplicates are idempotent by replay). The full dispatch/
 readiness/eviction/speculation state machine is specified in
 docs/distributed-execution.md.
+
+Both executors optionally consult a cross-run ``repro.cache.ResultCache``
+(keyed by fn/input/context digests) after the replay oracle and before any
+execution or dispatch; hits and stores are journaled as ``CACHE_HIT`` /
+``CACHE_STORE`` records so cache-accelerated runs stay fully replayable.
+See docs/result-cache.md for the cache/journal contract.
 """
 from __future__ import annotations
 
@@ -28,6 +34,8 @@ from collections import deque
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.cache import CacheKey, CachedResult, ResultCache
 
 from .context import Context, EMPTY_CONTEXT
 from .durable import Journal, JournalRecord, ReplayCache, payload_digest
@@ -52,20 +60,32 @@ class WithContext:
 
 @dataclass
 class ExecutionReport:
+    """What a run did: outputs/contexts per node, and how each node resolved.
+
+    Every exec node lands in exactly one of ``replayed`` (this journal
+    already committed it), ``cached`` (answered by the cross-run result
+    cache), or ``executed`` (actually ran).
+    """
+
     outputs: Dict[str, Any]
     contexts: Dict[str, Context]
     replayed: Tuple[str, ...]
     executed: Tuple[str, ...]
     wall_s: float
+    cached: Tuple[str, ...] = ()
 
 
 class _BaseExecutor:
+    """Shared durable-commit, replay-lookup, and result-cache machinery."""
+
     def __init__(self, journal: Optional[Journal] = None,
                  retry: Optional[RetryPolicy] = None,
+                 cache: Optional[ResultCache] = None,
                  spill_put: Optional[Callable[[str, Any], str]] = None,
                  spill_get: Optional[Callable[[str], Any]] = None):
         self.journal = journal
         self.retry = retry or RetryPolicy()
+        self.cache = cache
         self.replay = ReplayCache(journal) if journal is not None else ReplayCache()
         self._spill_put = spill_put
         self._spill_get = spill_get
@@ -105,8 +125,62 @@ class _BaseExecutor:
                 children[d].append(nid)
         return gdeps, deps_left, children
 
+    # -- cross-run result cache (repro.cache; docs/result-cache.md) ----------
+    def _cache_key(self, node: "Node | UnionNode", ctx_digest: str,
+                   in_digest: str) -> Optional[CacheKey]:
+        """Content-addressed key for this (fn, inputs, ξ) — None when uncached."""
+        if self.cache is None:
+            return None
+        return CacheKey(fn=node.fn_digest(), inputs=in_digest, context=ctx_digest)
+
+    def _cache_probe(self, node_id: str, key: Optional[CacheKey],
+                     ctx_digest: str, in_digest: str) -> Optional[CachedResult]:
+        """Consult the result cache; a hit journals CACHE_HIT + NODE_COMMIT.
+
+        The commit carries the cached payload, so the journal of a
+        cache-accelerated run replays standalone — auditability is never
+        delegated to cache availability.
+        """
+        if key is None:
+            return None
+        ent = self.cache.get(key)
+        if ent is None:
+            return None
+        if self.journal is not None:
+            self.journal.append(JournalRecord(
+                kind="CACHE_HIT", node_id=node_id, context_digest=ctx_digest,
+                input_digest=in_digest, output_digest=ent.output_digest,
+                meta={"key": key.id}))
+        meta: Dict[str, Any] = {"cache": key.id}
+        if ent.facts:
+            meta["facts"] = dict(ent.facts)
+        self._commit(node_id, ctx_digest, in_digest, ent.value, 0, meta=meta)
+        return ent
+
+    def _cache_store(self, node_id: str, key: Optional[CacheKey],
+                     ctx_digest: str, in_digest: str, value: Any,
+                     facts: Optional[Mapping[str, Any]] = None) -> None:
+        """Commit a freshly-executed result into the cache (journals CACHE_STORE).
+
+        Uncacheable outputs (unserializable by the payload codec) are skipped
+        without failing the run — the node simply stays cold.
+        """
+        if key is None:
+            return
+        try:
+            ent = self.cache.put(key, value, facts=facts)
+        except Exception:
+            self.cache.stats["uncacheable"] += 1
+            return
+        if self.journal is not None:
+            self.journal.append(JournalRecord(
+                kind="CACHE_STORE", node_id=node_id, context_digest=ctx_digest,
+                input_digest=in_digest, output_digest=ent.output_digest,
+                meta={"key": key.id}))
+
     def _lookup(self, node_id: str, ctx_digest: str, in_digest: str
                 ) -> "Optional[_Found]":
+        """Replay oracle: the committed output for (node, ξ, inputs), if any."""
         rec = self.replay.lookup(node_id, ctx_digest, in_digest)
         if rec is None:
             return None
@@ -145,13 +219,13 @@ class LocalExecutor(_BaseExecutor):
         self.max_workers = max_workers
 
     def run(self, graph: ContextGraph) -> ExecutionReport:
+        """Execute ``graph`` on the thread pool; returns the run's report."""
         t0 = time.time()
         levels, exec_nodes, member_to_group = graph.schedule()
         xi = graph.propagate_contexts(exec_nodes)
         outputs: Dict[str, Any] = {}
         out_ctx: Dict[str, Context] = {}
-        replayed: List[str] = []
-        executed: List[str] = []
+        resolved: Dict[str, List[str]] = {"replayed": [], "cached": [], "executed": []}
         lock = threading.Lock()
 
         # dependency counting for maximal overlap (scheduling-level deps)
@@ -178,16 +252,16 @@ class LocalExecutor(_BaseExecutor):
             ctx = effective_ctx(nid)
             if isinstance(node, UnionNode):
                 self._run_union(node, ctx, outputs, member_to_group,
-                                replayed, executed, lock)
+                                resolved, lock)
             else:
                 inputs = _inject_inputs(node, outputs, member_to_group)
-                value, was_replayed = self._run_atomic(node, ctx, inputs)
+                value, status = self._run_atomic(node, ctx, inputs)
                 with lock:
                     if isinstance(value, WithContext):
                         ctx = ctx.with_data(value.facts, origin=node.id)
                         value = value.output
                     outputs[nid] = value
-                    (replayed if was_replayed else executed).append(nid)
+                    resolved[status].append(nid)
             with lock:
                 out_ctx[nid] = ctx
 
@@ -212,12 +286,15 @@ class LocalExecutor(_BaseExecutor):
             self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
             self.journal.flush()
         return ExecutionReport(outputs=outputs, contexts=out_ctx,
-                               replayed=tuple(replayed), executed=tuple(executed),
+                               replayed=tuple(resolved["replayed"]),
+                               executed=tuple(resolved["executed"]),
+                               cached=tuple(resolved["cached"]),
                                wall_s=time.time() - t0)
 
     # -- atomic execution with retries ----------------------------------------
     def _run_atomic(self, node: Node, ctx: Context,
-                    inputs: Mapping[str, Any]) -> Tuple[Any, bool]:
+                    inputs: Mapping[str, Any]) -> Tuple[Any, str]:
+        """Resolve one node; returns (value, "replayed"|"cached"|"executed")."""
         ctx_d = ctx.digest()
         in_d = payload_digest(inputs)
         hit = self._lookup(node.id, ctx_d, in_d)
@@ -225,8 +302,14 @@ class LocalExecutor(_BaseExecutor):
             if hit.facts:
                 # re-emit journaled context facts so downstream ξ digests
                 # match the original run exactly (replay completeness)
-                return WithContext(hit.value, hit.facts), True
-            return hit.value, True
+                return WithContext(hit.value, hit.facts), "replayed"
+            return hit.value, "replayed"
+        key = self._cache_key(node, ctx_d, in_d)
+        ent = self._cache_probe(node.id, key, ctx_d, in_d)
+        if ent is not None:
+            if ent.facts:
+                return WithContext(ent.value, ent.facts), "cached"
+            return ent.value, "cached"
         if node.fn is None:
             raise ValueError(f"node {node.id!r} has no callable")
         attempt = 0
@@ -248,14 +331,15 @@ class LocalExecutor(_BaseExecutor):
                     raise
                 time.sleep(self.retry.delay(attempt))
         commit_value = value.output if isinstance(value, WithContext) else value
-        meta = {"facts": dict(value.facts)} if isinstance(value, WithContext) \
-            else None
+        facts = dict(value.facts) if isinstance(value, WithContext) else None
+        meta = {"facts": facts} if facts else None
         self._commit(node.id, ctx_d, in_d, commit_value, attempt, meta=meta)
-        return value, False
+        self._cache_store(node.id, key, ctx_d, in_d, commit_value, facts=facts)
+        return value, "executed"
 
     def _run_union(self, group: UnionNode, ctx: Context, outputs: Dict[str, Any],
-                   member_to_group: Mapping[str, str], replayed: List[str],
-                   executed: List[str], lock: threading.Lock) -> None:
+                   member_to_group: Mapping[str, str],
+                   resolved: Dict[str, List[str]], lock: threading.Lock) -> None:
         """Union node = ONE atomic commit over deterministic member order."""
         ctx_d = ctx.digest()
         ext_inputs = {}
@@ -270,7 +354,14 @@ class LocalExecutor(_BaseExecutor):
         if hit is not None:
             with lock:
                 outputs[group.id] = hit.value
-                replayed.append(group.id)
+                resolved["replayed"].append(group.id)
+            return
+        key = self._cache_key(group, ctx_d, in_d)
+        ent = self._cache_probe(group.id, key, ctx_d, in_d)
+        if ent is not None:
+            with lock:
+                outputs[group.id] = ent.value
+                resolved["cached"].append(group.id)
             return
         member_out: Dict[str, Any] = {}
         # fixed-point style deterministic order: members sorted by id; a member
@@ -293,9 +384,10 @@ class LocalExecutor(_BaseExecutor):
             member_out[m.id] = v.output if isinstance(v, WithContext) else v
         self._commit(group.id, ctx_d, in_d, member_out, 0,
                      meta={"members": [m.id for m in order]})
+        self._cache_store(group.id, key, ctx_d, in_d, member_out)
         with lock:
             outputs[group.id] = member_out
-            executed.append(group.id)
+            resolved["executed"].append(group.id)
 
 
 @dataclass
@@ -310,6 +402,7 @@ class _Inflight:
     futures: List[Future] = field(default_factory=list)  # still-live attempts
     copies: int = 0    # total submissions ever made (speculation budget)
     attempts: int = 0  # gateway-level requeues observed (evictions, failures)
+    cache_key: Optional[CacheKey] = None  # store target once the result lands
 
 
 class ClusterExecutor(_BaseExecutor):
@@ -345,6 +438,7 @@ class ClusterExecutor(_BaseExecutor):
         self.straggler = StragglerWatch()
 
     def run(self, graph: ContextGraph) -> ExecutionReport:
+        """Execute ``graph`` through the gateway; returns the run's report."""
         t0 = time.time()
         _levels, exec_nodes, member_to_group = graph.schedule()  # validates DAG
         gdeps, deps_left, children = self._readiness(exec_nodes, member_to_group)
@@ -352,8 +446,9 @@ class ClusterExecutor(_BaseExecutor):
 
         outputs: Dict[str, Any] = {}
         out_ctx: Dict[str, Context] = {}
-        replayed: List[str] = []
-        executed: List[str] = []
+        resolved: Dict[str, List[str]] = {"replayed": [], "cached": [], "executed": []}
+        replayed, cached, executed = (resolved["replayed"], resolved["cached"],
+                                      resolved["executed"])
         ready = deque(sorted(nid for nid, c in deps_left.items() if c == 0))
         cv = threading.Condition()
         completions: deque = deque()  # (nid, Future) pairs, fed by callbacks
@@ -386,10 +481,13 @@ class ClusterExecutor(_BaseExecutor):
                     kind="NODE_REQUEUE", node_id=nid, attempt=req.attempts,
                     meta={"task": req.task_name, "reason": reason}))
 
-        def finish(nid: str, value: Any, ctx: Context, was_replayed: bool) -> None:
+        def done_count() -> int:
+            return len(replayed) + len(cached) + len(executed)
+
+        def finish(nid: str, value: Any, ctx: Context, status: str) -> None:
             outputs[nid] = value
             out_ctx[nid] = ctx
-            (replayed if was_replayed else executed).append(nid)
+            resolved[status].append(nid)
             for c in children[nid]:
                 deps_left[c] -= 1
                 if deps_left[c] == 0:
@@ -412,7 +510,15 @@ class ClusterExecutor(_BaseExecutor):
                     # re-emit journaled context facts so downstream ξ digests
                     # match the original run exactly (replay completeness)
                     ctx = ctx.with_data(hit.facts, origin=nid)
-                finish(nid, hit.value, ctx, True)
+                finish(nid, hit.value, ctx, "replayed")
+                return
+            key = self._cache_key(node, ctx_d, in_d)
+            ent = self._cache_probe(nid, key, ctx_d, in_d)
+            if ent is not None:
+                # answered before dispatch: no gateway round-trip, no worker
+                if ent.facts:
+                    ctx = ctx.with_data(ent.facts, origin=nid)
+                finish(nid, ent.value, ctx, "cached")
                 return
             if self.journal is not None:
                 self.journal.append(JournalRecord(
@@ -434,17 +540,18 @@ class ClusterExecutor(_BaseExecutor):
                                     attempt=attempt))
                                 self.journal.flush()
                             raise
-                meta = None
+                facts = dict(value.facts) if isinstance(value, WithContext) else None
+                meta = {"facts": facts} if facts else None
                 if isinstance(value, WithContext):
-                    meta = {"facts": dict(value.facts)}
                     ctx = ctx.with_data(value.facts, origin=nid)
                     value = value.output
                 self._commit(nid, ctx_d, in_d, value, attempt, meta=meta)
-                finish(nid, value, ctx, False)
+                self._cache_store(nid, key, ctx_d, in_d, value, facts=facts)
+                finish(nid, value, ctx, "executed")
                 return
             # register BEFORE submit: a requeue can fire the instant the
             # gateway pops the request, and it must find the node inflight
-            st = _Inflight(node, ctx, ctx_d, in_d, dict(inputs))
+            st = _Inflight(node, ctx, ctx_d, in_d, dict(inputs), cache_key=key)
             with cv:
                 inflight[nid] = st
             self.straggler.started(str(node.fn), nid)
@@ -482,15 +589,15 @@ class ClusterExecutor(_BaseExecutor):
         self.gateway.on_requeue = on_requeue
         try:
             total = len(exec_nodes)
-            while len(replayed) + len(executed) < total:
+            while done_count() < total:
                 while ready:
                     dispatch(ready.popleft())
-                if len(replayed) + len(executed) >= total:
+                if done_count() >= total:
                     break
                 with cv:
                     if not completions:
                         if not inflight:
-                            left = total - len(replayed) - len(executed)
+                            left = total - done_count()
                             raise RuntimeError(
                                 f"scheduler stalled: {left} nodes unfinished "
                                 "with nothing in flight")
@@ -534,7 +641,9 @@ class ClusterExecutor(_BaseExecutor):
                     self.straggler.finished(str(st.node.fn), nid)
                     self._commit(nid, st.ctx_digest, st.input_digest, value,
                                  requeues + copies - 1)
-                    finish(nid, value, st.ctx, False)
+                    self._cache_store(nid, st.cache_key, st.ctx_digest,
+                                      st.input_digest, value)
+                    finish(nid, value, st.ctx, "executed")
             if self.journal is not None:
                 self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
                 self.journal.flush()
@@ -545,4 +654,4 @@ class ClusterExecutor(_BaseExecutor):
                 inflight.clear()  # keep a dead chained handler's closure cheap
         return ExecutionReport(outputs=outputs, contexts=out_ctx,
                                replayed=tuple(replayed), executed=tuple(executed),
-                               wall_s=time.time() - t0)
+                               cached=tuple(cached), wall_s=time.time() - t0)

@@ -30,11 +30,13 @@ __all__ = ["TaskRequest", "WorkerHandle", "AllocationError", "Gateway",
 
 
 class AllocationError(RuntimeError):
-    pass
+    """No worker could (ever) take the request — retries/backoffs exhausted."""
 
 
 @dataclass
 class TaskRequest:
+    """One queued unit of work: task name, context, inputs, routing hints."""
+
     task_name: str
     ctx: Context = EMPTY_CONTEXT
     inputs: Mapping[str, Any] = field(default_factory=dict)
@@ -81,6 +83,7 @@ class WorkerHandle:
 
 def round_robin(workers: Sequence[WorkerHandle], req: TaskRequest,
                 state: Dict[str, Any]) -> Optional[WorkerHandle]:
+    """Cycle over live workers — the terminal graceful-degradation fallback."""
     live = [w for w in workers if w.live and w.app_live]
     if not live:
         return None
@@ -90,6 +93,7 @@ def round_robin(workers: Sequence[WorkerHandle], req: TaskRequest,
 
 def least_loaded(workers: Sequence[WorkerHandle], req: TaskRequest,
                  state: Dict[str, Any]) -> Optional[WorkerHandle]:
+    """Pick the live worker with the lowest (inflight + cpu) load score."""
     live = [w for w in workers if w.live and w.app_live]
     if not live:
         return None
@@ -165,6 +169,7 @@ class Gateway:
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "Gateway":
+        """Start heartbeat + dispatch threads; probe workers once, synchronously."""
         hb = threading.Thread(target=self._heartbeat_loop, name=f"{self.name}:hb",
                               daemon=True)
         hb.start()
@@ -178,6 +183,7 @@ class Gateway:
         return self
 
     def stop(self) -> None:
+        """Signal every gateway thread to exit and join them (bounded wait)."""
         self._stop.set()
         with self._cv:
             self._cv.notify_all()
@@ -195,6 +201,7 @@ class Gateway:
                inputs: Optional[Mapping[str, Any]] = None, *, priority: int = 0,
                affinity_key: str = "", max_attempts: int = 3,
                meta: Optional[Mapping[str, Any]] = None) -> Future:
+        """Enqueue one task for dispatch; returns the Future of its result."""
         req = TaskRequest(task_name=task_name, ctx=ctx, inputs=dict(inputs or {}),
                           priority=priority, affinity_key=affinity_key,
                           max_attempts=max_attempts, meta=dict(meta or {}))
@@ -208,6 +215,7 @@ class Gateway:
 
     def map(self, task_name: str, inputs_list: Sequence[Mapping[str, Any]],
             ctx: Context = EMPTY_CONTEXT, **kw) -> List[Future]:
+        """Submit one task per input mapping; returns the Futures in order."""
         return [self.submit(task_name, ctx, inp, **kw) for inp in inputs_list]
 
     # -- internals ------------------------------------------------------------
@@ -424,8 +432,10 @@ class Gateway:
         return Context.origin(facts, origin=self.name)
 
     def live_workers(self) -> List[WorkerHandle]:
+        """Workers currently passing both system and application liveness."""
         return [h for h in self.handles if h.live and h.app_live]
 
     def mean_alloc_us(self) -> float:
+        """Mean allocation-decision latency in microseconds (§5 bottleneck gauge)."""
         calls = max(1, self.metrics["alloc_calls"])
         return self.metrics["alloc_ns_total"] / calls / 1e3

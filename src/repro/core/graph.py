@@ -12,13 +12,111 @@ Context propagation follows the paper exactly:
 """
 from __future__ import annotations
 
+import hashlib
+import itertools
 import time
 from dataclasses import dataclass, field
+from types import CodeType, ModuleType
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.wire import DIGEST_HEX_LEN, canonical_bytes
 
 from .context import Context, EMPTY_CONTEXT
 
-__all__ = ["Node", "UnionNode", "ContextGraph", "CycleError", "toposort_levels"]
+__all__ = ["Node", "UnionNode", "ContextGraph", "CycleError", "fn_digest",
+           "toposort_levels"]
+
+# Closure cells holding values that are neither callable nor canonically
+# serializable get a process-unique marker: such functions simply never hit
+# the result cache (a miss, never a stale value from mutated captured state).
+_OPAQUE_CELLS = itertools.count()
+
+
+def _feed_code(h: "hashlib._Hash", code: CodeType, seen: set) -> None:
+    """Hash a code object structurally — never via repr, which embeds
+    memory addresses for nested code objects (lambdas, comprehensions) and
+    would fork the digest on every process."""
+    h.update(code.co_code)
+    h.update(repr(code.co_names).encode())
+    for const in code.co_consts:
+        if isinstance(const, CodeType):
+            h.update(b"<code>")
+            _feed_code(h, const, seen)
+        else:
+            h.update(repr(const).encode())
+
+
+def _feed_value(h: "hashlib._Hash", value: Any, seen: set) -> None:
+    """Hash a captured value: callables recurse, modules hash by name,
+    serializable values hash by content, anything else is opaque (unique
+    marker — defeats caching)."""
+    if isinstance(value, ModuleType):  # locally-imported modules are common cells
+        h.update(b"mod:" + value.__name__.encode())
+        return
+    if callable(value):
+        h.update(b"fn:")
+        _feed_fn(h, value, seen)
+        return
+    try:
+        h.update(b"val:" + canonical_bytes(value))
+    except TypeError:
+        h.update(f"opaque:{next(_OPAQUE_CELLS)}".encode())
+
+
+def _feed_fn(h: "hashlib._Hash", fn: Any, seen: set) -> None:
+    if id(fn) in seen:  # mutually-recursive closures terminate deterministically
+        h.update(b"cycle:")
+        return
+    seen.add(id(fn))
+    target = fn
+    while hasattr(target, "__wrapped__"):
+        target = target.__wrapped__
+    seen.add(id(target))
+    code = getattr(target, "__code__", None)
+    if code is None:
+        name = getattr(target, "__qualname__", None) or type(target).__qualname__
+        mod = getattr(target, "__module__", None) or type(target).__module__
+        h.update(f"obj:{mod}:{name}".encode())
+        return
+    h.update(b"code:")
+    h.update(getattr(target, "__qualname__", "").encode())
+    _feed_code(h, code, seen)
+    for default in getattr(target, "__defaults__", None) or ():
+        h.update(b"default:")
+        _feed_value(h, default, seen)
+    for cell in getattr(target, "__closure__", None) or ():
+        try:
+            captured = cell.cell_contents
+        except ValueError:  # empty cell (still being defined)
+            h.update(b"cell:empty")
+            continue
+        h.update(b"cell:")
+        _feed_value(h, captured, seen)
+
+
+def fn_digest(fn: "Callable[..., Any] | str | None") -> str:
+    """Deterministic identity of a task implementation — the cache key's first leg.
+
+    Registry task names (string ``fn``) digest by name: the deployment owns
+    versioning of named tasks (bump the name, or fold a version fact into the
+    context, when semantics change). Python callables digest by *code*:
+    qualname, bytecode, names, consts (nested code objects hashed
+    structurally, so lambdas/comprehensions stay process-stable), defaults,
+    and closure cells — captured callables recurse (cycle-safe), captured
+    serializable values hash by canonical content, and anything opaque gets
+    a unique marker so the function never hits the cache rather than risking
+    a stale hit on mutated captured state. Callables without a code object
+    (builtins, callable instances) digest by module-qualified name only —
+    instance state is NOT captured; see docs/result-cache.md §3.
+    """
+    h = hashlib.sha256()
+    if fn is None:
+        h.update(b"none:")
+    elif isinstance(fn, str):
+        h.update(b"task:" + fn.encode())
+    else:
+        _feed_fn(h, fn, set())
+    return h.hexdigest()[:DIGEST_HEX_LEN]
 
 
 class CycleError(ValueError):
@@ -44,7 +142,16 @@ class Node:
     timeout_s: Optional[float] = None
 
     def kwarg_for(self, dep_id: str) -> str:
+        """Kwarg name a dependency's output is injected under (alias-aware)."""
         return self.aliases.get(dep_id, dep_id)
+
+    def fn_digest(self) -> str:
+        """Memoized :func:`fn_digest` of this node's callable / task name."""
+        d = getattr(self, "_fn_digest", None)
+        if d is None:
+            d = fn_digest(self.fn)
+            self._fn_digest = d
+        return d
 
 
 @dataclass
@@ -57,10 +164,25 @@ class UnionNode:
 
     @property
     def data(self) -> Dict[str, Any]:
+        """Merged Ψ of all members (deterministic member-id order)."""
         merged: Dict[str, Any] = {}
         for m in sorted(self.members, key=lambda n: n.id):
             merged.update(m.data)
         return merged
+
+    def fn_digest(self) -> str:
+        """Combined fn digest: members' (id, fn) pairs in deterministic order."""
+        d = getattr(self, "_fn_digest", None)
+        if d is None:
+            h = hashlib.sha256()
+            for m in sorted(self.members, key=lambda n: n.id):
+                h.update(m.id.encode())
+                h.update(b"\x00")
+                h.update(m.fn_digest().encode())
+                h.update(b"\n")
+            d = h.hexdigest()[:DIGEST_HEX_LEN]
+            self._fn_digest = d
+        return d
 
 
 def _tarjan_scc(ids: Sequence[str], deps_of: Mapping[str, Sequence[str]]) -> List[List[str]]:

@@ -26,14 +26,14 @@ from .base import Codec, DIGEST_HEX_LEN, normalize, stdlib_canonical
 from .compress import compress, decompress, zstd_available
 from .json_codec import JsonCodec
 from .msgpack_codec import MsgpackCodec
-from .payload import decode_payload, encode_payload, payload_digest
+from .payload import PayloadDecodeError, decode_payload, encode_payload, payload_digest
 
 __all__ = [
     "Codec", "JsonCodec", "MsgpackCodec", "DIGEST_HEX_LEN",
     "normalize", "stdlib_canonical",
     "available_codecs", "get_codec", "default_codec", "set_default_codec",
     "canonical_bytes", "canonical_digest", "from_canonical",
-    "encode_payload", "decode_payload", "payload_digest",
+    "PayloadDecodeError", "encode_payload", "decode_payload", "payload_digest",
     "compress", "decompress", "zstd_available",
 ]
 
@@ -68,6 +68,7 @@ def available_codecs() -> List[str]:
 
 
 def get_codec(name: str) -> Codec:
+    """Return the (memoized) codec registered under ``name``."""
     if name not in _FACTORIES:
         raise KeyError(f"unknown wire codec {name!r}; choose from {sorted(_FACTORIES)}")
     if name not in _instances:
@@ -100,10 +101,12 @@ def set_default_codec(name: Optional[str]) -> Codec:
 # -- canonical form (backend-stable: same bytes whatever the codec) ----------
 
 def canonical_bytes(value: Any) -> bytes:
+    """Backend-stable hashing bytes of ``value`` (identical under any codec)."""
     return default_codec().canonical_bytes(value)
 
 
 def canonical_digest(value: Any) -> str:
+    """Truncated sha256 of :func:`canonical_bytes` — the journal id form."""
     return default_codec().canonical_digest(value)
 
 

@@ -97,6 +97,7 @@ class Codec(ABC):
         return stdlib_canonical(normalize(value))
 
     def canonical_digest(self, value: Any) -> str:
+        """Truncated sha256 of :meth:`canonical_bytes` — the journal id form."""
         return hashlib.sha256(self.canonical_bytes(value)).hexdigest()[:DIGEST_HEX_LEN]
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid

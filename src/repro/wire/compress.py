@@ -34,16 +34,19 @@ except ImportError:  # optional: repro[compression]
 
 
 def zstd_available() -> bool:
+    """True iff the optional ``zstandard`` package is importable."""
     return _zstd is not None
 
 
 def compress(data: bytes, level: int = 3) -> bytes:
+    """Compress with the best available scheme, prefixed with its tag byte."""
     if _zstd is not None:
         return bytes([TAG_ZSTD]) + _zstd.ZstdCompressor(level=level).compress(data)
     return bytes([TAG_ZLIB]) + zlib.compress(data, min(level * 2, 9))
 
 
 def decompress(frame: bytes) -> bytes:
+    """Decompress a tagged frame, dispatching on its self-describing tag byte."""
     if not frame:
         raise ValueError("empty compression frame")
     tag = frame[0]

@@ -15,9 +15,12 @@ __all__ = ["JsonCodec"]
 
 
 class JsonCodec(Codec):
+    """Stdlib JSON backend: transport bytes ARE the canonical bytes."""
+
     name = "json"
 
     def encode(self, obj: Any, pretty: bool = False) -> bytes:
+        """Canonical JSON bytes; ``pretty=True`` indents for manifests."""
         tree = normalize(obj)
         if pretty:
             return json.dumps(tree, ensure_ascii=False, allow_nan=False,
@@ -25,4 +28,5 @@ class JsonCodec(Codec):
         return stdlib_canonical(tree)
 
     def decode(self, data: bytes) -> Any:
+        """Parse JSON transport bytes back to a value tree."""
         return json.loads(data)

@@ -22,6 +22,7 @@ EXT_COMPLEX = 2
 
 
 def pack_default(obj: Any) -> Any:
+    """msgpack ``default`` hook: arrays/complex/sets → ExtType or list frames."""
     if hasattr(obj, "__array__"):  # np/jax arrays and scalars
         import numpy as np
 
@@ -36,6 +37,7 @@ def pack_default(obj: Any) -> Any:
 
 
 def unpack_ext(code: int, data: bytes) -> Any:
+    """msgpack ``ext_hook``: reconstruct arrays/complex from ExtType frames."""
     if code == EXT_NDARRAY:
         import numpy as np
 
@@ -48,11 +50,15 @@ def unpack_ext(code: int, data: bytes) -> Any:
 
 
 class MsgpackCodec(Codec):
+    """Binary msgpack backend with lossless ndarray/complex extensions."""
+
     name = "msgpack"
 
     def encode(self, obj: Any) -> bytes:
+        """Binary transport bytes (arrays preserved via ExtType frames)."""
         return msgpack.packb(obj, default=pack_default, use_bin_type=True)
 
     def decode(self, data: bytes) -> Any:
+        """Inverse of :meth:`encode` (ExtType frames → arrays/complex)."""
         return msgpack.unpackb(data, ext_hook=unpack_ext, raw=False,
                                strict_map_key=False)

@@ -23,10 +23,14 @@ __all__ = ["OrjsonCodec"]
 
 
 class OrjsonCodec(Codec):
+    """orjson backend: fast transport JSON, canonical form inherited."""
+
     name = "orjson"
 
     def encode(self, obj: Any) -> bytes:
+        """Fast (non-canonical) JSON transport bytes of the normalized tree."""
         return orjson.dumps(normalize(obj))
 
     def decode(self, data: bytes) -> Any:
+        """Parse JSON transport bytes back to a value tree."""
         return orjson.loads(data)

@@ -19,18 +19,34 @@ from .base import DIGEST_HEX_LEN
 from .compress import compress, decompress
 from .msgpack_codec import pack_default, unpack_ext
 
-__all__ = ["encode_payload", "decode_payload", "payload_digest"]
+__all__ = ["PayloadDecodeError", "encode_payload", "decode_payload", "payload_digest"]
+
+
+class PayloadDecodeError(ValueError):
+    """A payload frame that cannot be decoded (corrupt or incompatible bytes).
+
+    Raised by :func:`decode_payload` instead of leaking backend-specific
+    exceptions, so callers holding untrusted bytes — the result cache's
+    corrupted-blob fallback, journal tail recovery — can catch one type.
+    """
 
 
 def encode_payload(obj: Any, level: int = 3) -> bytes:
+    """Encode a pytree as a tagged-compressed msgpack frame (journal body)."""
     body = msgpack.packb(obj, default=pack_default, use_bin_type=True)
     return compress(body, level=level)
 
 
 def decode_payload(buf: bytes) -> Any:
-    body = decompress(buf)
-    return msgpack.unpackb(body, ext_hook=unpack_ext, raw=False,
-                           strict_map_key=False)
+    """Inverse of :func:`encode_payload`; malformed bytes raise PayloadDecodeError."""
+    try:
+        body = decompress(buf)
+        return msgpack.unpackb(body, ext_hook=unpack_ext, raw=False,
+                               strict_map_key=False)
+    except ImportError:
+        raise  # actionable "install zstandard" from repro.wire.compress
+    except Exception as exc:
+        raise PayloadDecodeError(f"undecodable payload frame: {exc}") from exc
 
 
 def payload_digest(obj: Any) -> str:
@@ -39,15 +55,15 @@ def payload_digest(obj: Any) -> str:
 
     h = hashlib.sha256()
 
-    def feed(x: Any) -> None:
+    def _feed(x: Any) -> None:
         if isinstance(x, Mapping):
             for k in sorted(x, key=str):
                 h.update(str(k).encode())
-                feed(x[k])
+                _feed(x[k])
         elif isinstance(x, (list, tuple)):
             h.update(b"[")
             for v in x:
-                feed(v)
+                _feed(v)
             h.update(b"]")
         elif hasattr(x, "__array__"):
             arr = np.asarray(x)
@@ -57,5 +73,5 @@ def payload_digest(obj: Any) -> str:
         else:
             h.update(repr(x).encode())
 
-    feed(obj)
+    _feed(obj)
     return h.hexdigest()[:DIGEST_HEX_LEN]

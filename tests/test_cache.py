@@ -1,0 +1,479 @@
+"""Content-addressed result cache (repro.cache) — correctness contract.
+
+Covers the docs/result-cache.md guarantees:
+  - cold run executes and stores; warm run hits without executing, including
+    across a full process restart (disk tier, fresh interpreter);
+  - any context-entry change flips the key (invalidation by construction);
+  - a corrupted blob is dropped and the node recomputed — never a crash,
+    never a stale value;
+  - a cache-accelerated run's journal is a complete standalone record: it
+    replays with zero re-execution and CACHE_HIT records in kinds();
+  - explicit eviction (prefix namespace) and the byte-budget LRU sweep.
+"""
+
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.cache import CacheKey, FileCacheBackend, MemoryLRU, ResultCache
+from repro.core import (
+    ClusterExecutor,
+    Context,
+    ContextGraph,
+    Gateway,
+    InProcWorker,
+    Journal,
+    LocalExecutor,
+    TaskRegistry,
+    WithContext,
+)
+from repro.core.graph import fn_digest
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+# Call accounting lives in a module GLOBAL on purpose: fn_digest hashes
+# closure cell values (capturing a mutating accumulator would — correctly,
+# conservatively — flip the cache key between runs; see result-cache.md §3),
+# so the tasks must reference their counter globally, not via a closure.
+CALLS: list = []
+
+
+def _src(ctx):
+    CALLS.append("src")
+    return 10
+
+
+def _emit(ctx, src):
+    CALLS.append("emit")
+    return WithContext(src + 1, {"flavor": "durian"})
+
+
+def _sink(ctx, emit):
+    CALLS.append("sink")
+    return [emit, ctx.get("flavor")]
+
+
+def build_graph(origin=None):
+    """Three-node chain with a WithContext fact emitted in the middle."""
+    g = ContextGraph(origin=origin or Context.origin({"env": "test"}), name="g")
+    g.add("src", _src)
+    g.add("emit", _emit, deps=["src"])
+    g.add("sink", _sink, deps=["emit"])
+    return g
+
+
+# --------------------------------------------------------------------------
+# key derivation
+# --------------------------------------------------------------------------
+
+
+def test_fn_digest_distinguishes_code_and_names():
+    assert fn_digest("work") != fn_digest("work2")
+    assert len(fn_digest("work")) == 16
+
+    f = lambda ctx, x: x + 1  # noqa: E731
+    g = lambda ctx, x: x + 2  # noqa: E731
+    h = lambda ctx, x: x + 1  # noqa: E731  (same code as f)
+    assert fn_digest(f) != fn_digest(g)
+    assert fn_digest(f) == fn_digest(h)
+    assert fn_digest(None) != fn_digest("work")
+
+
+def test_fn_digest_sees_closure_values():
+    def make(n):
+        def task(ctx):
+            return n
+        return task
+
+    assert fn_digest(make(1)) != fn_digest(make(2))
+    assert fn_digest(make(3)) == fn_digest(make(3))
+
+
+def test_fn_digest_cycle_safe_for_corecursive_closures():
+    def make():
+        def a(x):
+            return b(x)
+
+        def b(x):
+            return a(x - 1) if x else 0
+
+        return a
+
+    assert fn_digest(make()) == fn_digest(make())  # no RecursionError, stable
+
+
+def test_fn_digest_stable_across_processes_with_nested_lambda():
+    """Nested code objects must hash structurally, not by repr (addresses)."""
+    script = (
+        "from repro.core.graph import fn_digest\n"
+        "def task(ctx, xs):\n"
+        "    pick = lambda v: v * 2\n"
+        "    return [pick(v) for v in xs]\n"
+        "print('DIGEST', fn_digest(task))\n"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+
+    def digest_in_subprocess():
+        proc = subprocess.run(
+            [sys.executable, "-c", script],
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=120,
+        )
+        assert proc.returncode == 0, proc.stderr
+        return proc.stdout.strip()
+
+    assert digest_in_subprocess() == digest_in_subprocess()
+
+
+def test_fn_digest_opaque_capture_never_hits():
+    """Captures without canonical bytes digest as opaque: miss, never stale."""
+
+    class Config:
+        threshold = 1
+
+    cfg = Config()
+
+    def make():
+        def task(ctx):
+            return cfg.threshold
+
+        return task
+
+    # unique per digest: a mutated cfg can never be answered with a stale hit
+    assert fn_digest(make()) != fn_digest(make())
+
+
+def test_cache_key_id_and_relpath_roundtrip():
+    k = CacheKey(fn="a" * 16, inputs="b" * 16, context="c" * 16)
+    assert CacheKey.parse(k.id) == k
+    assert CacheKey.from_relpath(k.relpath()) == k
+    assert k.id.startswith(k.fn)
+
+
+# --------------------------------------------------------------------------
+# executor integration: cold → warm → replay
+# --------------------------------------------------------------------------
+
+
+def test_local_cold_stores_then_warm_hits(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    CALLS.clear()
+
+    with Journal(str(tmp_path / "cold.wal"), sync="batch") as j:
+        r1 = LocalExecutor(journal=j, cache=cache).run(build_graph())
+    assert set(r1.executed) == {"src", "emit", "sink"}
+    assert r1.cached == () and r1.replayed == ()
+    assert r1.outputs["sink"] == [11, "durian"]
+    assert len(CALLS) == 3
+
+    with Journal(str(tmp_path / "cold.wal"), sync="never") as j:
+        kinds = j.kinds()
+    assert kinds["CACHE_STORE"] == 3 and kinds["NODE_COMMIT"] == 3
+
+    # warm: fresh journal, nothing executes, facts re-emitted downstream
+    with Journal(str(tmp_path / "warm.wal"), sync="batch") as j:
+        r2 = LocalExecutor(journal=j, cache=cache).run(build_graph())
+    assert set(r2.cached) == {"src", "emit", "sink"}
+    assert r2.executed == () and len(CALLS) == 3
+    assert r2.outputs["sink"] == [11, "durian"]
+
+
+def test_hit_miss_across_subprocess_restart(tmp_path):
+    """Warm hits must survive a full interpreter restart (disk tier)."""
+    script = (
+        "import sys\n"
+        "from repro.cache import ResultCache\n"
+        "from repro.core import Context, ContextGraph, LocalExecutor\n"
+        "cache = ResultCache(sys.argv[1])\n"
+        "g = ContextGraph(origin=Context.origin({'env': 'sub'}), name='sub')\n"
+        "g.add('a', lambda ctx: 2)\n"
+        "g.add('b', lambda ctx, a: a * 21, deps=['a'])\n"
+        "rep = LocalExecutor(cache=cache).run(g)\n"
+        "print('EXECUTED', len(rep.executed), 'CACHED', len(rep.cached),\n"
+        "      'OUT', rep.outputs['b'])\n"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    root = str(tmp_path / "cache")
+
+    def run_once():
+        proc = subprocess.run(
+            [sys.executable, "-c", script, root],
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=120,
+        )
+        assert proc.returncode == 0, proc.stderr
+        return proc.stdout
+
+    assert "EXECUTED 2 CACHED 0 OUT 42" in run_once()  # cold process
+    assert "EXECUTED 0 CACHED 2 OUT 42" in run_once()  # restarted process
+
+
+def test_context_change_invalidates(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    CALLS.clear()
+    LocalExecutor(cache=cache).run(build_graph())
+    assert len(CALLS) == 3
+
+    # same graph, different origin context ⇒ different ξ digests ⇒ misses
+    changed = Context.origin({"env": "CHANGED"})
+    r = LocalExecutor(cache=cache).run(build_graph(origin=changed))
+    assert set(r.executed) == {"src", "emit", "sink"}
+    assert len(CALLS) == 6
+
+    # original context still hits — the old entries were not clobbered
+    r2 = LocalExecutor(cache=cache).run(build_graph())
+    assert set(r2.cached) == {"src", "emit", "sink"}
+    assert len(CALLS) == 6
+
+
+def test_corrupted_blob_falls_back_to_recompute(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    CALLS.clear()
+    LocalExecutor(cache=cache).run(build_graph())
+    assert len(CALLS) == 3
+
+    blobs = []
+    for dirpath, _dirs, files in os.walk(cache.backend.root):
+        blobs.extend(os.path.join(dirpath, f) for f in files)
+    assert len(blobs) == 3
+    for path in blobs:
+        with open(path, "r+b") as fh:
+            raw = fh.read()
+            fh.seek(len(raw) // 2)
+            fh.write(b"\xff\xff\xff\xff")
+
+    # fresh cache object over the same root: disk is the only tier that hits
+    fresh = ResultCache(str(tmp_path / "cache"))
+    r = LocalExecutor(cache=fresh).run(build_graph())
+    assert set(r.executed) == {"src", "emit", "sink"}  # recompute, no crash
+    assert len(CALLS) == 6
+    assert fresh.stats["corrupt"] == 3
+    assert r.outputs["sink"] == [11, "durian"]
+
+    # the corrupt blobs were dropped and re-stored; next run hits again
+    again = ResultCache(str(tmp_path / "cache"))
+    r2 = LocalExecutor(cache=again).run(build_graph())
+    assert set(r2.cached) == {"src", "emit", "sink"}
+    assert len(CALLS) == 6
+
+
+def test_cache_scarred_journal_replays_clean(tmp_path):
+    """The warm journal is a standalone durable record: replays, no cache."""
+    cache = ResultCache(str(tmp_path / "cache"))
+    LocalExecutor(cache=cache).run(build_graph())
+    warm = str(tmp_path / "warm.wal")
+    with Journal(warm, sync="batch") as j:
+        r_warm = LocalExecutor(journal=j, cache=cache).run(build_graph())
+    assert set(r_warm.cached) == {"src", "emit", "sink"}
+
+    with Journal(warm, sync="never") as j:
+        kinds = j.kinds()
+    assert kinds["CACHE_HIT"] == 3 and kinds["NODE_COMMIT"] == 3
+
+    CALLS.clear()
+    with Journal(warm, sync="batch") as j:
+        r_replay = LocalExecutor(journal=j).run(build_graph())
+    assert set(r_replay.replayed) == {"src", "emit", "sink"}
+    assert r_replay.executed == () and r_replay.cached == ()
+    assert CALLS == []
+    assert r_replay.outputs["sink"] == [11, "durian"]
+
+    # with journal AND cache, the journal (replay) wins — no double counting
+    with Journal(warm, sync="batch") as j:
+        r_both = LocalExecutor(journal=j, cache=cache).run(build_graph())
+    assert set(r_both.replayed) == {"src", "emit", "sink"}
+    assert r_both.cached == ()
+
+
+def test_cluster_warm_run_never_dispatches(tmp_path):
+    reg = TaskRegistry()
+    calls = []
+
+    @reg.task("work")
+    def work(ctx, **kw):
+        calls.append(1)
+        return sum(v for v in kw.values() if isinstance(v, int)) + 1
+
+    def build():
+        g = ContextGraph(name="cl")
+        g.add("a", "work")
+        g.add("b", "work", deps=["a"])
+        g.add("c", "work", deps=["a", "b"])
+        return g
+
+    cache = ResultCache(str(tmp_path / "cache"))
+    with Journal(str(tmp_path / "cold.wal"), sync="batch") as j:
+        with Gateway([InProcWorker("w0", reg)]) as gw:
+            r1 = ClusterExecutor(gw, journal=j, cache=cache, speculative=False).run(build())
+    assert len(r1.executed) == 3 and len(calls) == 3
+
+    with Journal(str(tmp_path / "warm.wal"), sync="batch") as j:
+        with Gateway([InProcWorker("w0", reg)]) as gw:
+            r2 = ClusterExecutor(gw, journal=j, cache=cache, speculative=False).run(build())
+    assert set(r2.cached) == {"a", "b", "c"} and r2.executed == ()
+    assert len(calls) == 3  # no task reached a worker
+    assert r2.outputs == r1.outputs
+
+    with Journal(str(tmp_path / "warm.wal"), sync="never") as j:
+        kinds = j.kinds()
+    assert kinds["CACHE_HIT"] == 3 and kinds["NODE_COMMIT"] == 3
+    assert "NODE_START" not in kinds  # hits resolve before dispatch
+
+    # the cache-scarred cluster journal replays clean on a cacheless executor
+    with Journal(str(tmp_path / "warm.wal"), sync="batch") as j:
+        with Gateway([InProcWorker("w0", reg)]) as gw:
+            r3 = ClusterExecutor(gw, journal=j, speculative=False).run(build())
+    assert set(r3.replayed) == {"a", "b", "c"}
+    assert r3.executed == () and r3.cached == ()
+
+
+def test_uncacheable_output_skipped_not_fatal(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    g = ContextGraph(name="unc")
+    g.add("fn_factory", lambda ctx: (lambda x: x))  # not payload-encodable
+    r = LocalExecutor(cache=cache).run(g)
+    assert r.executed == ("fn_factory",)
+    assert cache.stats["uncacheable"] == 1
+    assert cache.stats["stores"] == 0
+
+
+# --------------------------------------------------------------------------
+# eviction
+# --------------------------------------------------------------------------
+
+
+def test_evict_prefix_namespace(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    fn_a, fn_b = fn_digest("task_a"), fn_digest("task_b")
+    in_1, in_2, ctx = "1" * 16, "2" * 16, "c" * 16
+    cache.put(CacheKey(fn_a, in_1, ctx), "a1")
+    cache.put(CacheKey(fn_a, in_2, ctx), "a2")
+    cache.put(CacheKey(fn_b, in_1, ctx), "b1")
+
+    assert cache.evict(fn_a) == 2  # whole-function invalidation
+    assert cache.get(CacheKey(fn_a, in_1, ctx)) is None
+    assert cache.get(CacheKey(fn_a, in_2, ctx)) is None
+    assert cache.get(CacheKey(fn_b, in_1, ctx)).value == "b1"
+
+    assert cache.evict("") == 1  # clear() semantics
+    assert cache.get(CacheKey(fn_b, in_1, ctx)) is None
+
+
+def test_file_backend_byte_budget_evicts_lru(tmp_path):
+    backend = FileCacheBackend(str(tmp_path / "cache"), max_bytes=400)
+    cache = ResultCache(backend=backend)
+    ctx = "c" * 16
+    keys = [CacheKey(fn_digest(f"t{i}"), "i" * 16, ctx) for i in range(8)]
+    for i, k in enumerate(keys):
+        cache.put(k, list(range(40)))
+        time.sleep(0.01)  # distinct mtimes for LRU ordering
+    assert backend.size_bytes() <= 400
+    # oldest entries were swept, the newest survives
+    assert backend.get(keys[0]) is None
+    assert backend.get(keys[-1]) is not None
+
+
+def test_memory_lru_bounded_and_recency_ordered():
+    lru = MemoryLRU(max_entries=2)
+    k = [CacheKey(str(i) * 16, "i" * 16, "c" * 16) for i in range(3)]
+    lru.put(k[0], "v0")
+    lru.put(k[1], "v1")
+    assert lru.get(k[0]) == "v0"  # refresh k0 ⇒ k1 becomes the eviction victim
+    lru.put(k[2], "v2")
+    assert len(lru) == 2
+    assert lru.get(k[1]) is None
+    assert lru.get(k[0]) == "v0" and lru.get(k[2]) == "v2"
+
+
+def test_stale_tmp_files_swept_on_open(tmp_path):
+    root = str(tmp_path / "cache")
+    os.makedirs(root)
+    stale = os.path.join(root, "aa.bb.tmp.123.456")
+    fresh = os.path.join(root, "cc.dd.tmp.789.012")
+    for path in (stale, fresh):
+        with open(path, "wb") as fh:
+            fh.write(b"orphan")
+    old = time.time() - 7200
+    os.utime(stale, (old, old))
+
+    FileCacheBackend(root)  # opening the root sweeps aged-out orphans
+    assert not os.path.exists(stale)
+    assert os.path.exists(fresh)  # could be a live writer's in-flight file
+
+
+def test_memory_only_cache_requires_no_root():
+    cache = ResultCache()  # no backend: single-process memoization still works
+    key = CacheKey("f" * 16, "i" * 16, "c" * 16)
+    assert cache.get(key) is None
+    cache.put(key, {"x": 1})
+    assert cache.get(key).value == {"x": 1}
+    assert cache.evict("") == 0  # nothing on disk to count
+
+
+def _union_a(ctx, b=None):
+    CALLS.append("a")
+    return 1 if b is None else b + 1
+
+
+def _union_b(ctx, a=None):
+    CALLS.append("b")
+    return 0 if a is None else a * 2
+
+
+def test_union_node_results_are_cacheable(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    CALLS.clear()
+
+    def build():
+        g = ContextGraph(name="u")
+        g.add("a", _union_a, deps=["b"])
+        g.add("b", _union_b, deps=["a"])
+        return g
+
+    r1 = LocalExecutor(cache=cache).run(build())
+    n_cold = len(CALLS)
+    assert len(r1.executed) == 1  # the contracted union node
+    r2 = LocalExecutor(cache=cache).run(build())
+    assert len(CALLS) == n_cold  # members did not re-run
+    assert len(r2.cached) == 1
+    assert r2.outputs == r1.outputs
+
+
+@pytest.mark.parametrize("executor", ["local", "cluster"])
+def test_warm_outputs_bitwise_equal_cold(tmp_path, executor):
+    """Cache round-trip must preserve payload values exactly."""
+    import numpy as np
+
+    cache = ResultCache(str(tmp_path / "cache"))
+
+    def make_local():
+        g = ContextGraph(name="eq")
+        g.add("arr", lambda ctx: np.arange(6, dtype=np.float32).reshape(2, 3))
+        return g
+
+    if executor == "local":
+        run = lambda: LocalExecutor(cache=cache).run(make_local())  # noqa: E731
+    else:
+        reg = TaskRegistry()
+
+        @reg.task("arr")
+        def arr(ctx):
+            return np.arange(6, dtype=np.float32).reshape(2, 3)
+
+        def run():
+            g = ContextGraph(name="eq")
+            g.add("arr", "arr")
+            with Gateway([InProcWorker("w0", reg)]) as gw:
+                return ClusterExecutor(gw, cache=cache, speculative=False).run(g)
+
+    r1, r2 = run(), run()
+    assert r2.cached == ("arr",)
+    np.testing.assert_array_equal(r1.outputs["arr"], r2.outputs["arr"])
+    assert r1.outputs["arr"].dtype == r2.outputs["arr"].dtype

@@ -1,0 +1,70 @@
+"""Check that intra-repo markdown links resolve to real files.
+
+Walks every ``*.md`` under the repository root, extracts inline links
+``[text](target)``, and verifies that each relative target exists on disk
+(after stripping any ``#fragment``). External schemes (http/https/mailto)
+and pure-fragment anchors are skipped. Exit code 1 and one line per broken
+link otherwise — run by the CI ``docs`` job and runnable locally:
+
+    python tools/check_links.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "runs", "node_modules"}
+# [text](target) — target ends at the first unescaped ')' or whitespace
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown_files() -> "list[str]":
+    """Every tracked-ish markdown file under the repo root."""
+    found = []
+    for dirpath, dirnames, filenames in os.walk(REPO_ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                found.append(os.path.join(dirpath, name))
+    return sorted(found)
+
+
+def check_file(md_path: str) -> "list[str]":
+    """Return one problem string per unresolvable relative link in ``md_path``."""
+    with open(md_path, encoding="utf-8") as fh:
+        text = fh.read()
+    problems = []
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for match in LINK_RE.finditer(line):
+            target = match.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(md_path), path))
+            if not os.path.exists(resolved):
+                rel_md = os.path.relpath(md_path, REPO_ROOT)
+                problems.append(f"{rel_md}:{lineno}: broken link -> {target}")
+    return problems
+
+
+def main() -> int:
+    """Check every markdown file; print problems; 0 iff all links resolve."""
+    files = iter_markdown_files()
+    problems = []
+    for md in files:
+        problems.extend(check_file(md))
+    for p in problems:
+        print(p)
+    status = "OK" if not problems else f"{len(problems)} broken links"
+    print(f"# checked {len(files)} markdown files: {status}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
