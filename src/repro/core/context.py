@@ -20,6 +20,7 @@ to prove a replayed node saw the same ξ. Serialization is delegated to
 context is the same whichever wire codec the host selected (stdlib json,
 msgpack, or the optional fast backend).
 """
+
 from __future__ import annotations
 
 import hashlib
@@ -71,8 +72,9 @@ class ContextEntry:
 
     @staticmethod
     def make(key: str, value: Any, origin: str, lamport: int = 0) -> "ContextEntry":
-        return ContextEntry(key=key, origin=origin, lamport=lamport,
-                            value_json=canonical_bytes(value))
+        return ContextEntry(
+            key=key, origin=origin, lamport=lamport, value_json=canonical_bytes(value)
+        )
 
 
 class Context:
@@ -125,13 +127,17 @@ class Context:
 
     def get_all(self, key: str) -> Tuple[Any, ...]:
         """All facts for a key, causally ordered (provenance-preserving read)."""
-        es = sorted((e for e in self._entries if e.key == key),
-                    key=lambda e: (e.lamport, e.origin))
+        es = sorted(
+            (e for e in self._entries if e.key == key),
+            key=lambda e: (e.lamport, e.origin),
+        )
         return tuple(e.value for e in es)
 
     def provenance(self, key: str) -> Tuple[str, ...]:
-        es = sorted((e for e in self._entries if e.key == key),
-                    key=lambda e: (e.lamport, e.origin))
+        es = sorted(
+            (e for e in self._entries if e.key == key),
+            key=lambda e: (e.lamport, e.origin),
+        )
         return tuple(e.origin for e in es)
 
     def origins(self) -> frozenset:

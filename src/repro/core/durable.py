@@ -16,10 +16,15 @@ and tagged-compression payload bodies (zstd when available, zlib fallback) —
 see docs/journal-format.md for the full spec. Torn tails (a crash mid-append)
 are detected and truncated on open — an explicit durability requirement.
 
+Stream nodes commit at *chunk* granularity (``CHUNK_COMMIT`` /
+``STREAM_EOS``, docs/streaming.md §4); the ``ReplayCache`` indexes those
+records too, so a killed stream resumes from its last committed offset.
+
 The payload codec lives in ``repro.wire.payload``; ``encode_payload``,
 ``decode_payload`` and ``payload_digest`` are re-exported here for
 compatibility with seed-era call sites.
 """
+
 from __future__ import annotations
 
 import binascii
@@ -36,8 +41,13 @@ from repro.wire import decode_payload, encode_payload, payload_digest
 from .context import Context
 
 __all__ = [
-    "Journal", "JournalRecord", "ReplayCache", "encode_payload", "decode_payload",
-    "payload_digest", "atomic_task",
+    "Journal",
+    "JournalRecord",
+    "ReplayCache",
+    "encode_payload",
+    "decode_payload",
+    "payload_digest",
+    "atomic_task",
 ]
 
 _HEADER = struct.Struct("<II")  # (length, crc32)
@@ -47,35 +57,52 @@ _HEADER = struct.Struct("<II")  # (length, crc32)
 # journal
 # --------------------------------------------------------------------------
 
+
 @dataclass
 class JournalRecord:
     """One journal event — see docs/journal-format.md §2 for the field contract."""
 
-    kind: str                      # RUN_START | NODE_START | NODE_COMMIT | NODE_REQUEUE
-    #                              # | CACHE_HIT | CACHE_STORE | NODE_FAIL | RUN_END | CKPT
+    kind: str  # RUN_START | NODE_START | NODE_COMMIT | NODE_REQUEUE
+    #          # | CHUNK_COMMIT | STREAM_EOS (chunk-granular streams)
+    #          # | CACHE_HIT | CACHE_STORE | NODE_FAIL | RUN_END | CKPT
     node_id: str = ""
     context_digest: str = ""
     input_digest: str = ""
     output_digest: str = ""
-    payload: Any = None            # inline output (small) — mutually exclusive with ref
-    ref: str = ""                  # checkpoint-store reference for large outputs
+    payload: Any = None  # inline output (small) — mutually exclusive with ref
+    ref: str = ""  # checkpoint-store reference for large outputs
     wall_time: float = 0.0
     attempt: int = 0
     meta: Dict[str, Any] = field(default_factory=dict)
 
     def to_obj(self) -> dict:
         return {
-            "k": self.kind, "n": self.node_id, "c": self.context_digest,
-            "i": self.input_digest, "o": self.output_digest, "p": self.payload,
-            "r": self.ref, "t": self.wall_time, "a": self.attempt, "m": self.meta,
+            "k": self.kind,
+            "n": self.node_id,
+            "c": self.context_digest,
+            "i": self.input_digest,
+            "o": self.output_digest,
+            "p": self.payload,
+            "r": self.ref,
+            "t": self.wall_time,
+            "a": self.attempt,
+            "m": self.meta,
         }
 
     @staticmethod
     def from_obj(o: Mapping) -> "JournalRecord":
-        return JournalRecord(kind=o["k"], node_id=o["n"], context_digest=o["c"],
-                             input_digest=o["i"], output_digest=o["o"], payload=o["p"],
-                             ref=o["r"], wall_time=o["t"], attempt=o["a"],
-                             meta=dict(o["m"]))
+        return JournalRecord(
+            kind=o["k"],
+            node_id=o["n"],
+            context_digest=o["c"],
+            input_digest=o["i"],
+            output_digest=o["o"],
+            payload=o["p"],
+            ref=o["r"],
+            wall_time=o["t"],
+            attempt=o["a"],
+            meta=dict(o["m"]),
+        )
 
 
 class Journal:
@@ -106,7 +133,7 @@ class Journal:
         off = 0
         while off + _HEADER.size <= len(data):
             length, crc = _HEADER.unpack_from(data, off)
-            body = data[off + _HEADER.size: off + _HEADER.size + length]
+            body = data[off + _HEADER.size : off + _HEADER.size + length]
             if len(body) < length or binascii.crc32(body) != crc:
                 break
             off += _HEADER.size + length
@@ -143,7 +170,9 @@ class Journal:
         E.g. a fault-tolerant cluster run reads as RUN_START=1, NODE_START=n,
         NODE_REQUEUE=k (worker evictions), NODE_COMMIT=n, RUN_END=1; a
         cache-accelerated run additionally shows CACHE_HIT=h and
-        CACHE_STORE=n-h (every hit still commits, so NODE_COMMIT stays n).
+        CACHE_STORE=n-h (every hit still commits, so NODE_COMMIT stays n);
+        a streaming run adds CHUNK_COMMIT=Σchunks and one STREAM_EOS per
+        stream stage.
         """
         return dict(Counter(rec.kind for rec in self.records()))
 
@@ -153,7 +182,7 @@ class Journal:
         off = 0
         while off + _HEADER.size <= len(data):
             length, crc = _HEADER.unpack_from(data, off)
-            body = data[off + _HEADER.size: off + _HEADER.size + length]
+            body = data[off + _HEADER.size : off + _HEADER.size + length]
             if len(body) < length or binascii.crc32(body) != crc:
                 break
             yield JournalRecord.from_obj(decode_payload(body))
@@ -167,20 +196,36 @@ class Journal:
 
 
 class ReplayCache:
-    """Index of committed node outputs from a journal — the replay oracle."""
+    """Index of committed node outputs from a journal — the replay oracle.
+
+    Also indexes the *chunk-granular* stream records (``CHUNK_COMMIT`` /
+    ``STREAM_EOS``, docs/streaming.md §4): for a stream identity
+    ``(node, ξ-digest, input-digest)`` it answers which chunk sequence
+    numbers are already durable, the digest chain head, and whether the
+    stream reached EOS — the facts a resumed producer needs to skip every
+    committed chunk and continue from its last committed offset.
+    """
 
     def __init__(self, journal: Optional[Journal] = None):
         self._committed: Dict[Tuple[str, str, str], JournalRecord] = {}
-        self.stats = {"commits": 0, "replayed": 0}
+        self._chunks: Dict[Tuple[str, str, str], Dict[int, JournalRecord]] = {}
+        self._eos: Dict[Tuple[str, str, str], JournalRecord] = {}
+        self.stats = {"commits": 0, "replayed": 0, "chunks": 0}
         if journal is not None and os.path.exists(journal.path):
             for rec in journal.records():
                 if rec.kind == "NODE_COMMIT":
                     key = (rec.node_id, rec.context_digest, rec.input_digest)
                     self._committed[key] = rec
                     self.stats["commits"] += 1
+                elif rec.kind == "CHUNK_COMMIT":
+                    self.record_chunk(rec)
+                elif rec.kind == "STREAM_EOS":
+                    key = (rec.node_id, rec.context_digest, rec.input_digest)
+                    self._eos[key] = rec
 
-    def lookup(self, node_id: str, context_digest: str, input_digest: str
-               ) -> Optional[JournalRecord]:
+    def lookup(
+        self, node_id: str, context_digest: str, input_digest: str
+    ) -> Optional[JournalRecord]:
         rec = self._committed.get((node_id, context_digest, input_digest))
         if rec is not None:
             self.stats["replayed"] += 1
@@ -189,10 +234,53 @@ class ReplayCache:
     def record(self, rec: JournalRecord) -> None:
         self._committed[(rec.node_id, rec.context_digest, rec.input_digest)] = rec
 
+    # -- chunk-granular stream state (docs/streaming.md §4) ------------------
+    def record_chunk(self, rec: JournalRecord) -> None:
+        """Index one ``CHUNK_COMMIT`` (keyed by stream identity + seq)."""
+        key = (rec.node_id, rec.context_digest, rec.input_digest)
+        self._chunks.setdefault(key, {})[int(rec.meta.get("seq", 0))] = rec
+        self.stats["chunks"] += 1
+
+    def record_eos(self, rec: JournalRecord) -> None:
+        """Index one ``STREAM_EOS`` marker."""
+        self._eos[(rec.node_id, rec.context_digest, rec.input_digest)] = rec
+
+    def stream_progress(
+        self, node_id: str, context_digest: str, input_digest: str
+    ) -> Tuple[int, str, bool]:
+        """Durable state of a stream: ``(next_seq, chain, eos_reached)``.
+
+        ``next_seq`` is the first sequence number with no committed chunk
+        (committed chunks form a contiguous prefix 0..next_seq-1 by
+        construction — a chunk only commits after its predecessor);
+        ``chain`` is the digest-chain head after the last committed chunk.
+        """
+        by_seq = self._chunks.get((node_id, context_digest, input_digest), {})
+        next_seq = 0
+        chain = ""
+        while next_seq in by_seq:
+            chain = str(by_seq[next_seq].meta.get("chain", ""))
+            next_seq += 1
+        eos = (node_id, context_digest, input_digest) in self._eos
+        return next_seq, chain, eos
+
+    def stream_chunks(
+        self, node_id: str, context_digest: str, input_digest: str
+    ) -> "list[JournalRecord]":
+        """Committed chunk records, in sequence order (contiguous prefix)."""
+        by_seq = self._chunks.get((node_id, context_digest, input_digest), {})
+        out = []
+        seq = 0
+        while seq in by_seq:
+            out.append(by_seq[seq])
+            seq += 1
+        return out
+
 
 # --------------------------------------------------------------------------
 # atomic task decorator — dependency injection contract (§3.2 assumption 2)
 # --------------------------------------------------------------------------
+
 
 def atomic_task(fn: Callable[..., Any]) -> Callable[..., Any]:
     """Mark ``fn`` as an atomic durable task.

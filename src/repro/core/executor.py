@@ -24,9 +24,20 @@ Both executors optionally consult a cross-run ``repro.cache.ResultCache``
 execution or dispatch; hits and stores are journaled as ``CACHE_HIT`` /
 ``CACHE_STORE`` records so cache-accelerated runs stay fully replayable.
 See docs/result-cache.md for the cache/journal contract.
+
+Nodes declared with ``stream=`` ("source" / "map" / "reduce") execute as
+*pipelined stream stages* on dedicated threads: consumers start on the
+producer's first chunk, chunks flow through bounded backpressured channels
+(``repro.stream``), every chunk is journaled as a ``CHUNK_COMMIT`` before
+it becomes visible downstream, and a killed run resumes producers from
+their last committed offset. A dependency edge INTO a stream consumer from
+its stream producer is satisfied when the producer *starts*; every other
+edge keeps batch semantics (satisfied at commit). See docs/streaming.md.
 """
+
 from __future__ import annotations
 
+import inspect
 import itertools
 import threading
 import time
@@ -36,6 +47,18 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.cache import CacheKey, CachedResult, ResultCache
+from repro.stream import (
+    ChannelClosed,
+    ChunkLog,
+    StreamCancelled,
+    StreamHandle,
+    StreamPlan,
+    plan_streams,
+    reduce_iter,
+    run_map_stage,
+    run_source_stage,
+    stream_input_marker,
+)
 
 from .context import Context, EMPTY_CONTEXT
 from .durable import Journal, JournalRecord, ReplayCache, payload_digest
@@ -63,8 +86,9 @@ class ExecutionReport:
     """What a run did: outputs/contexts per node, and how each node resolved.
 
     Every exec node lands in exactly one of ``replayed`` (this journal
-    already committed it), ``cached`` (answered by the cross-run result
-    cache), or ``executed`` (actually ran).
+    already committed it — for stream nodes: every chunk AND the EOS came
+    from the journal), ``cached`` (answered by the cross-run result cache),
+    or ``executed`` (actually ran, possibly resuming a committed prefix).
     """
 
     outputs: Dict[str, Any]
@@ -75,46 +99,78 @@ class ExecutionReport:
     cached: Tuple[str, ...] = ()
 
 
+def _accepts_start(fn: Callable[..., Any]) -> bool:
+    """True iff ``fn`` declares an explicit ``start`` parameter.
+
+    Only an explicit parameter counts — passing ``start`` into a bare
+    ``**kwargs`` producer that ignores it would silently re-emit from 0 and
+    corrupt chunk numbering, so those producers get the skip-side resume.
+    """
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    return "start" in sig.parameters
+
+
 class _BaseExecutor:
     """Shared durable-commit, replay-lookup, and result-cache machinery."""
 
-    def __init__(self, journal: Optional[Journal] = None,
-                 retry: Optional[RetryPolicy] = None,
-                 cache: Optional[ResultCache] = None,
-                 spill_put: Optional[Callable[[str, Any], str]] = None,
-                 spill_get: Optional[Callable[[str], Any]] = None):
+    def __init__(
+        self,
+        journal: Optional[Journal] = None,
+        retry: Optional[RetryPolicy] = None,
+        cache: Optional[ResultCache] = None,
+        spill_put: Optional[Callable[[str, Any], str]] = None,
+        spill_get: Optional[Callable[[str], Any]] = None,
+        channel_capacity: int = 8,
+    ):
         self.journal = journal
         self.retry = retry or RetryPolicy()
         self.cache = cache
         self.replay = ReplayCache(journal) if journal is not None else ReplayCache()
+        self.channel_capacity = channel_capacity
         self._spill_put = spill_put
         self._spill_get = spill_get
 
     # -- durable commit machinery -------------------------------------------
-    def _commit(self, node_id: str, ctx_digest: str, in_digest: str, output: Any,
-                attempt: int, meta: Optional[dict] = None) -> None:
+    def _commit(
+        self,
+        node_id: str,
+        ctx_digest: str,
+        in_digest: str,
+        output: Any,
+        attempt: int,
+        meta: Optional[dict] = None,
+    ) -> None:
         payload, ref = output, ""
         if self._spill_put is not None:
             try:
-                import sys
-
                 approx = payload_digest(output)  # also probes serializability
                 del approx
             except Exception:
                 ref = self._spill_put(node_id, output)
                 payload = None
-        rec = JournalRecord(kind="NODE_COMMIT", node_id=node_id,
-                            context_digest=ctx_digest, input_digest=in_digest,
-                            output_digest=payload_digest(output) if ref == "" else ref,
-                            payload=payload if ref == "" else None, ref=ref,
-                            attempt=attempt, meta=meta or {})
+        rec = JournalRecord(
+            kind="NODE_COMMIT",
+            node_id=node_id,
+            context_digest=ctx_digest,
+            input_digest=in_digest,
+            output_digest=payload_digest(output) if ref == "" else ref,
+            payload=payload if ref == "" else None,
+            ref=ref,
+            attempt=attempt,
+            meta=meta or {},
+        )
         if self.journal is not None:
             self.journal.append(rec)
         self.replay.record(rec)
 
     @staticmethod
-    def _readiness(exec_nodes: Mapping[str, Any],
-                   member_to_group: Mapping[str, str]):
+    def _readiness(
+        exec_nodes: Mapping[str, Any],
+        member_to_group: Mapping[str, str],
+    ):
         """Dependency-counted scheduling state shared by both executors:
         (gdeps, deps_left, children)."""
         gdeps = ContextGraph.group_deps(exec_nodes, member_to_group)
@@ -126,15 +182,28 @@ class _BaseExecutor:
         return gdeps, deps_left, children
 
     # -- cross-run result cache (repro.cache; docs/result-cache.md) ----------
-    def _cache_key(self, node: "Node | UnionNode", ctx_digest: str,
-                   in_digest: str) -> Optional[CacheKey]:
-        """Content-addressed key for this (fn, inputs, ξ) — None when uncached."""
-        if self.cache is None:
+    def _cache_key(
+        self,
+        node: "Node | UnionNode",
+        ctx_digest: str,
+        in_digest: str,
+    ) -> Optional[CacheKey]:
+        """Content-addressed key for this (fn, inputs, ξ) — None when uncached.
+
+        Stream nodes never use the cross-run cache (chunk-granular replay
+        supersedes it — docs/streaming.md §4.3), so they get None too.
+        """
+        if self.cache is None or getattr(node, "stream", ""):
             return None
         return CacheKey(fn=node.fn_digest(), inputs=in_digest, context=ctx_digest)
 
-    def _cache_probe(self, node_id: str, key: Optional[CacheKey],
-                     ctx_digest: str, in_digest: str) -> Optional[CachedResult]:
+    def _cache_probe(
+        self,
+        node_id: str,
+        key: Optional[CacheKey],
+        ctx_digest: str,
+        in_digest: str,
+    ) -> Optional[CachedResult]:
         """Consult the result cache; a hit journals CACHE_HIT + NODE_COMMIT.
 
         The commit carries the cached payload, so the journal of a
@@ -147,19 +216,31 @@ class _BaseExecutor:
         if ent is None:
             return None
         if self.journal is not None:
-            self.journal.append(JournalRecord(
-                kind="CACHE_HIT", node_id=node_id, context_digest=ctx_digest,
-                input_digest=in_digest, output_digest=ent.output_digest,
-                meta={"key": key.id}))
+            self.journal.append(
+                JournalRecord(
+                    kind="CACHE_HIT",
+                    node_id=node_id,
+                    context_digest=ctx_digest,
+                    input_digest=in_digest,
+                    output_digest=ent.output_digest,
+                    meta={"key": key.id},
+                )
+            )
         meta: Dict[str, Any] = {"cache": key.id}
         if ent.facts:
             meta["facts"] = dict(ent.facts)
         self._commit(node_id, ctx_digest, in_digest, ent.value, 0, meta=meta)
         return ent
 
-    def _cache_store(self, node_id: str, key: Optional[CacheKey],
-                     ctx_digest: str, in_digest: str, value: Any,
-                     facts: Optional[Mapping[str, Any]] = None) -> None:
+    def _cache_store(
+        self,
+        node_id: str,
+        key: Optional[CacheKey],
+        ctx_digest: str,
+        in_digest: str,
+        value: Any,
+        facts: Optional[Mapping[str, Any]] = None,
+    ) -> None:
         """Commit a freshly-executed result into the cache (journals CACHE_STORE).
 
         Uncacheable outputs (unserializable by the payload codec) are skipped
@@ -173,23 +254,96 @@ class _BaseExecutor:
             self.cache.stats["uncacheable"] += 1
             return
         if self.journal is not None:
-            self.journal.append(JournalRecord(
-                kind="CACHE_STORE", node_id=node_id, context_digest=ctx_digest,
-                input_digest=in_digest, output_digest=ent.output_digest,
-                meta={"key": key.id}))
+            self.journal.append(
+                JournalRecord(
+                    kind="CACHE_STORE",
+                    node_id=node_id,
+                    context_digest=ctx_digest,
+                    input_digest=in_digest,
+                    output_digest=ent.output_digest,
+                    meta={"key": key.id},
+                )
+            )
 
-    def _lookup(self, node_id: str, ctx_digest: str, in_digest: str
-                ) -> "Optional[_Found]":
-        """Replay oracle: the committed output for (node, ξ, inputs), if any."""
+    def _lookup(
+        self,
+        node_id: str,
+        ctx_digest: str,
+        in_digest: str,
+    ) -> "Optional[_Found]":
+        """Replay oracle: the committed output for (node, ξ, inputs), if any.
+
+        Stream-node commits carry no payload; their value materializes from
+        the journaled chunk sequence (docs/streaming.md §4.2).
+        """
         rec = self.replay.lookup(node_id, ctx_digest, in_digest)
         if rec is None:
             return None
         facts = rec.meta.get("facts")
+        if rec.meta.get("stream") is not None:
+            chunks = self.replay.stream_chunks(node_id, ctx_digest, in_digest)
+            return _Found([c.payload for c in chunks], facts)
         if rec.ref:
             if self._spill_get is None:
                 return None  # cannot resolve; re-execute
             return _Found(self._spill_get(rec.ref), facts)
         return _Found(rec.payload, facts)
+
+    # -- stream-stage plumbing shared by both executors ----------------------
+    def _stream_stage_inputs(
+        self,
+        node: Node,
+        splan: StreamPlan,
+        outputs: Mapping[str, Any],
+        member_to_group: Mapping[str, str],
+        stream_identity: Mapping[str, Tuple[str, str]],
+    ) -> Tuple[Dict[str, Any], Dict[str, Any], Optional[str], Optional[str]]:
+        """Split a stream node's deps into injectable values vs. the stream.
+
+        Returns ``(fn_inputs, digest_inputs, stream_kwarg, stream_dep_gid)``:
+        ``fn_inputs`` are the batch inputs actually passed to ``fn``;
+        ``digest_inputs`` additionally carry the stream-identity marker under
+        the stream kwarg, making the node's input digest replay-stable
+        without hashing unbounded chunk data.
+        """
+        sdep = splan.stream_dep.get(node.id)
+        fn_inputs: Dict[str, Any] = {}
+        digest_inputs: Dict[str, Any] = {}
+        stream_kwarg: Optional[str] = None
+        for dep in node.deps:
+            gid = member_to_group.get(dep, dep)
+            kwarg = node.kwarg_for(dep)
+            if gid == sdep:
+                stream_kwarg = kwarg
+                up_ctx_d, up_in_d = stream_identity[gid]
+                digest_inputs[kwarg] = stream_input_marker(gid, up_ctx_d, up_in_d)
+                continue
+            out = outputs[gid]
+            if gid != dep and isinstance(out, Mapping) and dep in out:
+                out = out[dep]  # a specific member of a union node
+            fn_inputs[kwarg] = out
+            digest_inputs[kwarg] = out
+        return fn_inputs, digest_inputs, stream_kwarg, sdep
+
+    def _journal_stream_start(
+        self,
+        nid: str,
+        kind: str,
+        ctx_digest: str,
+        in_digest: str,
+        resume_seq: int,
+    ) -> None:
+        """NODE_START for a stream stage, annotated with the resume offset."""
+        if self.journal is not None:
+            self.journal.append(
+                JournalRecord(
+                    kind="NODE_START",
+                    node_id=nid,
+                    context_digest=ctx_digest,
+                    input_digest=in_digest,
+                    meta={"stream": kind, "resume_seq": resume_seq},
+                )
+            )
 
 
 @dataclass
@@ -198,8 +352,11 @@ class _Found:
     facts: Optional[Mapping[str, Any]] = None  # journaled WithContext facts
 
 
-def _inject_inputs(node: Node, outputs: Mapping[str, Any],
-                   member_to_group: Mapping[str, str]) -> Dict[str, Any]:
+def _inject_inputs(
+    node: Node,
+    outputs: Mapping[str, Any],
+    member_to_group: Mapping[str, str],
+) -> Dict[str, Any]:
     """Dependency injection: map each dep's output to the node's kwarg."""
     inputs: Dict[str, Any] = {}
     for dep in node.deps:
@@ -212,7 +369,12 @@ def _inject_inputs(node: Node, outputs: Mapping[str, Any],
 
 
 class LocalExecutor(_BaseExecutor):
-    """In-process threaded executor with dependency-counted scheduling."""
+    """In-process threaded executor with dependency-counted scheduling.
+
+    Batch nodes run on a bounded thread pool; stream stages run on
+    dedicated threads (they live as long as their stream and block on
+    channel backpressure, so parking them in the pool could starve it).
+    """
 
     def __init__(self, max_workers: int = 8, **kw):
         super().__init__(**kw)
@@ -222,7 +384,7 @@ class LocalExecutor(_BaseExecutor):
         """Execute ``graph`` on the thread pool; returns the run's report."""
         t0 = time.time()
         levels, exec_nodes, member_to_group = graph.schedule()
-        xi = graph.propagate_contexts(exec_nodes)
+        splan = plan_streams(exec_nodes)
         outputs: Dict[str, Any] = {}
         out_ctx: Dict[str, Context] = {}
         resolved: Dict[str, List[str]] = {"replayed": [], "cached": [], "executed": []}
@@ -231,9 +393,20 @@ class LocalExecutor(_BaseExecutor):
         # dependency counting for maximal overlap (scheduling-level deps)
         gdeps, deps_left, children = self._readiness(exec_nodes, member_to_group)
 
+        stream_handles: Dict[str, StreamHandle] = {}
+        stream_identity: Dict[str, Tuple[str, str]] = {}
+        cancel = threading.Event()
+        futures: Dict[Future, str] = {}
+        pool = ThreadPoolExecutor(max_workers=self.max_workers)
+
         if self.journal is not None:
-            self.journal.append(JournalRecord(kind="RUN_START", node_id=graph.name,
-                                              meta={"nodes": len(exec_nodes)}))
+            self.journal.append(
+                JournalRecord(
+                    kind="RUN_START",
+                    node_id=graph.name,
+                    meta={"nodes": len(exec_nodes)},
+                )
+            )
 
         def effective_ctx(nid: str) -> Context:
             node = exec_nodes[nid]
@@ -247,12 +420,65 @@ class LocalExecutor(_BaseExecutor):
                 base = base.with_data(node.data, origin=node.id)
             return base
 
+        def launch(nid: str) -> None:
+            if splan.kinds.get(nid):
+                fut: Future = Future()
+                with lock:
+                    futures[fut] = nid
+                thread = threading.Thread(
+                    target=stage_thread,
+                    args=(nid, fut),
+                    name=f"stream:{nid}",
+                    daemon=True,
+                )
+                thread.start()
+            else:
+                f = pool.submit(run_node, nid)
+                with lock:
+                    futures[f] = nid
+
+        def satisfy_stream_edges(nid: str) -> None:
+            # the producer started: its stream consumers become dispatchable
+            to_launch = []
+            with lock:
+                for c in children[nid]:
+                    if (nid, c) not in splan.stream_edges:
+                        continue
+                    deps_left[c] -= 1
+                    if deps_left[c] == 0:
+                        to_launch.append(c)
+            for c in to_launch:
+                launch(c)
+
+        def stage_thread(nid: str, fut: Future) -> None:
+            try:
+                value, ctx, status = self._run_stream_node(
+                    exec_nodes[nid],
+                    splan,
+                    effective_ctx(nid),
+                    outputs,
+                    out_ctx,
+                    member_to_group,
+                    stream_identity,
+                    stream_handles,
+                    satisfy_stream_edges,
+                    cancel,
+                    lock,
+                )
+                with lock:
+                    outputs[nid] = value
+                    out_ctx[nid] = ctx
+                    resolved[status].append(nid)
+                fut.set_result(None)
+            except BaseException as exc:
+                cancel.set()
+                fut.set_exception(exc)
+
         def run_node(nid: str) -> None:
             node = exec_nodes[nid]
             ctx = effective_ctx(nid)
             if isinstance(node, UnionNode):
-                self._run_union(node, ctx, outputs, member_to_group,
-                                resolved, lock)
+                self._run_union(node, ctx, outputs, member_to_group, resolved, lock)
             else:
                 inputs = _inject_inputs(node, outputs, member_to_group)
                 value, status = self._run_atomic(node, ctx, inputs)
@@ -266,34 +492,195 @@ class LocalExecutor(_BaseExecutor):
                 out_ctx[nid] = ctx
 
         frontier = [nid for nid, c in deps_left.items() if c == 0]
-        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
-            futures: Dict[Future, str] = {}
-            for nid in sorted(frontier):
-                futures[pool.submit(run_node, nid)] = nid
-            while futures:
-                done, _ = wait(list(futures), return_when=FIRST_COMPLETED)
-                for f in done:
-                    nid = futures.pop(f)
-                    f.result()  # re-raise task errors
-                    for c in children[nid]:
+        cascade_errors: List[BaseException] = []
+        try:
+            with pool:
+                for nid in sorted(frontier):
+                    launch(nid)
+                while True:
+                    with lock:
+                        pending = list(futures)
+                    if not pending:
+                        break
+                    done, _ = wait(pending, return_when=FIRST_COMPLETED)
+                    for f in done:
                         with lock:
-                            deps_left[c] -= 1
-                            ready = deps_left[c] == 0
-                        if ready:
-                            futures[pool.submit(run_node, c)] = c
+                            nid = futures.pop(f)
+                        try:
+                            f.result()  # re-raise task errors
+                        except (StreamCancelled, ChannelClosed) as exc:
+                            # a stage stopped because the run is already
+                            # doomed elsewhere; keep draining so the ROOT
+                            # error (the stage that actually failed)
+                            # surfaces instead of this cascade
+                            cascade_errors.append(exc)
+                            continue
+                        for c in children[nid]:
+                            if (nid, c) in splan.stream_edges:
+                                continue  # satisfied at stage start
+                            with lock:
+                                deps_left[c] -= 1
+                                ready = deps_left[c] == 0
+                            if ready:
+                                launch(c)
+                if cascade_errors:
+                    raise cascade_errors[0]  # every failure was a cascade
+        except BaseException as exc:
+            # stop sibling stream stages from committing past a doomed run,
+            # and unblock anything parked on a channel
+            cancel.set()
+            for handle in list(stream_handles.values()):
+                handle.close(error=exc)
+            raise
+        finally:
+            if self.journal is not None:
+                self.journal.flush()
 
         if self.journal is not None:
             self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
             self.journal.flush()
-        return ExecutionReport(outputs=outputs, contexts=out_ctx,
-                               replayed=tuple(resolved["replayed"]),
-                               executed=tuple(resolved["executed"]),
-                               cached=tuple(resolved["cached"]),
-                               wall_s=time.time() - t0)
+        return ExecutionReport(
+            outputs=outputs,
+            contexts=out_ctx,
+            replayed=tuple(resolved["replayed"]),
+            executed=tuple(resolved["executed"]),
+            cached=tuple(resolved["cached"]),
+            wall_s=time.time() - t0,
+        )
+
+    # -- stream stages --------------------------------------------------------
+    def _source_invoker(
+        self,
+        node: Node,
+        ctx: Context,
+        inputs: Mapping[str, Any],
+    ) -> Callable[[int], Any]:
+        """invoke(start) → chunk iterable, resuming at chunk index ``start``."""
+        fn = node.fn
+        if fn is None or not callable(fn):
+            raise ValueError(f"stream source {node.id!r} needs a callable fn")
+        if _accepts_start(fn):
+            return lambda start: fn(ctx, start=start, **inputs)
+        return lambda start: itertools.islice(fn(ctx, **inputs), start, None)
+
+    def _map_invoker(
+        self,
+        node: Node,
+        ctx: Context,
+        inputs: Mapping[str, Any],
+        stream_kwarg: str,
+    ) -> Callable[[int, Any], Any]:
+        fn = node.fn
+        if fn is None or not callable(fn):
+            raise ValueError(f"stream map {node.id!r} needs a callable fn")
+        return lambda seq, chunk: fn(ctx, **{stream_kwarg: chunk}, **inputs)
+
+    def _reduce_invoke(
+        self,
+        node: Node,
+        ctx: Context,
+        inputs: Mapping[str, Any],
+        stream_kwarg: str,
+        chunk_iter: Any,
+    ) -> Any:
+        fn = node.fn
+        if fn is None or not callable(fn):
+            raise ValueError(f"stream reduce {node.id!r} needs a callable fn")
+        return fn(ctx, **{stream_kwarg: chunk_iter}, **inputs)
+
+    def _run_stream_node(
+        self,
+        node: Node,
+        splan: StreamPlan,
+        ctx: Context,
+        outputs: Mapping[str, Any],
+        out_ctx: Dict[str, Context],
+        member_to_group: Mapping[str, str],
+        stream_identity: Dict[str, Tuple[str, str]],
+        stream_handles: Dict[str, StreamHandle],
+        satisfy_stream_edges: Callable[[str], None],
+        cancel: threading.Event,
+        lock: threading.Lock,
+    ) -> Tuple[Any, Context, str]:
+        """One stream stage, start to commit. Returns (value, ctx, status)."""
+        nid = node.id
+        kind = splan.kinds[nid]
+        fn_inputs, digest_inputs, stream_kwarg, sdep = self._stream_stage_inputs(
+            node, splan, outputs, member_to_group, stream_identity
+        )
+        ctx_d = ctx.digest()
+        in_d = payload_digest(digest_inputs)
+
+        handle: Optional[StreamHandle] = None
+        if kind in ("source", "map"):
+            handle = StreamHandle(
+                nid,
+                splan.subscribers.get(nid, ()),
+                capacity=self.channel_capacity,
+            )
+        with lock:
+            # publish identity/ctx/handle BEFORE unblocking consumers: a
+            # stream stage's ξ is final at start (stages cannot emit facts),
+            # and consumers union it into their own ξ the moment they launch
+            out_ctx[nid] = ctx
+            stream_identity[nid] = (ctx_d, in_d)
+            if handle is not None:
+                stream_handles[nid] = handle
+        satisfy_stream_edges(nid)
+
+        upstream = stream_handles[sdep].subscribe(nid) if sdep else None
+
+        if kind == "reduce":
+            hit = self._lookup(nid, ctx_d, in_d)
+            if hit is not None:
+                upstream.abandon()
+                if hit.facts:
+                    ctx = ctx.with_data(hit.facts, origin=nid)
+                return hit.value, ctx, "replayed"
+            self._journal_stream_start(nid, kind, ctx_d, in_d, 0)
+            value = self._reduce_invoke(
+                node, ctx, fn_inputs, stream_kwarg, reduce_iter(upstream, cancel)
+            )
+            facts = dict(value.facts) if isinstance(value, WithContext) else None
+            if isinstance(value, WithContext):
+                ctx = ctx.with_data(value.facts, origin=nid)
+                value = value.output
+            self._commit(
+                nid, ctx_d, in_d, value, 0, meta={"facts": facts} if facts else None
+            )
+            return value, ctx, "executed"
+
+        log = ChunkLog(self.journal, self.replay, nid, ctx_d, in_d)
+        if not log.eos:
+            self._journal_stream_start(nid, kind, ctx_d, in_d, log.next_seq)
+        if kind == "source":
+            values, status = run_source_stage(
+                nid,
+                log,
+                handle,
+                self._source_invoker(node, ctx, fn_inputs),
+                cancel,
+                retries=node.retries,
+            )
+        else:
+            values, status = run_map_stage(
+                nid,
+                log,
+                upstream,
+                handle,
+                self._map_invoker(node, ctx, fn_inputs, stream_kwarg),
+                cancel,
+                retries=node.retries,
+            )
+        return values, ctx, status
 
     # -- atomic execution with retries ----------------------------------------
-    def _run_atomic(self, node: Node, ctx: Context,
-                    inputs: Mapping[str, Any]) -> Tuple[Any, str]:
+    def _run_atomic(
+        self,
+        node: Node,
+        ctx: Context,
+        inputs: Mapping[str, Any],
+    ) -> Tuple[Any, str]:
         """Resolve one node; returns (value, "replayed"|"cached"|"executed")."""
         ctx_d = ctx.digest()
         in_d = payload_digest(inputs)
@@ -316,18 +703,30 @@ class LocalExecutor(_BaseExecutor):
         while True:
             try:
                 if self.journal is not None:
-                    self.journal.append(JournalRecord(
-                        kind="NODE_START", node_id=node.id, context_digest=ctx_d,
-                        input_digest=in_d, attempt=attempt))
+                    self.journal.append(
+                        JournalRecord(
+                            kind="NODE_START",
+                            node_id=node.id,
+                            context_digest=ctx_d,
+                            input_digest=in_d,
+                            attempt=attempt,
+                        )
+                    )
                 value = node.fn(ctx, **inputs)
                 break
             except Exception:
                 attempt += 1
                 if attempt > max(node.retries, self.retry.max_attempts - 1):
                     if self.journal is not None:
-                        self.journal.append(JournalRecord(
-                            kind="NODE_FAIL", node_id=node.id, context_digest=ctx_d,
-                            input_digest=in_d, attempt=attempt))
+                        self.journal.append(
+                            JournalRecord(
+                                kind="NODE_FAIL",
+                                node_id=node.id,
+                                context_digest=ctx_d,
+                                input_digest=in_d,
+                                attempt=attempt,
+                            )
+                        )
                     raise
                 time.sleep(self.retry.delay(attempt))
         commit_value = value.output if isinstance(value, WithContext) else value
@@ -337,9 +736,15 @@ class LocalExecutor(_BaseExecutor):
         self._cache_store(node.id, key, ctx_d, in_d, commit_value, facts=facts)
         return value, "executed"
 
-    def _run_union(self, group: UnionNode, ctx: Context, outputs: Dict[str, Any],
-                   member_to_group: Mapping[str, str],
-                   resolved: Dict[str, List[str]], lock: threading.Lock) -> None:
+    def _run_union(
+        self,
+        group: UnionNode,
+        ctx: Context,
+        outputs: Dict[str, Any],
+        member_to_group: Mapping[str, str],
+        resolved: Dict[str, List[str]],
+        lock: threading.Lock,
+    ) -> None:
         """Union node = ONE atomic commit over deterministic member order."""
         ctx_d = ctx.digest()
         ext_inputs = {}
@@ -382,8 +787,9 @@ class LocalExecutor(_BaseExecutor):
                 raise ValueError(f"union member {m.id!r} has no callable")
             v = m.fn(ctx, **inputs)
             member_out[m.id] = v.output if isinstance(v, WithContext) else v
-        self._commit(group.id, ctx_d, in_d, member_out, 0,
-                     meta={"members": [m.id for m in order]})
+        self._commit(
+            group.id, ctx_d, in_d, member_out, 0, meta={"members": [m.id for m in order]}
+        )
         self._cache_store(group.id, key, ctx_d, in_d, member_out)
         with lock:
             outputs[group.id] = member_out
@@ -400,7 +806,7 @@ class _Inflight:
     input_digest: str
     inputs: Dict[str, Any]
     futures: List[Future] = field(default_factory=list)  # still-live attempts
-    copies: int = 0    # total submissions ever made (speculation budget)
+    copies: int = 0  # total submissions ever made (speculation budget)
     attempts: int = 0  # gateway-level requeues observed (evictions, failures)
     cache_key: Optional[CacheKey] = None  # store target once the result lands
 
@@ -426,37 +832,67 @@ class ClusterExecutor(_BaseExecutor):
     system-level failure), in-flight requests are requeued on survivors and
     each requeue is journaled as a ``NODE_REQUEUE`` record carrying the
     attempt count. See docs/distributed-execution.md for the state machine.
+
+    Stream stages run on dedicated executor-side threads: a named *source*
+    is dispatched once and its chunks stream back over the worker transport
+    incrementally (chunk-framed HTTP — docs/streaming.md §5); a named *map*
+    is dispatched once per chunk through normal gateway routing; reduce
+    callables fold executor-side. Chunk commits make mid-stream worker
+    death recoverable: the source is re-dispatched with ``start`` set to
+    the next uncommitted offset. Stream stages are exempt from straggler
+    speculation (a duplicate producer would double-emit).
     """
 
-    def __init__(self, gateway: Gateway, speculative: bool = True,
-                 speculation_tick_s: float = 0.05, max_copies: int = 3, **kw):
+    def __init__(
+        self,
+        gateway: Gateway,
+        speculative: bool = True,
+        speculation_tick_s: float = 0.05,
+        max_copies: int = 3,
+        stream_retries: int = 2,
+        **kw,
+    ):
         super().__init__(**kw)
         self.gateway = gateway
         self.speculative = speculative
         self.speculation_tick_s = speculation_tick_s
         self.max_copies = max_copies
+        self.stream_retries = stream_retries
         self.straggler = StragglerWatch()
 
     def run(self, graph: ContextGraph) -> ExecutionReport:
         """Execute ``graph`` through the gateway; returns the run's report."""
         t0 = time.time()
         _levels, exec_nodes, member_to_group = graph.schedule()  # validates DAG
+        splan = plan_streams(exec_nodes)
         gdeps, deps_left, children = self._readiness(exec_nodes, member_to_group)
         run_token = f"{graph.name}#{next(_RUN_TOKENS)}"  # this run's requests
 
         outputs: Dict[str, Any] = {}
         out_ctx: Dict[str, Context] = {}
         resolved: Dict[str, List[str]] = {"replayed": [], "cached": [], "executed": []}
-        replayed, cached, executed = (resolved["replayed"], resolved["cached"],
-                                      resolved["executed"])
+        replayed, cached, executed = (
+            resolved["replayed"],
+            resolved["cached"],
+            resolved["executed"],
+        )
         ready = deque(sorted(nid for nid, c in deps_left.items() if c == 0))
         cv = threading.Condition()
         completions: deque = deque()  # (nid, Future) pairs, fed by callbacks
         inflight: Dict[str, _Inflight] = {}
+        stream_handles: Dict[str, StreamHandle] = {}
+        stream_identity: Dict[str, Tuple[str, str]] = {}
+        stream_running = [0]  # stages alive (stall detection must see them)
+        cancel = threading.Event()
 
         if self.journal is not None:
-            self.journal.append(JournalRecord(kind="RUN_START", node_id=graph.name,
-                                              meta={"nodes": len(exec_nodes)}))
+            self.journal.append(
+                JournalRecord(
+                    kind="RUN_START",
+                    node_id=graph.name,
+                    meta={"nodes": len(exec_nodes)},
+                )
+            )
 
         def pump(nid: str, fut: Future) -> None:
             # runs on gateway threads: hand the completion to the scheduler
@@ -477,9 +913,14 @@ class ClusterExecutor(_BaseExecutor):
                 if st is not None:
                     st.attempts += 1
             if st is not None and self.journal is not None:
-                self.journal.append(JournalRecord(
-                    kind="NODE_REQUEUE", node_id=nid, attempt=req.attempts,
-                    meta={"task": req.task_name, "reason": reason}))
+                self.journal.append(
+                    JournalRecord(
+                        kind="NODE_REQUEUE",
+                        node_id=nid,
+                        attempt=req.attempts,
+                        meta={"task": req.task_name, "reason": reason},
+                    )
+                )
 
         def done_count() -> int:
             return len(replayed) + len(cached) + len(executed)
@@ -488,16 +929,75 @@ class ClusterExecutor(_BaseExecutor):
             outputs[nid] = value
             out_ctx[nid] = ctx
             resolved[status].append(nid)
-            for c in children[nid]:
-                deps_left[c] -= 1
-                if deps_left[c] == 0:
-                    ready.append(c)
+            with cv:  # stage threads decrement stream edges concurrently
+                for c in children[nid]:
+                    if (nid, c) in splan.stream_edges:
+                        continue  # satisfied when the stage started
+                    deps_left[c] -= 1
+                    if deps_left[c] == 0:
+                        ready.append(c)
+
+        def satisfy_stream_edges(nid: str) -> None:
+            # a stage started: unblock its stream consumers and wake the pump
+            with cv:
+                for c in children[nid]:
+                    if (nid, c) not in splan.stream_edges:
+                        continue
+                    deps_left[c] -= 1
+                    if deps_left[c] == 0:
+                        ready.append(c)
+                cv.notify()
+
+        def stage_ctx(nid: str) -> Context:
+            node = exec_nodes[nid]
+            parents = [out_ctx[d] for d in gdeps[nid]]
+            ctx = Context.union_all(parents) if parents else graph.origin_context
+            if node.data:
+                ctx = ctx.with_data(node.data, origin=node.id)
+            return ctx
+
+        def stage_thread(nid: str, fut: Future) -> None:
+            try:
+                result = self._run_cluster_stream_node(
+                    exec_nodes[nid],
+                    splan,
+                    stage_ctx(nid),
+                    outputs,
+                    out_ctx,
+                    member_to_group,
+                    stream_identity,
+                    stream_handles,
+                    satisfy_stream_edges,
+                    cancel,
+                    cv,
+                    run_token,
+                )
+                fut.set_result(result)
+            except BaseException as exc:
+                cancel.set()
+                fut.set_exception(exc)
+
+        def dispatch_stream(nid: str) -> None:
+            fut: Future = Future()
+            with cv:
+                stream_running[0] += 1
+            fut.add_done_callback(lambda f, _n=nid: pump(_n, f))
+            threading.Thread(
+                target=stage_thread,
+                args=(nid, fut),
+                name=f"stream:{nid}",
+                daemon=True,
+            ).start()
 
         def dispatch(nid: str) -> None:
             node = exec_nodes[nid]
             if isinstance(node, UnionNode):
                 raise NotImplementedError(
-                    "union nodes execute locally; contract before remote dispatch")
+                    "union nodes execute locally; contract before remote dispatch"
+                )
+            if splan.kinds.get(nid):
+                dispatch_stream(nid)
+                return
             parents = [out_ctx[d] for d in gdeps[nid]]
             ctx = Context.union_all(parents) if parents else graph.origin_context
             if node.data:
@@ -521,9 +1021,14 @@ class ClusterExecutor(_BaseExecutor):
                 finish(nid, ent.value, ctx, "cached")
                 return
             if self.journal is not None:
-                self.journal.append(JournalRecord(
-                    kind="NODE_START", node_id=nid,
-                    context_digest=ctx_d, input_digest=in_d))
+                self.journal.append(
+                    JournalRecord(
+                        kind="NODE_START",
+                        node_id=nid,
+                        context_digest=ctx_d,
+                        input_digest=in_d,
+                    )
+                )
             if callable(node.fn):
                 attempt = 0
                 while True:  # immediate retries: never sleep in the scheduler
@@ -534,10 +1039,15 @@ class ClusterExecutor(_BaseExecutor):
                         attempt += 1
                         if attempt > node.retries:
                             if self.journal is not None:
-                                self.journal.append(JournalRecord(
-                                    kind="NODE_FAIL", node_id=nid,
-                                    context_digest=ctx_d, input_digest=in_d,
-                                    attempt=attempt))
+                                self.journal.append(
+                                    JournalRecord(
+                                        kind="NODE_FAIL",
+                                        node_id=nid,
+                                        context_digest=ctx_d,
+                                        input_digest=in_d,
+                                        attempt=attempt,
+                                    )
+                                )
                                 self.journal.flush()
                             raise
                 facts = dict(value.facts) if isinstance(value, WithContext) else None
@@ -556,9 +1066,12 @@ class ClusterExecutor(_BaseExecutor):
                 inflight[nid] = st
             self.straggler.started(str(node.fn), nid)
             fut = self.gateway.submit(
-                str(node.fn), ctx, inputs,
+                str(node.fn),
+                ctx,
+                inputs,
                 affinity_key=str(node.resources.get("affinity", "")),
-                meta={"node": nid, "run": run_token})
+                meta={"node": nid, "run": run_token},
+            )
             with cv:
                 st.futures.append(fut)
                 st.copies += 1
@@ -566,20 +1079,27 @@ class ClusterExecutor(_BaseExecutor):
 
         def speculate() -> None:
             with cv:
-                candidates = [(nid, st) for nid, st in inflight.items()
-                              if st.copies < self.max_copies]
+                candidates = [
+                    (nid, st)
+                    for nid, st in inflight.items()
+                    if st.copies < self.max_copies
+                ]
             for nid, st in candidates:
                 if st.node.resources.get("affinity"):
                     # pinned to worker-held state: a copy elsewhere could be
                     # wrong, a copy on the holder is useless — don't race it
                     continue
                 name = str(st.node.fn)
-                if not self.straggler.should_speculate(name, nid, st.copies,
-                                                       self.max_copies):
+                if not self.straggler.should_speculate(
+                    name, nid, st.copies, self.max_copies
+                ):
                     continue
                 dup = self.gateway.submit(
-                    name, st.ctx, dict(st.inputs),
-                    meta={"node": nid, "run": run_token, "speculative": True})
+                    name,
+                    st.ctx,
+                    dict(st.inputs),
+                    meta={"node": nid, "run": run_token, "speculative": True},
+                )
                 with cv:
                     st.futures.append(dup)
                     st.copies += 1
@@ -587,22 +1107,29 @@ class ClusterExecutor(_BaseExecutor):
 
         prev_requeue = self.gateway.on_requeue
         self.gateway.on_requeue = on_requeue
+        cascade_errors: List[BaseException] = []
         try:
             total = len(exec_nodes)
             while done_count() < total:
-                while ready:
-                    dispatch(ready.popleft())
+                while True:
+                    with cv:
+                        nid = ready.popleft() if ready else None
+                    if nid is None:
+                        break
+                    dispatch(nid)
                 if done_count() >= total:
                     break
                 with cv:
-                    if not completions:
-                        if not inflight:
+                    if not completions and not ready:
+                        if not inflight and not stream_running[0]:
+                            if cascade_errors:
+                                raise cascade_errors[0]  # all roots cascaded
                             left = total - done_count()
                             raise RuntimeError(
                                 f"scheduler stalled: {left} nodes unfinished "
-                                "with nothing in flight")
-                        cv.wait(self.speculation_tick_s if self.speculative
-                                else None)
+                                "with nothing in flight"
+                            )
+                        cv.wait(self.speculation_tick_s if self.speculative else None)
                     drained = []
                     while completions:
                         drained.append(completions.popleft())
@@ -611,6 +1138,18 @@ class ClusterExecutor(_BaseExecutor):
                         speculate()
                     continue
                 for nid, fut in drained:
+                    if splan.kinds.get(nid):
+                        with cv:
+                            stream_running[0] -= 1
+                        try:
+                            value, ctx, status = fut.result()  # re-raise errors
+                        except (StreamCancelled, ChannelClosed) as exc:
+                            # cascade from a failure elsewhere: keep draining
+                            # so the root error's own future surfaces it
+                            cascade_errors.append(exc)
+                            continue
+                        finish(nid, value, ctx, status)
+                        continue
                     with cv:
                         st = inflight.get(nid)
                         stale = st is None or fut not in st.futures
@@ -628,10 +1167,15 @@ class ClusterExecutor(_BaseExecutor):
                             del inflight[nid]
                         self.straggler.finished(str(st.node.fn), nid)
                         if self.journal is not None:
-                            self.journal.append(JournalRecord(
-                                kind="NODE_FAIL", node_id=nid,
-                                context_digest=st.ctx_digest,
-                                input_digest=st.input_digest, attempt=st.attempts))
+                            self.journal.append(
+                                JournalRecord(
+                                    kind="NODE_FAIL",
+                                    node_id=nid,
+                                    context_digest=st.ctx_digest,
+                                    input_digest=st.input_digest,
+                                    attempt=st.attempts,
+                                )
+                            )
                             self.journal.flush()
                         raise
                     with cv:
@@ -639,19 +1183,197 @@ class ClusterExecutor(_BaseExecutor):
                         requeues = st.attempts
                         del inflight[nid]
                     self.straggler.finished(str(st.node.fn), nid)
-                    self._commit(nid, st.ctx_digest, st.input_digest, value,
-                                 requeues + copies - 1)
-                    self._cache_store(nid, st.cache_key, st.ctx_digest,
-                                      st.input_digest, value)
+                    self._commit(
+                        nid, st.ctx_digest, st.input_digest, value, requeues + copies - 1
+                    )
+                    self._cache_store(
+                        nid, st.cache_key, st.ctx_digest, st.input_digest, value
+                    )
                     finish(nid, value, st.ctx, "executed")
             if self.journal is not None:
                 self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
                 self.journal.flush()
+        except BaseException as exc:
+            cancel.set()
+            for handle in list(stream_handles.values()):
+                handle.close(error=exc)
+            if self.journal is not None:
+                self.journal.flush()
+            raise
         finally:
             if self.gateway.on_requeue is on_requeue:  # don't clobber a later client
                 self.gateway.on_requeue = prev_requeue
             with cv:
                 inflight.clear()  # keep a dead chained handler's closure cheap
-        return ExecutionReport(outputs=outputs, contexts=out_ctx,
-                               replayed=tuple(replayed), executed=tuple(executed),
-                               cached=tuple(cached), wall_s=time.time() - t0)
+        return ExecutionReport(
+            outputs=outputs,
+            contexts=out_ctx,
+            replayed=tuple(replayed),
+            executed=tuple(executed),
+            cached=tuple(cached),
+            wall_s=time.time() - t0,
+        )
+
+    # -- stream stages over the gateway ---------------------------------------
+    def _source_invoker(
+        self,
+        node: Node,
+        ctx: Context,
+        inputs: Mapping[str, Any],
+        run_token: str,
+    ) -> Callable[[int], Any]:
+        """invoke(start) → chunk iterable, local generator or remote stream.
+
+        Named sources are dispatched once through the gateway; the worker
+        answers with an incremental chunk stream (frame-decoded by the
+        transport — docs/streaming.md §5). The resolved future's value IS
+        the chunk iterator, so iteration overlaps with remote production.
+        The ``start`` offset is part of the task protocol: a registry task
+        used as a stream source always receives ``start`` in its inputs.
+        """
+        fn = node.fn
+        if callable(fn):
+            if _accepts_start(fn):
+                return lambda start: fn(ctx, start=start, **inputs)
+            return lambda start: itertools.islice(fn(ctx, **inputs), start, None)
+        name = str(fn)
+
+        def invoke(start: int) -> Any:
+            fut = self.gateway.submit(
+                name,
+                ctx,
+                {**inputs, "start": start},
+                affinity_key=str(node.resources.get("affinity", "")),
+                meta={"node": node.id, "run": run_token, "stream": "source"},
+            )
+            stream = fut.result()
+            if not hasattr(stream, "__iter__"):
+                raise TypeError(
+                    f"stream source task {name!r} returned a non-iterable "
+                    f"{type(stream).__name__}; a source must be a generator"
+                )
+            return stream
+
+        return invoke
+
+    def _map_invoker(
+        self,
+        node: Node,
+        ctx: Context,
+        inputs: Mapping[str, Any],
+        stream_kwarg: str,
+        run_token: str,
+    ) -> Callable[[int, Any], Any]:
+        """Per-chunk mapper: named tasks become one routed request per chunk."""
+        fn = node.fn
+        if callable(fn):
+            return lambda seq, chunk: fn(ctx, **{stream_kwarg: chunk}, **inputs)
+        name = str(fn)
+
+        def invoke_chunk(seq: int, chunk: Any) -> Any:
+            fut = self.gateway.submit(
+                name,
+                ctx,
+                {**inputs, stream_kwarg: chunk},
+                affinity_key=str(node.resources.get("affinity", "")),
+                meta={"node": node.id, "run": run_token, "seq": seq},
+            )
+            return fut.result()
+
+        return invoke_chunk
+
+    def _run_cluster_stream_node(
+        self,
+        node: Node,
+        splan: StreamPlan,
+        ctx: Context,
+        outputs: Mapping[str, Any],
+        out_ctx: Dict[str, Context],
+        member_to_group: Mapping[str, str],
+        stream_identity: Dict[str, Tuple[str, str]],
+        stream_handles: Dict[str, StreamHandle],
+        satisfy_stream_edges: Callable[[str], None],
+        cancel: threading.Event,
+        cv: threading.Condition,
+        run_token: str,
+    ) -> Tuple[Any, Context, str]:
+        """One gateway-side stream stage. Returns (value, ctx, status)."""
+        nid = node.id
+        kind = splan.kinds[nid]
+        fn_inputs, digest_inputs, stream_kwarg, sdep = self._stream_stage_inputs(
+            node, splan, outputs, member_to_group, stream_identity
+        )
+        ctx_d = ctx.digest()
+        in_d = payload_digest(digest_inputs)
+
+        handle: Optional[StreamHandle] = None
+        if kind in ("source", "map"):
+            handle = StreamHandle(
+                nid,
+                splan.subscribers.get(nid, ()),
+                capacity=self.channel_capacity,
+            )
+        with cv:
+            # ctx/identity/handle are published before consumers unblock —
+            # a stage's ξ is final at start (stages cannot emit facts)
+            out_ctx[nid] = ctx
+            stream_identity[nid] = (ctx_d, in_d)
+            if handle is not None:
+                stream_handles[nid] = handle
+        satisfy_stream_edges(nid)
+
+        upstream = stream_handles[sdep].subscribe(nid) if sdep else None
+
+        if kind == "reduce":
+            hit = self._lookup(nid, ctx_d, in_d)
+            if hit is not None:
+                upstream.abandon()
+                if hit.facts:
+                    ctx = ctx.with_data(hit.facts, origin=nid)
+                return hit.value, ctx, "replayed"
+            self._journal_stream_start(nid, kind, ctx_d, in_d, 0)
+            chunk_iter = reduce_iter(upstream, cancel)
+            if callable(node.fn):
+                value = node.fn(ctx, **{stream_kwarg: chunk_iter}, **fn_inputs)
+            else:
+                # named reduce: the worker gets the materialized chunk list
+                # (a registry task cannot consume a live cross-host iterator)
+                fut = self.gateway.submit(
+                    str(node.fn),
+                    ctx,
+                    {**fn_inputs, stream_kwarg: list(chunk_iter)},
+                    meta={"node": nid, "run": run_token, "stream": "reduce"},
+                )
+                value = fut.result()
+            facts = dict(value.facts) if isinstance(value, WithContext) else None
+            if isinstance(value, WithContext):
+                ctx = ctx.with_data(value.facts, origin=nid)
+                value = value.output
+            self._commit(
+                nid, ctx_d, in_d, value, 0, meta={"facts": facts} if facts else None
+            )
+            return value, ctx, "executed"
+
+        log = ChunkLog(self.journal, self.replay, nid, ctx_d, in_d)
+        if not log.eos:
+            self._journal_stream_start(nid, kind, ctx_d, in_d, log.next_seq)
+        if kind == "source":
+            values, status = run_source_stage(
+                nid,
+                log,
+                handle,
+                self._source_invoker(node, ctx, fn_inputs, run_token),
+                cancel,
+                retries=max(node.retries, self.stream_retries),
+            )
+        else:
+            values, status = run_map_stage(
+                nid,
+                log,
+                upstream,
+                handle,
+                self._map_invoker(node, ctx, fn_inputs, stream_kwarg, run_token),
+                cancel,
+                retries=node.retries,
+            )
+        return values, ctx, status

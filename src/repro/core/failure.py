@@ -10,24 +10,24 @@ plus the retry policies used by the executor. Speculative re-execution is
 safe because tasks are atomic + deterministic (durable-execution contract):
 the first commit wins in the journal; duplicates are idempotent no-ops.
 """
+
 from __future__ import annotations
 
 import statistics
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from enum import Enum
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional
 
-__all__ = ["FailureKind", "Verdict", "LivenessDetector", "RetryPolicy",
-           "StragglerWatch"]
+__all__ = ["FailureKind", "Verdict", "LivenessDetector", "RetryPolicy", "StragglerWatch"]
 
 
 class FailureKind(Enum):
     HEALTHY = "healthy"
-    SYSTEM = "system"            # heartbeat down ⇒ node/hardware failure
+    SYSTEM = "system"  # heartbeat down ⇒ node/hardware failure
     APPLICATION = "application"  # heartbeat up, app down ⇒ software failure
-    STRAGGLER = "straggler"      # alive but anomalously slow
+    STRAGGLER = "straggler"  # alive but anomalously slow
 
 
 @dataclass
@@ -40,9 +40,12 @@ class Verdict:
 class LivenessDetector:
     """Combines heartbeat + application probes into the paper's taxonomy."""
 
-    def __init__(self, heartbeat_probe: Callable[[str], Optional[dict]],
-                 app_probe: Callable[[str], bool],
-                 suspect_after_s: float = 2.0):
+    def __init__(
+        self,
+        heartbeat_probe: Callable[[str], Optional[dict]],
+        app_probe: Callable[[str], bool],
+        suspect_after_s: float = 2.0,
+    ):
         self._hb = heartbeat_probe
         self._app = app_probe
         self.suspect_after_s = suspect_after_s
@@ -55,13 +58,15 @@ class LivenessDetector:
             # allow a grace window before declaring system death
             last = self._last_ok.get(worker, 0.0)
             if now - last > self.suspect_after_s:
-                return Verdict(FailureKind.SYSTEM, worker,
-                               "heartbeat unreachable past grace window")
+                return Verdict(
+                    FailureKind.SYSTEM, worker, "heartbeat unreachable past grace window"
+                )
             return Verdict(FailureKind.HEALTHY, worker, "heartbeat missed (grace)")
         self._last_ok[worker] = now
         if not self._app(worker):
-            return Verdict(FailureKind.APPLICATION, worker,
-                           "heartbeat OK but application not responding")
+            return Verdict(
+                FailureKind.APPLICATION, worker, "heartbeat OK but application not responding"
+            )
         return Verdict(FailureKind.HEALTHY, worker)
 
 
@@ -71,11 +76,10 @@ class RetryPolicy:
     base_delay_s: float = 0.05
     multiplier: float = 2.0
     max_delay_s: float = 5.0
-    retry_on: tuple = (FailureKind.SYSTEM, FailureKind.APPLICATION,
-                       FailureKind.STRAGGLER)
+    retry_on: tuple = (FailureKind.SYSTEM, FailureKind.APPLICATION, FailureKind.STRAGGLER)
 
     def delay(self, attempt: int) -> float:
-        return min(self.max_delay_s, self.base_delay_s * self.multiplier ** attempt)
+        return min(self.max_delay_s, self.base_delay_s * self.multiplier**attempt)
 
     def should_retry(self, kind: FailureKind, attempt: int) -> bool:
         return attempt < self.max_attempts and kind in self.retry_on
@@ -115,8 +119,9 @@ class StragglerWatch:
             xs = self._done.get(task_name, [])
             return statistics.median(xs) if len(xs) >= self.min_samples else None
 
-    def should_speculate(self, task_name: str, token: Any, copies: int,
-                         max_copies: int = 3) -> bool:
+    def should_speculate(
+        self, task_name: str, token: Any, copies: int, max_copies: int = 3
+    ) -> bool:
         """True when (task_name, token) is a straggler and a copy is allowed.
 
         The global-speculation decision used by the dataflow executor: the

@@ -11,6 +11,7 @@ Fallback chain: if an algorithm raises or returns no worker, the next one in
 the chain is consulted; the terminal fallback is round-robin over live
 workers — graceful degradation, never a hard stop from the scheduler itself.
 """
+
 from __future__ import annotations
 
 import heapq
@@ -23,10 +24,20 @@ from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.wire import PayloadDecodeError
+
 from .context import Context, EMPTY_CONTEXT
 
-__all__ = ["TaskRequest", "WorkerHandle", "AllocationError", "Gateway",
-           "round_robin", "least_loaded", "power_of_two", "context_affinity"]
+__all__ = [
+    "TaskRequest",
+    "WorkerHandle",
+    "AllocationError",
+    "Gateway",
+    "round_robin",
+    "least_loaded",
+    "power_of_two",
+    "context_affinity",
+]
 
 
 class AllocationError(RuntimeError):
@@ -40,31 +51,33 @@ class TaskRequest:
     task_name: str
     ctx: Context = EMPTY_CONTEXT
     inputs: Mapping[str, Any] = field(default_factory=dict)
-    priority: int = 0                  # lower = more urgent (silo key)
-    affinity_key: str = ""             # context-affinity routing hint
+    priority: int = 0  # lower = more urgent (silo key)
+    affinity_key: str = ""  # context-affinity routing hint
     future: Future = field(default_factory=Future)
     submitted_at: float = field(default_factory=time.time)
-    attempts: int = 0                  # failure budget: real execution failures/evictions
-    backoffs: int = 0                  # empty-pool waits — NOT charged to the budget
+    attempts: int = 0  # failure budget: real execution failures/evictions
+    backoffs: int = 0  # empty-pool waits — NOT charged to the budget
     max_attempts: int = 3
     meta: Dict[str, Any] = field(default_factory=dict)  # caller attribution
+    last_error: Optional[BaseException] = None  # surfaced if backoffs exhaust
 
 
 @dataclass
 class WorkerHandle:
     """Gateway-side view of a Server: transport + cached telemetry (context)."""
 
-    worker: Any                        # InProcWorker | WorkerClient surface
+    worker: Any  # InProcWorker | WorkerClient surface
     name: str
-    live: bool = True                  # heartbeat verdict (system level)
-    app_live: bool = True              # application verdict
+    live: bool = True  # heartbeat verdict (system level)
+    app_live: bool = True  # application verdict
     telemetry: Optional[Dict[str, Any]] = None
     last_seen: float = 0.0
     inflight: int = 0
     completed: int = 0
-    ewma_latency_s: float = 0.0        # straggler detection input
+    ewma_latency_s: float = 0.0  # straggler detection input
     held_contexts: set = field(default_factory=set)  # affinity state
-    hb_misses: int = 0                 # consecutive failed heartbeat probes
+    hb_misses: int = 0  # consecutive failed heartbeat probes
+    app_quarantined_until: float = 0.0  # app_live self-heal blocked until then
     inflight_reqs: Dict[int, "TaskRequest"] = field(default_factory=dict)
     # ^ id(req) → req for every request currently running on this worker;
     #   the eviction path drains it to requeue orphans on survivors.
@@ -81,8 +94,10 @@ class WorkerHandle:
 # allocation algorithms (pluggable, §3.3 assumption 3)
 # --------------------------------------------------------------------------
 
-def round_robin(workers: Sequence[WorkerHandle], req: TaskRequest,
-                state: Dict[str, Any]) -> Optional[WorkerHandle]:
+
+def round_robin(
+    workers: Sequence[WorkerHandle], req: TaskRequest, state: Dict[str, Any]
+) -> Optional[WorkerHandle]:
     """Cycle over live workers — the terminal graceful-degradation fallback."""
     live = [w for w in workers if w.live and w.app_live]
     if not live:
@@ -91,8 +106,9 @@ def round_robin(workers: Sequence[WorkerHandle], req: TaskRequest,
     return live[next(i) % len(live)]
 
 
-def least_loaded(workers: Sequence[WorkerHandle], req: TaskRequest,
-                 state: Dict[str, Any]) -> Optional[WorkerHandle]:
+def least_loaded(
+    workers: Sequence[WorkerHandle], req: TaskRequest, state: Dict[str, Any]
+) -> Optional[WorkerHandle]:
     """Pick the live worker with the lowest (inflight + cpu) load score."""
     live = [w for w in workers if w.live and w.app_live]
     if not live:
@@ -100,8 +116,9 @@ def least_loaded(workers: Sequence[WorkerHandle], req: TaskRequest,
     return min(live, key=lambda w: (w.load_score(), w.name))
 
 
-def power_of_two(workers: Sequence[WorkerHandle], req: TaskRequest,
-                 state: Dict[str, Any]) -> Optional[WorkerHandle]:
+def power_of_two(
+    workers: Sequence[WorkerHandle], req: TaskRequest, state: Dict[str, Any]
+) -> Optional[WorkerHandle]:
     """Power-of-two-choices: O(1) with near-least-loaded quality."""
     live = [w for w in workers if w.live and w.app_live]
     if not live:
@@ -111,8 +128,9 @@ def power_of_two(workers: Sequence[WorkerHandle], req: TaskRequest,
     return min((a, b), key=lambda w: (w.load_score(), w.name))
 
 
-def context_affinity(workers: Sequence[WorkerHandle], req: TaskRequest,
-                     state: Dict[str, Any]) -> Optional[WorkerHandle]:
+def context_affinity(
+    workers: Sequence[WorkerHandle], req: TaskRequest, state: Dict[str, Any]
+) -> Optional[WorkerHandle]:
     """Prefer the worker already holding the task's context (sharded state)."""
     if not req.affinity_key:
         return None  # fall through the chain
@@ -134,13 +152,18 @@ _ALGOS: Dict[str, Callable] = {
 class Gateway:
     """Central task router with queue/queue-silo + allocation fallback chain."""
 
-    def __init__(self, workers: Sequence[Any], *,
-                 allocation: Sequence[str] = ("context_affinity", "least_loaded"),
-                 silo: bool = False,
-                 heartbeat_interval_s: float = 0.5,
-                 dispatch_threads: int = 8,
-                 evict_after_misses: int = 2,
-                 name: str = "gateway"):
+    def __init__(
+        self,
+        workers: Sequence[Any],
+        *,
+        allocation: Sequence[str] = ("context_affinity", "least_loaded"),
+        silo: bool = False,
+        heartbeat_interval_s: float = 0.5,
+        dispatch_threads: int = 8,
+        evict_after_misses: int = 2,
+        quarantine_s: float = 2.0,
+        name: str = "gateway",
+    ):
         self.name = name
         self.handles: List[WorkerHandle] = [
             WorkerHandle(worker=w, name=getattr(w, "name", f"w{i}"))
@@ -159,24 +182,32 @@ class Gateway:
         self._stop = threading.Event()
         self._hb_interval = heartbeat_interval_s
         self.evict_after_misses = evict_after_misses
+        self.quarantine_s = quarantine_s
         self._threads: List[threading.Thread] = []
         self._dispatch_threads = dispatch_threads
         self._track_lock = threading.Lock()  # guards inflight counters/registries
         self.on_worker_down: Optional[Callable[[WorkerHandle], None]] = None
         self.on_requeue: Optional[Callable[[TaskRequest, str], None]] = None
-        self.metrics = {"scheduled": 0, "rejected": 0, "requeued": 0,
-                        "evicted": 0, "alloc_ns_total": 0, "alloc_calls": 0}
+        self.metrics = {
+            "scheduled": 0,
+            "rejected": 0,
+            "requeued": 0,
+            "evicted": 0,
+            "corrupt": 0,
+            "alloc_ns_total": 0,
+            "alloc_calls": 0,
+        }
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "Gateway":
         """Start heartbeat + dispatch threads; probe workers once, synchronously."""
-        hb = threading.Thread(target=self._heartbeat_loop, name=f"{self.name}:hb",
-                              daemon=True)
+        hb = threading.Thread(target=self._heartbeat_loop, name=f"{self.name}:hb", daemon=True)
         hb.start()
         self._threads.append(hb)
         for i in range(self._dispatch_threads):
-            t = threading.Thread(target=self._dispatch_loop,
-                                 name=f"{self.name}:dispatch{i}", daemon=True)
+            t = threading.Thread(
+                target=self._dispatch_loop, name=f"{self.name}:dispatch{i}", daemon=True
+            )
             t.start()
             self._threads.append(t)
         self._refresh_heartbeats()  # synchronous first pass: start with fresh context
@@ -197,14 +228,32 @@ class Gateway:
         self.stop()
 
     # -- submission ------------------------------------------------------------
-    def submit(self, task_name: str, ctx: Context = EMPTY_CONTEXT,
-               inputs: Optional[Mapping[str, Any]] = None, *, priority: int = 0,
-               affinity_key: str = "", max_attempts: int = 3,
-               meta: Optional[Mapping[str, Any]] = None) -> Future:
-        """Enqueue one task for dispatch; returns the Future of its result."""
-        req = TaskRequest(task_name=task_name, ctx=ctx, inputs=dict(inputs or {}),
-                          priority=priority, affinity_key=affinity_key,
-                          max_attempts=max_attempts, meta=dict(meta or {}))
+    def submit(
+        self,
+        task_name: str,
+        ctx: Context = EMPTY_CONTEXT,
+        inputs: Optional[Mapping[str, Any]] = None,
+        *,
+        priority: int = 0,
+        affinity_key: str = "",
+        max_attempts: int = 3,
+        meta: Optional[Mapping[str, Any]] = None,
+    ) -> Future:
+        """Enqueue one task for dispatch; returns the Future of its result.
+
+        A streaming task (the worker's function is a generator) resolves its
+        Future with a live chunk *iterator* instead of a value — see
+        docs/streaming.md §5.
+        """
+        req = TaskRequest(
+            task_name=task_name,
+            ctx=ctx,
+            inputs=dict(inputs or {}),
+            priority=priority,
+            affinity_key=affinity_key,
+            max_attempts=max_attempts,
+            meta=dict(meta or {}),
+        )
         with self._cv:
             if self.silo:
                 heapq.heappush(self._silo, (priority, next(self._silo_counter), req))
@@ -213,8 +262,13 @@ class Gateway:
             self._cv.notify()
         return req.future
 
-    def map(self, task_name: str, inputs_list: Sequence[Mapping[str, Any]],
-            ctx: Context = EMPTY_CONTEXT, **kw) -> List[Future]:
+    def map(
+        self,
+        task_name: str,
+        inputs_list: Sequence[Mapping[str, Any]],
+        ctx: Context = EMPTY_CONTEXT,
+        **kw,
+    ) -> List[Future]:
         """Submit one task per input mapping; returns the Futures in order."""
         return [self.submit(task_name, ctx, inp, **kw) for inp in inputs_list]
 
@@ -257,15 +311,20 @@ class Gateway:
                 time.sleep(0.05)
                 req.backoffs += 1
                 if req.backoffs >= req.max_attempts * 4:
-                    self._fail(req, AllocationError("no live workers available"))
+                    # surface the request's own last failure (e.g. a typed
+                    # PayloadDecodeError that quarantined every worker)
+                    # rather than a generic allocation error
+                    self._fail(
+                        req,
+                        req.last_error or AllocationError("no live workers available"),
+                    )
                     self.metrics["rejected"] += 1
                 else:
                     self._resubmit(req, "no live workers (backoff)", notify=False)
                 continue
             self._run_on(handle, req)
 
-    def _resubmit(self, req: TaskRequest, reason: str = "", *,
-                  notify: bool = True) -> None:
+    def _resubmit(self, req: TaskRequest, reason: str = "", *, notify: bool = True) -> None:
         with self._cv:
             if self.silo:
                 heapq.heappush(self._silo, (req.priority, next(self._silo_counter), req))
@@ -321,8 +380,12 @@ class Gateway:
             req.attempts += 1
             self.metrics["evicted"] += 1
             if req.attempts >= req.max_attempts:
-                self._fail(req, AllocationError(
-                    f"task {req.task_name} lost with evicted worker {handle.name}"))
+                self._fail(
+                    req,
+                    AllocationError(
+                        f"task {req.task_name} lost with evicted worker {handle.name}"
+                    ),
+                )
             else:
                 self._resubmit(req, f"{reason}: evicted from {handle.name}")
 
@@ -348,8 +411,12 @@ class Gateway:
                 return  # heartbeat eviction already requeued this request
             req.attempts += 1
             if req.attempts >= req.max_attempts:
-                self._fail(req, AllocationError(
-                    f"task {req.task_name} exhausted retries (system failures)"))
+                self._fail(
+                    req,
+                    AllocationError(
+                        f"task {req.task_name} exhausted retries (system failures)"
+                    ),
+                )
             else:
                 self._resubmit(req, f"system failure on {handle.name}")
             return
@@ -357,6 +424,8 @@ class Gateway:
             # application-level failure: heartbeat may still be fine
             owned = self._release(handle, req)
             handle.app_live = False
+            handle.app_quarantined_until = time.time() + self.quarantine_s
+            req.last_error = exc
             if not owned:
                 return
             req.attempts += 1
@@ -365,17 +434,43 @@ class Gateway:
             else:
                 self._resubmit(req, f"application failure on {handle.name}")
             return
+        except PayloadDecodeError as exc:
+            # the worker ANSWERED, but with undecodable bytes — the typed
+            # corruption signal from repro.wire. Quarantine the worker at
+            # the application level and retry the request on a healthy one;
+            # when every attempt hits corruption the caller sees the typed
+            # PayloadDecodeError, not a generic timeout.
+            owned = self._release(handle, req)
+            handle.app_live = False
+            handle.app_quarantined_until = time.time() + self.quarantine_s
+            req.last_error = exc
+            self.metrics["corrupt"] += 1
+            if not owned:
+                return
+            req.attempts += 1
+            if req.attempts >= req.max_attempts:
+                self._fail(req, exc)
+            else:
+                self._resubmit(req, f"corrupt payload from {handle.name}")
+            return
         dt = time.time() - t0
         owned = self._release(handle, req)
         handle.completed += 1
-        handle.ewma_latency_s = (0.8 * handle.ewma_latency_s + 0.2 * dt
-                                 if handle.ewma_latency_s else dt)
+        handle.ewma_latency_s = (
+            0.8 * handle.ewma_latency_s + 0.2 * dt if handle.ewma_latency_s else dt
+        )
         if req.affinity_key:
             handle.held_contexts.add(req.affinity_key)
         self.metrics["scheduled"] += 1
         status = result.get("status")
         if status == "ok":
             self._resolve(req, result["output"])
+        elif status == "stream":
+            # a stream-source task: the future resolves with the live chunk
+            # iterator (chunk framing happens in the worker transport); the
+            # consumer drives it and handles mid-stream failures by
+            # re-dispatching from its last durable offset (streaming.md §5)
+            self._resolve(req, result["stream"])
         elif status == "rejected":
             if not owned:
                 return  # a requeued copy owns the outcome now
@@ -393,21 +488,33 @@ class Gateway:
     def _refresh_heartbeats(self) -> None:
         for h in self.handles:
             tel = None
+            t0 = time.perf_counter()
             try:
                 tel = h.worker.heartbeat()
             except Exception:
                 tel = None
+            if tel is not None:
+                # HTTP probes stamp their own RTT (check_heartbeat); stamp
+                # in-proc workers with the gateway-measured probe time so
+                # stats() always carries a probe_latency_s signal
+                tel.setdefault("probe_latency_s", time.perf_counter() - t0)
             with self._track_lock:  # transition must be atomic vs _run_on's
                 was_live, h.live = h.live, tel is not None
             h.telemetry = tel
             h.last_seen = time.time() if tel else h.last_seen
             h.hb_misses = 0 if tel is not None else h.hb_misses + 1
             if tel is not None:
-                h.app_live = getattr(h.worker, "app_alive", True)
+                reported = getattr(h.worker, "app_alive", None)
+                if reported is not None:
+                    h.app_live = reported  # the worker self-reports: trust it
+                elif time.time() >= h.app_quarantined_until:
+                    # workers without a self-report (HTTP transports) only
+                    # self-heal after the quarantine window — a corrupt-but-
+                    # alive worker must not re-enter rotation every probe
+                    h.app_live = True
             if was_live and not h.live and self.on_worker_down:
                 self.on_worker_down(h)
-            if (not h.live and h.inflight_reqs
-                    and h.hb_misses >= self.evict_after_misses):
+            if not h.live and h.inflight_reqs and h.hb_misses >= self.evict_after_misses:
                 # the heartbeat verdict drives recovery, not just routing —
                 # but a single missed probe is routing-only (self-heals on the
                 # next probe); eviction needs consecutive misses so one GC
@@ -434,6 +541,41 @@ class Gateway:
     def live_workers(self) -> List[WorkerHandle]:
         """Workers currently passing both system and application liveness."""
         return [h for h in self.handles if h.live and h.app_live]
+
+    def stats(self) -> Dict[str, Any]:
+        """One coherent telemetry snapshot of the whole gateway.
+
+        Per-worker liveness, inflight/completed counts, EWMA task latency,
+        the last heartbeat's ``probe_latency_s``, plus queue/silo depths and
+        the dispatch metrics — the inputs a stream-aware allocator needs
+        (route a chunk stream to the worker with headroom AND a fast probe).
+        """
+        with self._cv:
+            queue_depth = len(self._queue)
+            silo_depth = len(self._silo)
+        workers: Dict[str, Dict[str, Any]] = {}
+        with self._track_lock:
+            for h in self.handles:
+                tel = h.telemetry or {}
+                workers[h.name] = {
+                    "live": h.live,
+                    "app_live": h.app_live,
+                    "inflight": h.inflight,
+                    "completed": h.completed,
+                    "hb_misses": h.hb_misses,
+                    "ewma_latency_s": h.ewma_latency_s,
+                    "probe_latency_s": float(tel.get("probe_latency_s", 0.0)),
+                    "last_seen": h.last_seen,
+                    "held_contexts": len(h.held_contexts),
+                }
+        return {
+            "workers": workers,
+            "queue_depth": queue_depth,
+            "silo_depth": silo_depth,
+            "live_workers": sum(1 for w in workers.values() if w["live"] and w["app_live"]),
+            "metrics": dict(self.metrics),
+            "mean_alloc_us": self.mean_alloc_us(),
+        }
 
     def mean_alloc_us(self) -> float:
         """Mean allocation-decision latency in microseconds (§5 bottleneck gauge)."""

@@ -10,11 +10,11 @@ Context propagation follows the paper exactly:
   - a node with independent origins inherits the union of its parents' ξ,
   - a union node's ξ is the union of the ξ and Ψ of every member.
 """
+
 from __future__ import annotations
 
 import hashlib
 import itertools
-import time
 from dataclasses import dataclass, field
 from types import CodeType, ModuleType
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
@@ -23,8 +23,14 @@ from repro.wire import DIGEST_HEX_LEN, canonical_bytes
 
 from .context import Context, EMPTY_CONTEXT
 
-__all__ = ["Node", "UnionNode", "ContextGraph", "CycleError", "fn_digest",
-           "toposort_levels"]
+__all__ = [
+    "Node",
+    "UnionNode",
+    "ContextGraph",
+    "CycleError",
+    "fn_digest",
+    "toposort_levels",
+]
 
 # Closure cells holding values that are neither callable nor canonically
 # serializable get a process-unique marker: such functions simply never hit
@@ -123,6 +129,9 @@ class CycleError(ValueError):
     """Raised when a cycle survives contraction (contract=False paths)."""
 
 
+STREAM_KINDS = ("", "source", "map", "reduce")
+
+
 @dataclass
 class Node:
     """An atomic task.
@@ -130,6 +139,12 @@ class Node:
     ``fn`` receives its inputs purely by injection: ``fn(ctx, **inputs)`` where
     ``inputs`` maps each dependency's node id (or alias) to that node's output.
     ``data`` is Ψ(node): static facts folded into the node's context.
+
+    ``stream`` declares participation in the streaming dataflow subsystem
+    (docs/streaming.md): ``"source"`` — ``fn`` is a generator yielding chunks;
+    ``"map"`` — ``fn`` runs once per upstream chunk; ``"reduce"`` — ``fn``
+    consumes the upstream chunk iterator and returns one value. ``""`` is a
+    plain batch node (runs after every dep fully commits).
     """
 
     id: str
@@ -140,6 +155,7 @@ class Node:
     resources: Mapping[str, float] = field(default_factory=dict)  # scheduling hints
     retries: int = 0
     timeout_s: Optional[float] = None
+    stream: str = ""  # "" | "source" | "map" | "reduce"
 
     def kwarg_for(self, dep_id: str) -> str:
         """Kwarg name a dependency's output is injected under (alias-aware)."""
@@ -233,7 +249,9 @@ def _tarjan_scc(ids: Sequence[str], deps_of: Mapping[str, Sequence[str]]) -> Lis
     return sccs
 
 
-def toposort_levels(ids: Sequence[str], deps_of: Mapping[str, Sequence[str]]) -> List[List[str]]:
+def toposort_levels(
+    ids: Sequence[str], deps_of: Mapping[str, Sequence[str]]
+) -> List[List[str]]:
     """Kahn levels: each level's nodes are mutually independent (parallelizable)."""
     indeg = {i: 0 for i in ids}
     children: Dict[str, List[str]] = {i: [] for i in ids}
@@ -269,18 +287,42 @@ class ContextGraph:
         self.nodes: Dict[str, Node] = {}
 
     # -- building ----------------------------------------------------------
-    def add(self, id: str, fn: Optional[Callable[..., Any]] = None, *,
-            deps: Iterable[str] = (), data: Optional[Mapping[str, Any]] = None,
-            aliases: Optional[Mapping[str, str]] = None,
-            resources: Optional[Mapping[str, float]] = None,
-            retries: int = 0, timeout_s: Optional[float] = None) -> Node:
+    def add(
+        self,
+        id: str,
+        fn: Optional[Callable[..., Any]] = None,
+        *,
+        deps: Iterable[str] = (),
+        data: Optional[Mapping[str, Any]] = None,
+        aliases: Optional[Mapping[str, str]] = None,
+        resources: Optional[Mapping[str, float]] = None,
+        retries: int = 0,
+        timeout_s: Optional[float] = None,
+        stream: str = "",
+    ) -> Node:
         if id in self.nodes:
             raise ValueError(f"duplicate node id {id!r}")
-        node = Node(id=id, fn=fn, deps=tuple(deps), data=dict(data or {}),
-                    aliases=dict(aliases or {}), resources=dict(resources or {}),
-                    retries=retries, timeout_s=timeout_s)
+        if stream not in STREAM_KINDS:
+            raise ValueError(f"node {id!r}: stream must be one of {STREAM_KINDS}")
+        node = Node(
+            id=id,
+            fn=fn,
+            deps=tuple(deps),
+            data=dict(data or {}),
+            aliases=dict(aliases or {}),
+            resources=dict(resources or {}),
+            retries=retries,
+            timeout_s=timeout_s,
+            stream=stream,
+        )
         self.nodes[id] = node
         return node
+
+    def add_stream(self, id: str, fn: Optional[Callable[..., Any]] = None, **kw) -> Node:
+        """Declare a stream *producer*: ``fn(ctx, *, start=0, **inputs)`` is a
+        generator yielding chunks, beginning at chunk index ``start`` (the
+        durable-resume offset — see docs/streaming.md §4)."""
+        return self.add(id, fn, stream="source", **kw)
 
     def task(self, id: str, *, deps: Iterable[str] = (), **kw):
         """Decorator form: ``@graph.task("loss", deps=["fwd"])``."""
@@ -291,11 +333,66 @@ class ContextGraph:
 
         return wrap
 
+    def stream_dep_of(self, node: Node) -> Optional[str]:
+        """The single stream-stage dependency of a map/reduce node, if any."""
+        stream_deps = [d for d in node.deps if self.nodes[d].stream in ("source", "map")]
+        if node.stream in ("map", "reduce"):
+            if len(stream_deps) != 1:
+                raise ValueError(
+                    f"stream {node.stream} node {node.id!r} needs exactly one "
+                    f"stream-stage dependency, has {len(stream_deps)}"
+                )
+            return stream_deps[0]
+        return None
+
     def validate(self) -> None:
         for n in self.nodes.values():
             for d in n.deps:
                 if d not in self.nodes:
                     raise KeyError(f"node {n.id!r} depends on unknown node {d!r}")
+            self.stream_dep_of(n)  # raises on malformed stream topology
+        self._check_stream_wait_cycles()
+
+    def _check_stream_wait_cycles(self) -> None:
+        """Reject topologies that would deadlock at runtime.
+
+        A stream consumer's *batch* dependency must not (transitively)
+        depend on any stage of the consumer's own upstream pipeline: the
+        stage would block on backpressure into the consumer's channel, the
+        consumer cannot launch until the batch dep commits, and the batch
+        dep waits for the stage's EOS — a wait cycle the DAG check cannot
+        see (it only appears once the stream exceeds channel capacity).
+        """
+        for n in self.nodes.values():
+            if n.stream not in ("map", "reduce"):
+                continue
+            # the consumer's upstream stage chain (map* back to the source)
+            chain = set()
+            cur = self.stream_dep_of(n)
+            while cur is not None:
+                chain.add(cur)
+                cur_node = self.nodes[cur]
+                cur = self.stream_dep_of(cur_node) if cur_node.stream == "map" else None
+            direct = self.stream_dep_of(n)
+            for dep in n.deps:
+                if dep == direct:
+                    continue
+                # DFS: does this batch dep transitively reach the chain?
+                stack, seen = [dep], set()
+                while stack:
+                    d = stack.pop()
+                    if d in seen:
+                        continue
+                    seen.add(d)
+                    if d in chain:
+                        raise ValueError(
+                            f"batch dependency {dep!r} of stream {n.stream} node "
+                            f"{n.id!r} depends on its own pipeline stage {d!r}; "
+                            "this deadlocks once the stream exceeds channel "
+                            "capacity — make it a stream stage or move it out "
+                            "of the pipeline"
+                        )
+                    stack.extend(self.nodes[d].deps)
 
     # -- contraction (§4.1 union nodes) -------------------------------------
     def contract(self) -> Tuple[Dict[str, "UnionNode | Node"], Dict[str, str]]:
@@ -315,31 +412,52 @@ class ContextGraph:
             else:
                 gid = "∪(" + "+".join(scc) + ")"
                 for m in scc:
+                    if self.nodes[m].stream:
+                        raise CycleError(
+                            f"stream node {m!r} is part of a cycle {scc}; "
+                            "stream stages must be acyclic"
+                        )
                     member_to_group[m] = gid
         for scc in sccs:
             gid = member_to_group[scc[0]]
-            ext = sorted({member_to_group[d] for m in scc for d in self.nodes[m].deps
-                          if member_to_group[d] != gid})
+            ext = sorted(
+                {
+                    member_to_group[d]
+                    for m in scc
+                    for d in self.nodes[m].deps
+                    if member_to_group[d] != gid
+                }
+            )
             if gid == scc[0] and len(scc) == 1:
                 # keep the ORIGINAL node (original deps are needed for
                 # dependency injection of specific union-node members)
                 exec_nodes[gid] = self.nodes[scc[0]]
             else:
                 exec_nodes[gid] = UnionNode(
-                    id=gid, members=tuple(self.nodes[m] for m in scc), deps=tuple(ext))
+                    id=gid, members=tuple(self.nodes[m] for m in scc), deps=tuple(ext)
+                )
         return exec_nodes, member_to_group
 
     @staticmethod
-    def group_deps(exec_nodes: Mapping[str, "UnionNode | Node"],
-                   member_to_group: Mapping[str, str]) -> Dict[str, Tuple[str, ...]]:
+    def group_deps(
+        exec_nodes: Mapping[str, "UnionNode | Node"],
+        member_to_group: Mapping[str, str],
+    ) -> Dict[str, Tuple[str, ...]]:
         """Scheduling-level deps: original deps mapped through contraction."""
         out: Dict[str, Tuple[str, ...]] = {}
         for gid, node in exec_nodes.items():
             if isinstance(node, UnionNode):
                 out[gid] = node.deps  # already external group ids
             else:
-                out[gid] = tuple(sorted({member_to_group.get(d, d) for d in node.deps
-                                         if member_to_group.get(d, d) != gid}))
+                out[gid] = tuple(
+                    sorted(
+                        {
+                            member_to_group.get(d, d)
+                            for d in node.deps
+                            if member_to_group.get(d, d) != gid
+                        }
+                    )
+                )
         return out
 
     # -- context propagation -------------------------------------------------
@@ -369,8 +487,11 @@ class ContextGraph:
                     for m in sorted(node.members, key=lambda n: n.id):
                         ctx = ctx.with_data(m.data, origin=m.id) if m.data else ctx
                 else:
-                    ctx = inherited.with_data(node.data, origin=node.id) if node.data \
+                    ctx = (
+                        inherited.with_data(node.data, origin=node.id)
+                        if node.data
                         else inherited
+                    )
                 xi[nid] = ctx
         return xi
 

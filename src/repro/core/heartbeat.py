@@ -11,6 +11,7 @@ Two transports are provided:
     flag runs it in a true subprocess for the integration test).
   - in-process polling via ``telemetry()`` for zero-port unit tests.
 """
+
 from __future__ import annotations
 
 import json
@@ -38,8 +39,11 @@ def _meminfo() -> Dict[str, float]:
                     avail = float(line.split()[1]) * 1024
     except OSError:
         pass
-    return {"total_bytes": total, "available_bytes": avail,
-            "used_frac": (1.0 - avail / total) if total else 0.0}
+    return {
+        "total_bytes": total,
+        "available_bytes": avail,
+        "used_frac": (1.0 - avail / total) if total else 0.0,
+    }
 
 
 def telemetry(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -54,11 +58,19 @@ def telemetry(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         "ok": True,
         "time": time.time(),
         "uptime_s": time.time() - _START,
-        "cpu": {"load1": load1, "load5": load5, "load15": load15,
-                "ncpu": ncpu, "used_frac": min(1.0, load1 / ncpu)},
+        "cpu": {
+            "load1": load1,
+            "load5": load5,
+            "load15": load15,
+            "ncpu": ncpu,
+            "used_frac": min(1.0, load1 / ncpu),
+        },
         "memory": _meminfo(),
-        "disk": {"total_bytes": disk.total, "free_bytes": disk.free,
-                 "used_frac": 1.0 - disk.free / disk.total},
+        "disk": {
+            "total_bytes": disk.total,
+            "free_bytes": disk.free,
+            "used_frac": 1.0 - disk.free / disk.total,
+        },
         "devices": _device_report(),
         "pid": os.getpid(),
     }
@@ -102,8 +114,12 @@ class _Handler(BaseHTTPRequestHandler):
 class HeartbeatServer:
     """Separate-port heartbeat endpoint (assumption 1 of §3.2)."""
 
-    def __init__(self, port: int = 0, host: str = "127.0.0.1",
-                 extra: Optional[Dict[str, Any]] = None):
+    def __init__(
+        self,
+        port: int = 0,
+        host: str = "127.0.0.1",
+        extra: Optional[Dict[str, Any]] = None,
+    ):
         self._httpd = ThreadingHTTPServer((host, port), _Handler)
         self._httpd.extra = extra or {}  # type: ignore[attr-defined]
         self.host = host
@@ -112,7 +128,8 @@ class HeartbeatServer:
 
     def start(self) -> "HeartbeatServer":
         self._thread = threading.Thread(
-            target=self._httpd.serve_forever, name=f"heartbeat:{self.port}", daemon=True)
+            target=self._httpd.serve_forever, name=f"heartbeat:{self.port}", daemon=True
+        )
         self._thread.start()
         return self
 
@@ -142,8 +159,9 @@ def check_heartbeat(address: str, timeout: float = 1.0) -> Optional[Dict[str, An
     """
     t0 = time.time()
     try:
-        with urllib.request.urlopen(address.rstrip("/") + "/heartbeat",
-                                    timeout=timeout) as resp:
+        with urllib.request.urlopen(
+            address.rstrip("/") + "/heartbeat", timeout=timeout
+        ) as resp:
             report = json.loads(resp.read())
         report["probe_latency_s"] = time.time() - t0
         return report

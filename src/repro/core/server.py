@@ -9,26 +9,55 @@ security check pipelines, authentication and authorization mechanisms".
 The heartbeat endpoint is ALWAYS a separate server on a separate port
 (assumption 1 of §3.2), so a crashed application leaves the heartbeat alive —
 that asymmetry is what the failure detector reads.
+
+A registry task that returns a *generator* is a streaming task: over HTTP
+its chunks cross the wire incrementally as crc-checked frames in a chunked
+response body (docs/streaming.md §5); in-process the generator itself is
+handed to the caller. Either way the consumer sees chunks as they are
+produced, never a materialized batch.
 """
+
 from __future__ import annotations
 
+import inspect
 import threading
 import time
 import traceback
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Callable, Dict, List, Mapping, Optional
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional
 
-from repro.wire import canonical_bytes, decode_payload, encode_payload
+from repro.wire import (
+    PayloadDecodeError,
+    canonical_bytes,
+    decode_payload,
+    encode_frame,
+    encode_payload,
+    read_frames,
+)
 
 from .context import Context
 from .heartbeat import HeartbeatServer
 
-__all__ = ["TaskRegistry", "WorkerServer", "WorkerClient", "InProcWorker",
-           "FlakyWorker", "Middleware"]
+__all__ = [
+    "TaskRegistry",
+    "WorkerServer",
+    "WorkerClient",
+    "InProcWorker",
+    "FlakyWorker",
+    "Middleware",
+    "WorkerStreamError",
+    "STREAM_CONTENT_TYPE",
+]
 
 Middleware = Callable[[str, Mapping[str, Any]], Optional[str]]
 # middleware(task_name, meta) -> None (pass) or str (rejection reason)
+
+STREAM_CONTENT_TYPE = "application/x-serpytor-stream"
+
+
+class WorkerStreamError(RuntimeError):
+    """A worker-side task failure reported mid-stream (via an error frame)."""
 
 
 class TaskRegistry:
@@ -64,9 +93,15 @@ class _WorkerState:
         self.lock = threading.Lock()
 
 
-def _execute(registry: TaskRegistry, middleware: List[Middleware], state: _WorkerState,
-             task_name: str, ctx: Context, inputs: Mapping[str, Any],
-             fail_injector: Optional[Callable[[str], None]] = None) -> Dict[str, Any]:
+def _execute(
+    registry: TaskRegistry,
+    middleware: List[Middleware],
+    state: _WorkerState,
+    task_name: str,
+    ctx: Context,
+    inputs: Mapping[str, Any],
+    fail_injector: Optional[Callable[[str], None]] = None,
+) -> Dict[str, Any]:
     for mw in middleware:
         reason = mw(task_name, {"inputs": sorted(inputs)})
         if reason is not None:
@@ -79,14 +114,30 @@ def _execute(registry: TaskRegistry, middleware: List[Middleware], state: _Worke
             fail_injector(task_name)  # test hook: raise to simulate app error
         fn = registry.get(task_name)
         out = fn(ctx, **dict(inputs))
+        if inspect.isgenerator(out):
+            # a stream-source task: the body has not run yet — chunks are
+            # produced as the caller (transport) iterates, so accounting
+            # (completed/failed) is settled by the transport at stream end,
+            # not here. The chunk seq numbering starts at the durable-resume
+            # offset the caller sent.
+            return {
+                "status": "stream",
+                "stream": out,
+                "start": int(dict(inputs).get("start", 0) or 0),
+                "wall_s": time.time() - t0,
+            }
         with state.lock:
             state.completed += 1
         return {"status": "ok", "output": out, "wall_s": time.time() - t0}
     except Exception as exc:  # application-level failure: report, stay alive
         with state.lock:
             state.failed += 1
-        return {"status": "error", "error": f"{type(exc).__name__}: {exc}",
-                "traceback": traceback.format_exc(), "wall_s": time.time() - t0}
+        return {
+            "status": "error",
+            "error": f"{type(exc).__name__}: {exc}",
+            "traceback": traceback.format_exc(),
+            "wall_s": time.time() - t0,
+        }
     finally:
         with state.lock:
             state.busy -= 1
@@ -95,15 +146,19 @@ def _execute(registry: TaskRegistry, middleware: List[Middleware], state: _Worke
 class InProcWorker:
     """Zero-transport worker — the unit-test and single-process fast path."""
 
-    def __init__(self, name: str, registry: TaskRegistry,
-                 middleware: Optional[List[Middleware]] = None):
+    def __init__(
+        self,
+        name: str,
+        registry: TaskRegistry,
+        middleware: Optional[List[Middleware]] = None,
+    ):
         self.name = name
         self.registry = registry
         self.middleware = list(middleware or [])
         self.state = _WorkerState()
-        self.alive = True            # system liveness (simulated)
-        self.app_alive = True        # application liveness (simulated)
-        self.latency_s = 0.0         # injected slowness for straggler tests
+        self.alive = True  # system liveness (simulated)
+        self.app_alive = True  # application liveness (simulated)
+        self.latency_s = 0.0  # injected slowness for straggler tests
         self.fail_injector: Optional[Callable[[str], None]] = None
 
     # same surface as WorkerClient ------------------------------------------
@@ -114,19 +169,39 @@ class InProcWorker:
 
         with self.state.lock:
             busy = self.state.busy
-        return telemetry({"worker": self.name, "busy": busy,
-                          "completed": self.state.completed})
+        return telemetry(
+            {"worker": self.name, "busy": busy, "completed": self.state.completed}
+        )
 
-    def run_task(self, task_name: str, ctx: Context,
-                 inputs: Mapping[str, Any]) -> Dict[str, Any]:
+    def run_task(
+        self, task_name: str, ctx: Context, inputs: Mapping[str, Any]
+    ) -> Dict[str, Any]:
         if not self.alive:
             raise ConnectionError(f"worker {self.name} is down (system-level)")
         if not self.app_alive:
             raise TimeoutError(f"worker {self.name} application not responding")
         if self.latency_s:
             time.sleep(self.latency_s)
-        return _execute(self.registry, self.middleware, self.state,
-                        task_name, ctx, inputs, self.fail_injector)
+        result = _execute(
+            self.registry, self.middleware, self.state, task_name, ctx, inputs,
+            self.fail_injector,
+        )
+        if result.get("status") == "stream":
+            # zero-transport: the generator body runs on the CONSUMER's
+            # thread, so settle completed/failed accounting at stream end
+            result["stream"] = self._track_stream(result["stream"])
+        return result
+
+    def _track_stream(self, gen: Any):
+        try:
+            yield from gen
+        except Exception:
+            with self.state.lock:
+                self.state.failed += 1
+            raise
+        else:
+            with self.state.lock:
+                self.state.completed += 1
 
 
 class FlakyWorker(InProcWorker):
@@ -147,9 +222,16 @@ class FlakyWorker(InProcWorker):
     which is the scenario requeue-on-eviction must survive.
     """
 
-    def __init__(self, name: str, registry: TaskRegistry, *,
-                 kill_after_starts: Optional[int] = None, mode: str = "drop",
-                 hang_timeout_s: float = 30.0, **kw):
+    def __init__(
+        self,
+        name: str,
+        registry: TaskRegistry,
+        *,
+        kill_after_starts: Optional[int] = None,
+        mode: str = "drop",
+        hang_timeout_s: float = 30.0,
+        **kw,
+    ):
         assert mode in ("drop", "hang")
         super().__init__(name, registry, **kw)
         self.kill_after_starts = kill_after_starts
@@ -166,19 +248,21 @@ class FlakyWorker(InProcWorker):
         """Unblock any calls parked by ``hang`` mode (test teardown hook)."""
         self._released.set()
 
-    def run_task(self, task_name: str, ctx: Context,
-                 inputs: Mapping[str, Any]) -> Dict[str, Any]:
+    def run_task(
+        self, task_name: str, ctx: Context, inputs: Mapping[str, Any]
+    ) -> Dict[str, Any]:
         with self.state.lock:
             self.starts += 1
-            armed = (self.kill_after_starts is not None
-                     and self.starts >= self.kill_after_starts)
+            armed = (
+                self.kill_after_starts is not None
+                and self.starts >= self.kill_after_starts
+            )
         if armed:
             self.kill()
         if not self.alive:
             if self.mode == "hang":
                 self._released.wait(self.hang_timeout_s)
-            raise ConnectionError(
-                f"worker {self.name} died mid-task ({task_name})")
+            raise ConnectionError(f"worker {self.name} died mid-task ({task_name})")
         return super().run_task(task_name, ctx, inputs)
 
 
@@ -194,16 +278,69 @@ class _AppHandler(BaseHTTPRequestHandler):
         try:
             req = decode_payload(body)
             ctx = Context.from_wire(req["context"])
-            result = _execute(self.server.registry, self.server.middleware,  # type: ignore[attr-defined]
-                              self.server.state, req["task"], ctx, req["inputs"])  # type: ignore[attr-defined]
+            result = _execute(
+                self.server.registry,  # type: ignore[attr-defined]
+                self.server.middleware,  # type: ignore[attr-defined]
+                self.server.state,  # type: ignore[attr-defined]
+                req["task"],
+                ctx,
+                req["inputs"],
+            )
         except Exception as exc:  # malformed request
             result = {"status": "error", "error": str(exc)}
+        if result.get("status") == "stream":
+            self._send_stream(result)
+            return
         out = encode_payload(result)
         self.send_response(200)
         self.send_header("Content-Type", "application/x-msgpack-zstd")
         self.send_header("Content-Length", str(len(out)))
         self.end_headers()
         self.wfile.write(out)
+
+    def _send_stream(self, result: Dict[str, Any]) -> None:
+        """Incremental chunk transport: one wire frame per produced chunk.
+
+        HTTP/1.1 chunked transfer-encoding carries self-delimiting frames
+        (docs/streaming.md §5): ``{"s": seq, "c": chunk}`` per chunk, a
+        terminal ``{"eos": n}``, or ``{"err": msg}`` if the task body fails
+        mid-stream — the consumer sees a typed failure, never a silent
+        truncation (a torn connection is detected by the missing EOS frame).
+        """
+        self.send_response(200)
+        self.send_header("Content-Type", STREAM_CONTENT_TYPE)
+        self.send_header("Transfer-Encoding", "chunked")
+        self.end_headers()
+
+        def emit(frame: bytes) -> None:
+            self.wfile.write(f"{len(frame):X}\r\n".encode() + frame + b"\r\n")
+            self.wfile.flush()
+
+        seq = int(result.get("start", 0) or 0)
+        state = self.server.state  # type: ignore[attr-defined]
+        with state.lock:
+            state.busy += 1  # the task body runs HERE, not in _execute
+        try:
+            for chunk in result["stream"]:
+                emit(encode_frame({"s": seq, "c": chunk}))
+                seq += 1
+            emit(encode_frame({"eos": seq}))
+            with state.lock:
+                state.completed += 1
+        except Exception as exc:  # mid-stream task failure: typed error frame
+            with state.lock:
+                state.failed += 1
+            try:
+                emit(encode_frame({"err": f"{type(exc).__name__}: {exc}"}))
+            except Exception:
+                pass  # consumer already gone; nothing left to tell it
+        finally:
+            with state.lock:
+                state.busy -= 1
+        try:
+            self.wfile.write(b"0\r\n\r\n")  # terminate the chunked body
+        except Exception:
+            pass
 
     def do_GET(self) -> None:  # noqa: N802
         if self.path.rstrip("/") == "/tasks":
@@ -222,8 +359,14 @@ class _AppHandler(BaseHTTPRequestHandler):
 class WorkerServer:
     """Application server + separate heartbeat server (two ports, §3.2)."""
 
-    def __init__(self, name: str, registry: TaskRegistry, host: str = "127.0.0.1",
-                 port: int = 0, middleware: Optional[List[Middleware]] = None):
+    def __init__(
+        self,
+        name: str,
+        registry: TaskRegistry,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        middleware: Optional[List[Middleware]] = None,
+    ):
         self.name = name
         self.registry = registry
         self.state = _WorkerState()
@@ -238,8 +381,9 @@ class WorkerServer:
 
     def start(self) -> "WorkerServer":
         self.heartbeat_server.start()
-        self._thread = threading.Thread(target=self._httpd.serve_forever,
-                                        name=f"worker:{self.name}", daemon=True)
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name=f"worker:{self.name}", daemon=True
+        )
         self._thread.start()
         return self
 
@@ -269,8 +413,9 @@ class WorkerServer:
 class WorkerClient:
     """HTTP client with the same surface as InProcWorker."""
 
-    def __init__(self, name: str, address: str, heartbeat_address: str,
-                 timeout: float = 30.0):
+    def __init__(
+        self, name: str, address: str, heartbeat_address: str, timeout: float = 30.0
+    ):
         self.name = name
         self.address = address
         self.heartbeat_address = heartbeat_address
@@ -281,14 +426,53 @@ class WorkerClient:
 
         return check_heartbeat(self.heartbeat_address, timeout=min(2.0, self.timeout))
 
-    def run_task(self, task_name: str, ctx: Context,
-                 inputs: Mapping[str, Any]) -> Dict[str, Any]:
-        body = encode_payload({"task": task_name, "context": ctx.to_wire(),
-                               "inputs": dict(inputs)})
-        req = urllib.request.Request(self.address.rstrip("/") + "/task", data=body,
-                                     method="POST")
+    def run_task(
+        self, task_name: str, ctx: Context, inputs: Mapping[str, Any]
+    ) -> Dict[str, Any]:
+        body = encode_payload(
+            {"task": task_name, "context": ctx.to_wire(), "inputs": dict(inputs)}
+        )
+        req = urllib.request.Request(
+            self.address.rstrip("/") + "/task", data=body, method="POST"
+        )
         try:
-            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
-                return decode_payload(resp.read())
+            resp = urllib.request.urlopen(req, timeout=self.timeout)
         except Exception as exc:
             raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+        if resp.headers.get("Content-Type", "") == STREAM_CONTENT_TYPE:
+            # incremental chunk stream: hand back a live frame iterator —
+            # the response stays open and is closed when the stream ends
+            return {"status": "stream", "stream": _stream_values(resp, self.name)}
+        try:
+            raw = resp.read()
+        except Exception as exc:
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+        finally:
+            resp.close()
+        # a transport that answered but with undecodable bytes is a TYPED
+        # failure (PayloadDecodeError) — the gateway retries it elsewhere
+        return decode_payload(raw)
+
+
+def _stream_values(resp: Any, worker_name: str) -> Iterator[Any]:
+    """Decode chunk frames off an open HTTP response, yielding chunk values.
+
+    Ends at the EOS frame; a worker-side failure frame raises
+    :class:`WorkerStreamError`; a connection that dies between frames
+    raises :class:`~repro.wire.PayloadDecodeError` (torn stream) so the
+    consumer can resume from its last committed offset.
+    """
+    try:
+        for frame in read_frames(resp):
+            if "err" in frame:
+                raise WorkerStreamError(
+                    f"worker {worker_name} failed mid-stream: {frame['err']}"
+                )
+            if "eos" in frame:
+                return
+            yield frame["c"]
+        raise PayloadDecodeError(
+            f"stream from worker {worker_name} ended without an EOS frame"
+        )
+    finally:
+        resp.close()

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.stream import Channel
 from repro.wire import payload_digest
 
 __all__ = ["Request", "Generation", "ContinuousBatcher"]
@@ -94,6 +95,7 @@ class ContinuousBatcher:
         self._slots = [_Slot() for _ in range(slots)]
         self._next_token = np.zeros((slots,), np.int32)
         self._done: Dict[str, Generation] = {}
+        self._streams: Dict[str, Channel] = {}
         self._lock = threading.Lock()
         self.steps = 0
         self.slot_steps_busy = 0
@@ -101,6 +103,23 @@ class ContinuousBatcher:
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         self._queue.put(req)
+
+    def submit_stream(self, req: Request, capacity: int = 64) -> Channel:
+        """Submit a request whose tokens stream out as they decode.
+
+        Returns a bounded :class:`repro.stream.Channel` of ``(seq, token)``
+        pairs: the first token lands at prefill time, one more per decode
+        step, and the channel closes when the request finishes — consumers
+        iterate instead of waiting for the whole generation. Backpressure
+        is real: a consumer more than ``capacity`` tokens behind blocks the
+        engine step loop, so size ``capacity`` to cover the consumer's
+        worst stall (or ``max_new_tokens`` to decouple entirely).
+        """
+        ch = Channel(capacity, name=f"tokens:{req.rid}")
+        with self._lock:
+            self._streams[req.rid] = ch
+        self._queue.put(req)
+        return ch
 
     def run_until_drained(self, max_steps: int = 100_000) -> Dict[str, Generation]:
         """Drive the loop until queue + slots are empty (batch-mode serving)."""
@@ -141,6 +160,9 @@ class ContinuousBatcher:
             slot.queued_s = t0 - req.submitted_at
             slot.t_admit = t0
             slot.t_prefill_done = time.time()
+            ch = self._streams.get(req.rid)
+            if ch is not None:
+                ch.put(0, first)  # first token streams out at prefill time
 
     def step(self) -> None:
         """One engine iteration: admit, decode one token for active slots."""
@@ -167,12 +189,18 @@ class ContinuousBatcher:
                     prompt_len=slot.prompt_len, queued_s=slot.queued_s,
                     prefill_s=slot.t_prefill_done - slot.t_admit,
                     decode_s=now - slot.t_prefill_done)
+                ch = self._streams.pop(slot.rid, None)
+                if ch is not None:
+                    ch.close()  # EOS: the consumer's iteration ends
                 self._slots[i] = _Slot()
                 self._next_token[i] = 0
             else:
                 slot.tokens.append(t)
                 slot.produced += 1
                 self._next_token[i] = t
+                ch = self._streams.get(slot.rid)
+                if ch is not None:
+                    ch.put(len(slot.tokens) - 1, t)
 
     def utilization(self) -> float:
         """Mean fraction of slots busy per decode step."""

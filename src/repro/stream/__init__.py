@@ -1,0 +1,49 @@
+"""repro.stream — chunked, pipelined, durable dataflow (docs/streaming.md).
+
+The streaming subsystem lets a graph node be a *stream producer* (a
+generator yielding chunks) whose consumers start on the **first chunk**
+instead of the last: per-chunk ``map`` stages and whole-stream ``reduce``
+stages are wired through bounded, backpressured channels, so a fast
+producer can never buffer more than a channel's capacity ahead of its
+slowest consumer.
+
+Durability is chunk-granular: every chunk is a sequence-numbered,
+digest-chained ``CHUNK_COMMIT`` journal record, streams end with
+``STREAM_EOS``, and a run killed mid-stream replays its committed chunks
+from the journal and resumes the producer from its last committed offset —
+the standalone-journal invariant, extended to unbounded outputs.
+
+Public surface:
+  - :class:`Channel` / :class:`StreamHandle` — bounded backpressured
+    chunk transport with per-subscriber fan-out;
+  - ``Node(stream="source"|"map"|"reduce")`` declarations via
+    :meth:`repro.core.ContextGraph.add_stream` / ``add(..., stream=...)``;
+  - the executors in :mod:`repro.core.executor` pick the declarations up
+    automatically — no separate streaming executor.
+"""
+
+from .channel import Channel, ChannelClosed, StreamHandle
+from .runtime import (
+    ChunkLog,
+    StreamCancelled,
+    StreamPlan,
+    plan_streams,
+    reduce_iter,
+    run_map_stage,
+    run_source_stage,
+    stream_input_marker,
+)
+
+__all__ = [
+    "Channel",
+    "ChannelClosed",
+    "StreamHandle",
+    "ChunkLog",
+    "StreamCancelled",
+    "StreamPlan",
+    "plan_streams",
+    "reduce_iter",
+    "run_map_stage",
+    "run_source_stage",
+    "stream_input_marker",
+]

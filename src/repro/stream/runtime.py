@@ -1,0 +1,343 @@
+"""Durable stream-stage runtime shared by both executors.
+
+A *stream stage* (a ``source`` or ``map`` node) emits a sequence of chunks;
+this module owns everything about that emission that must be identical
+between :class:`~repro.core.executor.LocalExecutor` and
+:class:`~repro.core.executor.ClusterExecutor`:
+
+  - **chunk-granular durability** — every chunk is journaled as a
+    ``CHUNK_COMMIT`` (sequence-numbered, digest-chained) *before* it is
+    broadcast downstream, and the stream ends with ``STREAM_EOS`` plus a
+    summary ``NODE_COMMIT`` so the standalone-journal invariant extends to
+    streams (docs/streaming.md §4);
+  - **replay** — chunks already committed by an earlier (possibly killed)
+    run are re-emitted from the journal with zero producer re-execution;
+  - **resume** — a partially-committed producer restarts from its last
+    committed offset (``start=next_seq``), and a map stage skips upstream
+    chunks its committed prefix already covers;
+  - **failure containment** — a failing stage closes its downstream
+    channels with the error (consumers re-raise) and a run-level cancel
+    event stops sibling stages from committing past a doomed run.
+
+The executors differ only in *how a stage's function is invoked* (in
+process vs. through the Gateway); they inject that as callables.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from repro.wire import DIGEST_HEX_LEN, payload_digest
+
+from .channel import Channel, StreamHandle
+
+__all__ = [
+    "StreamCancelled",
+    "StreamPlan",
+    "plan_streams",
+    "stream_input_marker",
+    "ChunkLog",
+    "run_source_stage",
+    "run_map_stage",
+    "reduce_iter",
+]
+
+
+class StreamCancelled(RuntimeError):
+    """The run failed elsewhere; this stage stopped without committing more."""
+
+
+def chain_digest(prev_chain: str, output_digest: str) -> str:
+    """Digest-chain step: each chunk's chain head commits to all its
+    predecessors, so a journal's chunk prefix is tamper-evident."""
+    h = hashlib.sha256()
+    h.update(prev_chain.encode())
+    h.update(b":")
+    h.update(output_digest.encode())
+    return h.hexdigest()[:DIGEST_HEX_LEN]
+
+
+def stream_input_marker(dep_gid: str, up_ctx_digest: str,
+                        up_input_digest: str) -> Dict[str, Any]:
+    """Deterministic stand-in for a stream-typed input when digesting.
+
+    A consumer's ``input_digest`` cannot hash the stream's *values* (they
+    are unbounded and arrive over time), so the stream input contributes
+    its upstream *identity* — the ``(node, ξ-digest, input-digest)`` triple
+    that names the chunk sequence in the journal. Same upstream identity ⇒
+    same chunk sequence ⇒ replay-safe consumer identity.
+    """
+    return {"__stream__": [dep_gid, up_ctx_digest, up_input_digest]}
+
+
+# ---------------------------------------------------------------------------
+# static stream topology of a scheduled graph
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StreamPlan:
+    """Which exec nodes stream, who feeds whom, and which edges pipeline.
+
+    ``stream_edges`` are the (upstream, consumer) pairs satisfied at
+    upstream *start* (the consumer attaches to a channel); every other edge
+    keeps batch semantics (satisfied at upstream commit).
+    """
+
+    kinds: Dict[str, str] = field(default_factory=dict)
+    stream_dep: Dict[str, str] = field(default_factory=dict)
+    subscribers: Dict[str, List[str]] = field(default_factory=dict)
+    stream_edges: Set[Tuple[str, str]] = field(default_factory=set)
+
+    def is_stage(self, gid: str) -> bool:
+        """True for chunk *emitters* (source/map) — they get a StreamHandle."""
+        return self.kinds.get(gid, "") in ("source", "map")
+
+
+def plan_streams(exec_nodes: Dict[str, Any]) -> StreamPlan:
+    """Derive the stream topology from contracted exec nodes.
+
+    Stream nodes are guaranteed (by ``ContextGraph.contract``) never to be
+    union members, so their group id is their node id.
+    """
+    plan = StreamPlan()
+    for gid, node in exec_nodes.items():
+        plan.kinds[gid] = getattr(node, "stream", "") or ""
+    for gid, node in exec_nodes.items():
+        kind = plan.kinds[gid]
+        if kind not in ("map", "reduce"):
+            continue
+        stream_deps = [d for d in node.deps if plan.is_stage(d)]
+        if len(stream_deps) != 1:
+            raise ValueError(
+                f"stream {kind} node {gid!r} needs exactly one stream-stage "
+                f"dependency, has {len(stream_deps)}"
+            )
+        dep = stream_deps[0]
+        plan.stream_dep[gid] = dep
+        plan.subscribers.setdefault(dep, []).append(gid)
+        plan.stream_edges.add((dep, gid))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# chunk-granular journal interaction
+# ---------------------------------------------------------------------------
+
+
+class ChunkLog:
+    """The durable chunk ledger of ONE stream identity ``(node, ξ, inputs)``.
+
+    Wraps the journal + replay oracle: knows how many chunks are already
+    committed (``next_seq``), the digest-chain head, and whether EOS was
+    reached; commits new chunks and the terminal EOS/NODE_COMMIT pair.
+    Thread-confined to its stage's thread.
+    """
+
+    def __init__(self, journal: Any, replay: Any, node_id: str,
+                 ctx_digest: str, input_digest: str):
+        self.journal = journal
+        self.replay = replay
+        self.node_id = node_id
+        self.ctx_digest = ctx_digest
+        self.input_digest = input_digest
+        self.next_seq, self.chain, self.eos = replay.stream_progress(
+            node_id, ctx_digest, input_digest
+        )
+
+    def replayed_values(self) -> List[Any]:
+        """Payloads of the committed chunk prefix (seq 0..next_seq-1)."""
+        return [
+            rec.payload
+            for rec in self.replay.stream_chunks(
+                self.node_id, self.ctx_digest, self.input_digest
+            )
+        ]
+
+    def commit_chunk(self, value: Any) -> int:
+        """Durably commit the next chunk; returns its sequence number."""
+        from repro.core.durable import JournalRecord
+
+        seq = self.next_seq
+        out_d = payload_digest(value)
+        self.chain = chain_digest(self.chain, out_d)
+        rec = JournalRecord(
+            kind="CHUNK_COMMIT",
+            node_id=self.node_id,
+            context_digest=self.ctx_digest,
+            input_digest=self.input_digest,
+            output_digest=out_d,
+            payload=value,
+            meta={"seq": seq, "chain": self.chain},
+        )
+        if self.journal is not None:
+            self.journal.append(rec)
+        self.replay.record_chunk(rec)
+        self.next_seq = seq + 1
+        return seq
+
+    def commit_eos(self) -> None:
+        """Terminal pair: ``STREAM_EOS`` marker + summary ``NODE_COMMIT``.
+
+        The NODE_COMMIT carries no payload (the chunks ARE the payload,
+        already journaled); its ``meta.stream``/``meta.chain`` let the
+        replay oracle materialize the full sequence from the chunk records.
+        """
+        from repro.core.durable import JournalRecord
+
+        eos = JournalRecord(
+            kind="STREAM_EOS",
+            node_id=self.node_id,
+            context_digest=self.ctx_digest,
+            input_digest=self.input_digest,
+            output_digest=self.chain,
+            meta={"chunks": self.next_seq, "chain": self.chain},
+        )
+        commit = JournalRecord(
+            kind="NODE_COMMIT",
+            node_id=self.node_id,
+            context_digest=self.ctx_digest,
+            input_digest=self.input_digest,
+            output_digest=self.chain,
+            payload=None,
+            meta={"stream": self.next_seq, "chain": self.chain},
+        )
+        if self.journal is not None:
+            self.journal.append(eos)
+            self.journal.append(commit)
+        self.replay.record_eos(eos)
+        self.replay.record(commit)
+        self.eos = True
+
+
+# ---------------------------------------------------------------------------
+# stage loops
+# ---------------------------------------------------------------------------
+
+
+def _check_cancel(cancel: Optional[threading.Event], node_id: str) -> None:
+    if cancel is not None and cancel.is_set():
+        raise StreamCancelled(f"run cancelled; stage {node_id!r} stopping")
+
+
+def run_source_stage(
+    node_id: str,
+    log: ChunkLog,
+    handle: StreamHandle,
+    invoke: Callable[[int], Iterable[Any]],
+    cancel: Optional[threading.Event] = None,
+    retries: int = 0,
+) -> Tuple[List[Any], str]:
+    """Run a producer durably: replay the committed prefix from the journal,
+    then resume the generator from its last committed offset.
+
+    ``invoke(start)`` must return an iterable yielding chunks from index
+    ``start`` on. A mid-stream failure is retried up to ``retries`` times,
+    each retry resuming from the *new* committed offset — chunks that made
+    it to the journal are never asked of the producer again.
+
+    Returns ``(all chunk values, "replayed"|"executed")``.
+    """
+    values = log.replayed_values()
+    try:
+        for seq, value in enumerate(values):
+            _check_cancel(cancel, node_id)
+            handle.put(seq, value)  # re-emit from the journal, not the producer
+        if log.eos:
+            handle.close()
+            return values, "replayed"
+        attempt = 0
+        while True:
+            _check_cancel(cancel, node_id)
+            try:
+                for value in invoke(log.next_seq):
+                    _check_cancel(cancel, node_id)
+                    seq = log.commit_chunk(value)  # durable BEFORE visible
+                    handle.put(seq, value)
+                    values.append(value)
+                break
+            except StreamCancelled:
+                raise
+            except Exception:
+                attempt += 1
+                if attempt > retries:
+                    raise
+        log.commit_eos()
+        handle.close()
+    except BaseException as exc:
+        handle.close(error=exc)
+        raise
+    return values, "executed"
+
+
+def run_map_stage(
+    node_id: str,
+    log: ChunkLog,
+    upstream: Channel,
+    handle: StreamHandle,
+    invoke_chunk: Callable[[int, Any], Any],
+    cancel: Optional[threading.Event] = None,
+    retries: int = 0,
+) -> Tuple[List[Any], str]:
+    """Run a per-chunk mapper durably, pipelined against its producer.
+
+    The committed output prefix is re-emitted from the journal and the
+    corresponding upstream chunks are *consumed and dropped* (they were
+    mapped in a previous life); every fresh upstream chunk is mapped,
+    committed, then broadcast. Output seq k corresponds 1:1 to input seq k.
+    A failing chunk call is retried up to ``retries`` times (per chunk —
+    committed chunks are never at risk).
+    """
+    values = log.replayed_values()
+    try:
+        for seq, value in enumerate(values):
+            _check_cancel(cancel, node_id)
+            handle.put(seq, value)
+        if log.eos:
+            upstream.abandon()  # nothing more needed from the producer
+            handle.close()
+            return values, "replayed"
+        skip = log.next_seq
+        for seq, chunk in upstream:
+            _check_cancel(cancel, node_id)
+            if seq < skip:
+                continue  # our committed prefix already covers this chunk
+            attempt = 0
+            while True:
+                _check_cancel(cancel, node_id)
+                try:
+                    out = invoke_chunk(seq, chunk)
+                    break
+                except StreamCancelled:
+                    raise
+                except Exception:
+                    attempt += 1
+                    if attempt > retries:
+                        raise
+            committed_seq = log.commit_chunk(out)
+            if committed_seq != seq:
+                raise RuntimeError(
+                    f"map {node_id!r} seq misalignment: upstream {seq}, "
+                    f"committed {committed_seq}"
+                )
+            handle.put(seq, out)
+            values.append(out)
+        log.commit_eos()
+        handle.close()
+    except BaseException as exc:
+        upstream.abandon()
+        handle.close(error=exc)
+        raise
+    return values, "executed"
+
+
+def reduce_iter(upstream: Channel,
+                cancel: Optional[threading.Event] = None) -> Iterator[Any]:
+    """Chunk-value iterator handed to a reduce fn (seq numbers stripped)."""
+    for _seq, chunk in upstream:
+        if cancel is not None and cancel.is_set():
+            raise StreamCancelled("run cancelled; reduce stopping")
+        yield chunk

@@ -26,7 +26,8 @@ from .base import Codec, DIGEST_HEX_LEN, normalize, stdlib_canonical
 from .compress import compress, decompress, zstd_available
 from .json_codec import JsonCodec
 from .msgpack_codec import MsgpackCodec
-from .payload import PayloadDecodeError, decode_payload, encode_payload, payload_digest
+from .payload import (PayloadDecodeError, decode_payload, encode_frame,
+                      encode_payload, payload_digest, read_frames)
 
 __all__ = [
     "Codec", "JsonCodec", "MsgpackCodec", "DIGEST_HEX_LEN",
@@ -34,6 +35,7 @@ __all__ = [
     "available_codecs", "get_codec", "default_codec", "set_default_codec",
     "canonical_bytes", "canonical_digest", "from_canonical",
     "PayloadDecodeError", "encode_payload", "decode_payload", "payload_digest",
+    "encode_frame", "read_frames",
     "compress", "decompress", "zstd_available",
 ]
 

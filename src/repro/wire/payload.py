@@ -10,8 +10,10 @@ it is compression- and codec-independent by construction.
 """
 from __future__ import annotations
 
+import binascii
 import hashlib
-from typing import Any, Mapping
+import struct
+from typing import Any, BinaryIO, Iterator, Mapping
 
 import msgpack
 
@@ -19,7 +21,15 @@ from .base import DIGEST_HEX_LEN
 from .compress import compress, decompress
 from .msgpack_codec import pack_default, unpack_ext
 
-__all__ = ["PayloadDecodeError", "encode_payload", "decode_payload", "payload_digest"]
+__all__ = [
+    "PayloadDecodeError",
+    "encode_payload",
+    "decode_payload",
+    "payload_digest",
+    "encode_frame",
+    "read_frames",
+    "FRAME_HEADER",
+]
 
 
 class PayloadDecodeError(ValueError):
@@ -47,6 +57,49 @@ def decode_payload(buf: bytes) -> Any:
         raise  # actionable "install zstandard" from repro.wire.compress
     except Exception as exc:
         raise PayloadDecodeError(f"undecodable payload frame: {exc}") from exc
+
+
+# -- chunk framing (streaming transport) ------------------------------------
+#
+# A *frame* is one length-prefixed, checksummed payload on a byte stream —
+# the same ``(length: u32, crc32: u32, body)`` layout the journal uses
+# (docs/journal-format.md §1), so a stream of frames is torn-tail-safe at
+# frame granularity. Frames carry stream-protocol objects (chunk / EOS /
+# error maps); the framing itself is payload-agnostic.
+
+FRAME_HEADER = struct.Struct("<II")  # (length, crc32) — journal-identical
+
+
+def encode_frame(obj: Any) -> bytes:
+    """One self-delimiting frame: header + tagged-compressed payload body."""
+    body = encode_payload(obj)
+    return FRAME_HEADER.pack(len(body), binascii.crc32(body)) + body
+
+
+def read_frames(fp: BinaryIO) -> Iterator[Any]:
+    """Decode frames off a blocking byte stream until EOF.
+
+    A short read mid-frame (the producer died between frames being flushed)
+    or a crc mismatch raises :class:`PayloadDecodeError` — a torn stream is
+    *detected*, never silently truncated, because the consumer must know
+    the difference between EOS and a lost producer.
+    """
+    while True:
+        header = fp.read(FRAME_HEADER.size)
+        if not header:
+            return
+        if len(header) < FRAME_HEADER.size:
+            raise PayloadDecodeError("torn stream: partial frame header")
+        length, crc = FRAME_HEADER.unpack(header)
+        body = b""
+        while len(body) < length:
+            piece = fp.read(length - len(body))
+            if not piece:
+                raise PayloadDecodeError("torn stream: partial frame body")
+            body += piece
+        if binascii.crc32(body) != crc:
+            raise PayloadDecodeError("corrupt stream frame (crc mismatch)")
+        yield decode_payload(body)
 
 
 def payload_digest(obj: Any) -> str:

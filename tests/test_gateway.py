@@ -1,11 +1,15 @@
 """Gateway (§3.3): allocation algorithms, silo queue, failure rerouting."""
+import threading
 import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import pytest
 
-from repro.core import (AllocationError, Context, FlakyWorker, Gateway, InProcWorker,
-                        TaskRegistry, WorkerHandle, context_affinity, least_loaded,
+from repro.core import (AllocationError, Context, FlakyWorker, Gateway,
+                        HeartbeatServer, InProcWorker, TaskRegistry, WorkerClient,
+                        WorkerHandle, WorkerServer, context_affinity, least_loaded,
                         power_of_two, round_robin)
+from repro.wire import PayloadDecodeError
 
 
 def _cluster(n=4, fail=None):
@@ -157,6 +161,101 @@ def test_cluster_context_snapshot():
         ctx = gw.cluster_context()
         assert ctx.get("worker/w0/live") in (True, False)
         assert "worker/w1/live" in ctx.keys()
+
+
+def test_stats_snapshot_telemetry():
+    """Gateway.stats(): per-worker probe latency, inflight/queue depths —
+    the groundwork signals for stream-aware allocation."""
+    reg, workers = _cluster(2)
+    with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+        futs = gw.map("add", [{"a": i, "b": 1} for i in range(6)])
+        [f.result(timeout=5) for f in futs]
+        snap = gw.stats()
+    assert set(snap["workers"]) == {"w0", "w1"}
+    for w in snap["workers"].values():
+        assert w["live"] is True and w["app_live"] is True
+        assert isinstance(w["inflight"], int) and w["inflight"] >= 0
+        assert w["probe_latency_s"] >= 0.0  # stamped even for in-proc workers
+        assert w["hb_misses"] == 0
+    assert sum(w["completed"] for w in snap["workers"].values()) >= 6
+    assert snap["queue_depth"] == 0 and snap["silo_depth"] == 0
+    assert snap["live_workers"] == 2
+    assert snap["metrics"]["scheduled"] >= 6
+    assert snap["mean_alloc_us"] >= 0.0
+
+
+class _CorruptHandler(BaseHTTPRequestHandler):
+    """An application server that answers /task with undecodable bytes."""
+
+    def do_POST(self):  # noqa: N802
+        body = b"\xde\xad\xbe\xef not a payload frame"
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-msgpack-zstd")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):
+        pass
+
+
+class _CorruptWorker:
+    """A real HTTP worker (live heartbeat) whose responses are corrupt."""
+
+    def __init__(self):
+        self._httpd = ThreadingHTTPServer(("127.0.0.1", 0), _CorruptHandler)
+        threading.Thread(target=self._httpd.serve_forever, daemon=True).start()
+        self.heartbeat_server = HeartbeatServer().start()
+        host, port = self._httpd.server_address
+        self.client = WorkerClient("corrupt", f"http://{host}:{port}",
+                                   self.heartbeat_server.address, timeout=5.0)
+
+    def stop(self):
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self.heartbeat_server.stop()
+
+
+def test_corrupt_http_payload_surfaces_typed_error():
+    """End to end: an HTTP worker returning undecodable bytes surfaces
+    PayloadDecodeError (the typed corruption signal), not a generic timeout."""
+    corrupt = _CorruptWorker()
+    try:
+        with Gateway([corrupt.client], heartbeat_interval_s=0.1) as gw:
+            fut = gw.submit("add", inputs={"a": 1, "b": 1}, max_attempts=2)
+            with pytest.raises(PayloadDecodeError):
+                fut.result(timeout=10)
+            assert gw.metrics["corrupt"] >= 1
+    finally:
+        corrupt.stop()
+
+
+def test_corrupt_worker_retried_on_healthy_worker():
+    """The gateway quarantines the corrupt worker (app-level) and requeues
+    the request on a healthy HTTP worker — the caller never sees the error."""
+    reg = TaskRegistry()
+    reg.register("add", lambda ctx, a, b: a + b)
+    corrupt = _CorruptWorker()
+    try:
+        with WorkerServer("healthy", reg) as ws:
+            healthy = WorkerClient("healthy", ws.address,
+                                   ws.heartbeat_server.address)
+            # long heartbeat interval: the app-level quarantine must not be
+            # reset by a probe mid-test (probes self-heal app_live)
+            with Gateway([corrupt.client, healthy],
+                         allocation=("round_robin",),
+                         heartbeat_interval_s=5.0) as gw:
+                futs = gw.map("add", [{"a": i, "b": i} for i in range(6)])
+                assert [f.result(timeout=15) for f in futs] == \
+                    [2 * i for i in range(6)]
+                # at least one request hit the corrupt worker and was retried
+                assert gw.metrics["corrupt"] >= 1
+                assert gw.metrics["requeued"] >= 1
+                corrupt_handle = next(h for h in gw.handles
+                                      if h.name == "corrupt")
+                assert corrupt_handle.app_live is False  # quarantined
+    finally:
+        corrupt.stop()
 
 
 def test_allocation_fast():
