@@ -81,20 +81,21 @@ class CheckpointStore:
         """Returns the journal ref 'tag@digest'. async_: returns immediately
         after fetching arrays to host; IO happens on a writer thread."""
         flat = {k: np.asarray(v) for k, v in _flatten(tree)}
+        digest = self._digest(flat)  # hash the tensors exactly once per save
         if async_:
             self.wait()  # one in-flight save at a time
 
             def work():
                 try:
-                    self._write(tag, flat, tree, extra_meta)
+                    self._write(tag, flat, tree, extra_meta, digest)
                 except BaseException as e:  # surfaced on next wait()
                     self._async_err = e
 
             self._async_thread = threading.Thread(target=work, daemon=True)
             self._async_thread.start()
         else:
-            self._write(tag, flat, tree, extra_meta)
-        return f"{tag}@{self._digest(flat)}"
+            self._write(tag, flat, tree, extra_meta, digest)
+        return f"{tag}@{digest}"
 
     def wait(self) -> None:
         if self._async_thread is not None:
@@ -106,16 +107,25 @@ class CheckpointStore:
 
     @staticmethod
     def _digest(flat: Dict[str, np.ndarray]) -> str:
+        """Content-true digest: keys, dtypes, shapes AND the tensor bytes.
+
+        The digest is the cache/journal contract for snapshots — a CKPT
+        record's ref must be falsifiable against what the store actually
+        holds. Hashing only the structure (the pre-fix behaviour) made
+        ``resolve()`` blind to corruption and tag swaps with matching shapes.
+        """
         h = hashlib.sha256()
         for k in sorted(flat):
             a = flat[k]
             h.update(k.encode())
             h.update(str(a.dtype).encode())
             h.update(str(a.shape).encode())
+            h.update(np.ascontiguousarray(a).tobytes())
         return h.hexdigest()[:16]
 
     def _write(self, tag: str, flat: Dict[str, np.ndarray], tree: Any,
-               extra_meta: Optional[dict]) -> None:
+               extra_meta: Optional[dict],
+               digest: Optional[str] = None) -> None:
         final = os.path.join(self.root, tag)
         tmp = final + f".tmp.{self.host_index}"
         os.makedirs(tmp, exist_ok=True)
@@ -129,7 +139,8 @@ class CheckpointStore:
         atomic_write_bytes(shard_path, comp)
         manifest = {
             "tag": tag,
-            "digest": self._digest(flat),
+            "digest": digest if digest is not None else self._digest(flat),
+            "digest_kind": "content",  # keys+dtypes+shapes+tensor bytes
             "num_hosts": self.num_hosts,
             "written_by": self.host_index,
             "time": time.time(),
@@ -163,17 +174,27 @@ class CheckpointStore:
                 out.append(name)
         return out
 
-    def latest(self) -> Optional[str]:
+    def latest(self, companions: Tuple[str, ...] = ()) -> Optional[str]:
+        """Newest base tag, optionally requiring its companion tags.
+
+        ``companions`` are tag suffixes (e.g. ``("-opt",)``) that must also
+        exist for a base tag to count: a crash between the (sync) params
+        save and the (async) optimizer save leaves a half-published pair,
+        and recovery must fall back to the newest *complete* one instead of
+        failing forever on the missing shard.
+        """
         tags = [t for t in self.list() if "-" not in t]
+        if companions:
+            have = set(self.list())
+            tags = [t for t in tags if all(t + c in have for c in companions)]
         return tags[-1] if tags else None
 
     def manifest(self, tag: str) -> dict:
         with open(os.path.join(self.root, tag, "manifest.json"), "rb") as fh:
             return JsonCodec().decode(fh.read())
 
-    def restore(self, tag: str, like: Any, dtype_map: Optional[Callable] = None
-                ) -> Any:
-        """Restore into the structure of ``like`` (shapes validated)."""
+    def _load_flat(self, tag: str) -> Dict[str, np.ndarray]:
+        """Load this host's full shard file as a flat {path: array} map."""
         path = os.path.join(self.root, tag,
                             f"shard-{self.host_index}.npz.zst")
         with open(path, "rb") as fh:
@@ -181,7 +202,16 @@ class CheckpointStore:
         import io
 
         npz = np.load(io.BytesIO(raw))
-        flat = {k.replace("|", "/"): npz[k] for k in npz.files}
+        return {k.replace("|", "/"): npz[k] for k in npz.files}
+
+    def restore(self, tag: str, like: Any, dtype_map: Optional[Callable] = None
+                ) -> Any:
+        """Restore into the structure of ``like`` (shapes validated)."""
+        return self._build(self._load_flat(tag), tag, like)
+
+    @staticmethod
+    def _build(flat: Dict[str, np.ndarray], tag: str, like: Any) -> Any:
+        """Validate a loaded flat map against ``like`` and unflatten it."""
         like_flat = dict(_flatten(like))
         missing = set(like_flat) - set(flat)
         if missing:
@@ -194,9 +224,30 @@ class CheckpointStore:
         return _unflatten(flat, like)
 
     def resolve(self, ref: str, like: Any) -> Any:
-        """Resolve a journal ref 'tag@digest' (digest verified)."""
+        """Resolve a journal ref 'tag@digest' with content verification.
+
+        Two checks, both against the ref's digest: the manifest's recorded
+        digest (catches a tag swapped for a different checkpoint) and a
+        digest recomputed from the restored bytes (catches on-disk
+        corruption or tampering the manifest cannot know about).
+
+        Checkpoints written before digests became content-true (manifest
+        lacks ``digest_kind: content``) get only the manifest-level check —
+        their structure-only digests can never match a recomputed content
+        hash, and wedging an intact legacy run_dir behind a false
+        "tampered" error would be worse than the old blindness.
+        """
         tag, _, digest = ref.partition("@")
         man = self.manifest(tag)
         if digest and man["digest"] != digest:
             raise ValueError(f"checkpoint digest mismatch for {ref}")
-        return self.restore(tag, like)
+        flat = self._load_flat(tag)  # loaded once: verified AND restored from
+        if digest and man.get("digest_kind") == "content":
+            # recompute over the FULL stored shard, not the keys ``like``
+            # happens to select — partial restores must not mask tampering
+            got = self._digest(flat)
+            if got != digest:
+                raise ValueError(
+                    f"checkpoint content mismatch for {ref}: stored bytes "
+                    f"hash to {got} (corrupted or tampered shard)")
+        return self._build(flat, tag, like)

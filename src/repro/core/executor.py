@@ -47,6 +47,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.cache import CacheKey, CachedResult, ResultCache
+from repro.wire import unwrap_digested
 from repro.stream import (
     ChannelClosed,
     ChunkLog,
@@ -142,21 +143,40 @@ class _BaseExecutor:
         output: Any,
         attempt: int,
         meta: Optional[dict] = None,
+        volatile: bool = False,
+        expected: Optional[str] = None,
     ) -> None:
+        """Journal one NODE_COMMIT and index it for replay.
+
+        ``volatile`` commits carry only the output *digest* (``payload=None``
+        — tensors never enter the journal); when ``expected`` is set (the
+        digest a previous incarnation committed for the same identity), a
+        disagreeing re-execution is surfaced as a hard non-determinism error
+        before anything downstream can consume the divergent value.
+        """
         payload, ref = output, ""
-        if self._spill_put is not None:
+        if self._spill_put is not None and not volatile:
             try:
                 approx = payload_digest(output)  # also probes serializability
                 del approx
             except Exception:
                 ref = self._spill_put(node_id, output)
                 payload = None
+        out_digest = payload_digest(output) if ref == "" else ref
+        if volatile:
+            if expected is not None and expected != out_digest:
+                raise RuntimeError(
+                    f"non-deterministic re-execution at node {node_id!r}: "
+                    f"journal={expected} recomputed={out_digest}"
+                )
+            payload = None
+            meta = {**(meta or {}), "volatile": True}
         rec = JournalRecord(
             kind="NODE_COMMIT",
             node_id=node_id,
             context_digest=ctx_digest,
             input_digest=in_digest,
-            output_digest=payload_digest(output) if ref == "" else ref,
+            output_digest=out_digest,
             payload=payload if ref == "" else None,
             ref=ref,
             attempt=attempt,
@@ -191,9 +211,10 @@ class _BaseExecutor:
         """Content-addressed key for this (fn, inputs, ξ) — None when uncached.
 
         Stream nodes never use the cross-run cache (chunk-granular replay
-        supersedes it — docs/streaming.md §4.3), so they get None too.
+        supersedes it — docs/streaming.md §4.3); volatile nodes never do
+        either (their outputs are transient tensors kept out of every store).
         """
-        if self.cache is None or getattr(node, "stream", ""):
+        if self.cache is None or getattr(node, "stream", "") or getattr(node, "volatile", False):
             return None
         return CacheKey(fn=node.fn_digest(), inputs=in_digest, context=ctx_digest)
 
@@ -274,12 +295,17 @@ class _BaseExecutor:
         """Replay oracle: the committed output for (node, ξ, inputs), if any.
 
         Stream-node commits carry no payload; their value materializes from
-        the journaled chunk sequence (docs/streaming.md §4.2).
+        the journaled chunk sequence (docs/streaming.md §4.2). Volatile
+        commits also carry no payload — they answer with a *verify-only*
+        hit (``reexecute=True``): the caller must re-execute the node and
+        check the fresh digest against ``expected``.
         """
         rec = self.replay.lookup(node_id, ctx_digest, in_digest)
         if rec is None:
             return None
         facts = rec.meta.get("facts")
+        if rec.meta.get("volatile"):
+            return _Found(None, facts, reexecute=True, expected=rec.output_digest)
         if rec.meta.get("stream") is not None:
             chunks = self.replay.stream_chunks(node_id, ctx_digest, in_digest)
             return _Found([c.payload for c in chunks], facts)
@@ -350,6 +376,8 @@ class _BaseExecutor:
 class _Found:
     value: Any
     facts: Optional[Mapping[str, Any]] = None  # journaled WithContext facts
+    reexecute: bool = False  # volatile hit: no payload — run again and verify
+    expected: Optional[str] = None  # the digest the re-execution must match
 
 
 def _inject_inputs(
@@ -660,7 +688,7 @@ class LocalExecutor(_BaseExecutor):
                 handle,
                 self._source_invoker(node, ctx, fn_inputs),
                 cancel,
-                retries=node.retries,
+                retries=node.retry_limit(0),
             )
         else:
             values, status = run_map_stage(
@@ -670,7 +698,7 @@ class LocalExecutor(_BaseExecutor):
                 handle,
                 self._map_invoker(node, ctx, fn_inputs, stream_kwarg),
                 cancel,
-                retries=node.retries,
+                retries=node.retry_limit(0),
             )
         return values, ctx, status
 
@@ -685,12 +713,16 @@ class LocalExecutor(_BaseExecutor):
         ctx_d = ctx.digest()
         in_d = payload_digest(inputs)
         hit = self._lookup(node.id, ctx_d, in_d)
+        expected: Optional[str] = None
         if hit is not None:
-            if hit.facts:
+            if hit.reexecute:
+                expected = hit.expected  # volatile: run again, verify digest
+            elif hit.facts:
                 # re-emit journaled context facts so downstream ξ digests
                 # match the original run exactly (replay completeness)
                 return WithContext(hit.value, hit.facts), "replayed"
-            return hit.value, "replayed"
+            else:
+                return hit.value, "replayed"
         key = self._cache_key(node, ctx_d, in_d)
         ent = self._cache_probe(node.id, key, ctx_d, in_d)
         if ent is not None:
@@ -699,6 +731,8 @@ class LocalExecutor(_BaseExecutor):
             return ent.value, "cached"
         if node.fn is None:
             raise ValueError(f"node {node.id!r} has no callable")
+        fn_inputs = unwrap_digested(dict(inputs))
+        retry_limit = node.retry_limit(self.retry.max_attempts - 1)
         attempt = 0
         while True:
             try:
@@ -712,11 +746,11 @@ class LocalExecutor(_BaseExecutor):
                             attempt=attempt,
                         )
                     )
-                value = node.fn(ctx, **inputs)
+                value = node.fn(ctx, **fn_inputs)
                 break
             except Exception:
                 attempt += 1
-                if attempt > max(node.retries, self.retry.max_attempts - 1):
+                if attempt > retry_limit:
                     if self.journal is not None:
                         self.journal.append(
                             JournalRecord(
@@ -732,7 +766,8 @@ class LocalExecutor(_BaseExecutor):
         commit_value = value.output if isinstance(value, WithContext) else value
         facts = dict(value.facts) if isinstance(value, WithContext) else None
         meta = {"facts": facts} if facts else None
-        self._commit(node.id, ctx_d, in_d, commit_value, attempt, meta=meta)
+        self._commit(node.id, ctx_d, in_d, commit_value, attempt, meta=meta,
+                     volatile=node.volatile, expected=expected)
         self._cache_store(node.id, key, ctx_d, in_d, commit_value, facts=facts)
         return value, "executed"
 
@@ -785,7 +820,7 @@ class LocalExecutor(_BaseExecutor):
                     inputs[m.kwarg_for(d)] = out
             if m.fn is None:
                 raise ValueError(f"union member {m.id!r} has no callable")
-            v = m.fn(ctx, **inputs)
+            v = m.fn(ctx, **unwrap_digested(inputs))
             member_out[m.id] = v.output if isinstance(v, WithContext) else v
         self._commit(
             group.id, ctx_d, in_d, member_out, 0, meta={"members": [m.id for m in order]}
@@ -809,6 +844,7 @@ class _Inflight:
     copies: int = 0  # total submissions ever made (speculation budget)
     attempts: int = 0  # gateway-level requeues observed (evictions, failures)
     cache_key: Optional[CacheKey] = None  # store target once the result lands
+    expected: Optional[str] = None  # volatile: digest the result must match
 
 
 class ClusterExecutor(_BaseExecutor):
@@ -1005,13 +1041,17 @@ class ClusterExecutor(_BaseExecutor):
             inputs = _inject_inputs(node, outputs, member_to_group)
             ctx_d, in_d = ctx.digest(), payload_digest(inputs)
             hit = self._lookup(nid, ctx_d, in_d)
+            expected: Optional[str] = None
             if hit is not None:
-                if hit.facts:
-                    # re-emit journaled context facts so downstream ξ digests
-                    # match the original run exactly (replay completeness)
-                    ctx = ctx.with_data(hit.facts, origin=nid)
-                finish(nid, hit.value, ctx, "replayed")
-                return
+                if hit.reexecute:
+                    expected = hit.expected  # volatile: run again, verify
+                else:
+                    if hit.facts:
+                        # re-emit journaled context facts so downstream ξ
+                        # digests match the original run exactly
+                        ctx = ctx.with_data(hit.facts, origin=nid)
+                    finish(nid, hit.value, ctx, "replayed")
+                    return
             key = self._cache_key(node, ctx_d, in_d)
             ent = self._cache_probe(nid, key, ctx_d, in_d)
             if ent is not None:
@@ -1030,14 +1070,15 @@ class ClusterExecutor(_BaseExecutor):
                     )
                 )
             if callable(node.fn):
+                fn_inputs = unwrap_digested(dict(inputs))
                 attempt = 0
                 while True:  # immediate retries: never sleep in the scheduler
                     try:
-                        value = node.fn(ctx, **inputs)
+                        value = node.fn(ctx, **fn_inputs)
                         break
                     except Exception:
                         attempt += 1
-                        if attempt > node.retries:
+                        if attempt > node.retry_limit(0):
                             if self.journal is not None:
                                 self.journal.append(
                                     JournalRecord(
@@ -1055,13 +1096,15 @@ class ClusterExecutor(_BaseExecutor):
                 if isinstance(value, WithContext):
                     ctx = ctx.with_data(value.facts, origin=nid)
                     value = value.output
-                self._commit(nid, ctx_d, in_d, value, attempt, meta=meta)
+                self._commit(nid, ctx_d, in_d, value, attempt, meta=meta,
+                             volatile=node.volatile, expected=expected)
                 self._cache_store(nid, key, ctx_d, in_d, value, facts=facts)
                 finish(nid, value, ctx, "executed")
                 return
             # register BEFORE submit: a requeue can fire the instant the
             # gateway pops the request, and it must find the node inflight
-            st = _Inflight(node, ctx, ctx_d, in_d, dict(inputs), cache_key=key)
+            st = _Inflight(node, ctx, ctx_d, in_d, dict(inputs), cache_key=key,
+                           expected=expected)
             with cv:
                 inflight[nid] = st
             self.straggler.started(str(node.fn), nid)
@@ -1184,7 +1227,9 @@ class ClusterExecutor(_BaseExecutor):
                         del inflight[nid]
                     self.straggler.finished(str(st.node.fn), nid)
                     self._commit(
-                        nid, st.ctx_digest, st.input_digest, value, requeues + copies - 1
+                        nid, st.ctx_digest, st.input_digest, value,
+                        requeues + copies - 1,
+                        volatile=st.node.volatile, expected=st.expected,
                     )
                     self._cache_store(
                         nid, st.cache_key, st.ctx_digest, st.input_digest, value
@@ -1364,7 +1409,7 @@ class ClusterExecutor(_BaseExecutor):
                 handle,
                 self._source_invoker(node, ctx, fn_inputs, run_token),
                 cancel,
-                retries=max(node.retries, self.stream_retries),
+                retries=max(node.retry_limit(0), self.stream_retries),
             )
         else:
             values, status = run_map_stage(
@@ -1374,6 +1419,6 @@ class ClusterExecutor(_BaseExecutor):
                 handle,
                 self._map_invoker(node, ctx, fn_inputs, stream_kwarg, run_token),
                 cancel,
-                retries=node.retries,
+                retries=node.retry_limit(0),
             )
         return values, ctx, status

@@ -24,7 +24,7 @@ from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.wire import PayloadDecodeError
+from repro.wire import PayloadDecodeError, unwrap_digested
 
 from .context import Context, EMPTY_CONTEXT
 
@@ -74,10 +74,10 @@ class WorkerHandle:
     last_seen: float = 0.0
     inflight: int = 0
     completed: int = 0
-    ewma_latency_s: float = 0.0  # straggler detection input
+    ewma_latency_s: float = 0.0  # straggler detection input (monotonic deltas)
     held_contexts: set = field(default_factory=set)  # affinity state
     hb_misses: int = 0  # consecutive failed heartbeat probes
-    app_quarantined_until: float = 0.0  # app_live self-heal blocked until then
+    app_quarantined_until: float = 0.0  # monotonic deadline for app_live self-heal
     inflight_reqs: Dict[int, "TaskRequest"] = field(default_factory=dict)
     # ^ id(req) → req for every request currently running on this worker;
     #   the eviction path drains it to requeue orphans on survivors.
@@ -244,11 +244,15 @@ class Gateway:
         A streaming task (the worker's function is a generator) resolves its
         Future with a live chunk *iterator* instead of a value — see
         docs/streaming.md §5.
+
+        ``Digested`` input wrappers (precomputed-digest hints from the
+        executor's tensor path) are stripped here: workers and transports
+        always see plain payload values.
         """
         req = TaskRequest(
             task_name=task_name,
             ctx=ctx,
-            inputs=dict(inputs or {}),
+            inputs=unwrap_digested(dict(inputs or {})),
             priority=priority,
             affinity_key=affinity_key,
             max_attempts=max_attempts,
@@ -393,7 +397,7 @@ class Gateway:
         with self._track_lock:
             handle.inflight += 1
             handle.inflight_reqs[id(req)] = req
-        t0 = time.time()
+        t0 = time.monotonic()  # interval math must survive wall-clock steps
         try:
             result = handle.worker.run_task(req.task_name, req.ctx, req.inputs)
         except ConnectionError:
@@ -424,7 +428,7 @@ class Gateway:
             # application-level failure: heartbeat may still be fine
             owned = self._release(handle, req)
             handle.app_live = False
-            handle.app_quarantined_until = time.time() + self.quarantine_s
+            handle.app_quarantined_until = time.monotonic() + self.quarantine_s
             req.last_error = exc
             if not owned:
                 return
@@ -442,7 +446,7 @@ class Gateway:
             # PayloadDecodeError, not a generic timeout.
             owned = self._release(handle, req)
             handle.app_live = False
-            handle.app_quarantined_until = time.time() + self.quarantine_s
+            handle.app_quarantined_until = time.monotonic() + self.quarantine_s
             req.last_error = exc
             self.metrics["corrupt"] += 1
             if not owned:
@@ -453,7 +457,7 @@ class Gateway:
             else:
                 self._resubmit(req, f"corrupt payload from {handle.name}")
             return
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         owned = self._release(handle, req)
         handle.completed += 1
         handle.ewma_latency_s = (
@@ -507,7 +511,7 @@ class Gateway:
                 reported = getattr(h.worker, "app_alive", None)
                 if reported is not None:
                     h.app_live = reported  # the worker self-reports: trust it
-                elif time.time() >= h.app_quarantined_until:
+                elif time.monotonic() >= h.app_quarantined_until:
                     # workers without a self-report (HTTP transports) only
                     # self-heal after the quarantine window — a corrupt-but-
                     # alive worker must not re-enter rotation every probe

@@ -145,6 +145,19 @@ class Node:
     ``"map"`` — ``fn`` runs once per upstream chunk; ``"reduce"`` — ``fn``
     consumes the upstream chunk iterator and returns one value. ``""`` is a
     plain batch node (runs after every dep fully commits).
+
+    ``volatile`` marks a node whose output is large transient data (gradient
+    pytrees, synced parameters): its commit records only the output *digest*
+    (``payload=None``), it is never replay-skipped (re-execution is the
+    recovery path — the value is a pure function of its inputs), and a
+    re-execution that disagrees with the journaled digest is a hard
+    non-determinism error. Volatile nodes never use the cross-run result
+    cache. See docs/training.md §3.
+
+    ``retries`` is the per-node retry budget: ``None`` (default) defers to
+    the executor's :class:`~repro.core.failure.RetryPolicy`; an explicit
+    integer — including 0 — is exact. Stateful tasks whose inputs are
+    consumed by execution (donated device buffers) must set ``retries=0``.
     """
 
     id: str
@@ -153,13 +166,18 @@ class Node:
     data: Mapping[str, Any] = field(default_factory=dict)
     aliases: Mapping[str, str] = field(default_factory=dict)  # dep id -> kwarg name
     resources: Mapping[str, float] = field(default_factory=dict)  # scheduling hints
-    retries: int = 0
+    retries: Optional[int] = None  # None ⇒ executor policy; explicit int is exact
     timeout_s: Optional[float] = None
     stream: str = ""  # "" | "source" | "map" | "reduce"
+    volatile: bool = False  # digest-only commits, re-execute-and-verify replay
 
     def kwarg_for(self, dep_id: str) -> str:
         """Kwarg name a dependency's output is injected under (alias-aware)."""
         return self.aliases.get(dep_id, dep_id)
+
+    def retry_limit(self, default: int = 0) -> int:
+        """Effective retry budget: the node's explicit one, else ``default``."""
+        return self.retries if self.retries is not None else default
 
     def fn_digest(self) -> str:
         """Memoized :func:`fn_digest` of this node's callable / task name."""
@@ -296,14 +314,18 @@ class ContextGraph:
         data: Optional[Mapping[str, Any]] = None,
         aliases: Optional[Mapping[str, str]] = None,
         resources: Optional[Mapping[str, float]] = None,
-        retries: int = 0,
+        retries: Optional[int] = None,
         timeout_s: Optional[float] = None,
         stream: str = "",
+        volatile: bool = False,
     ) -> Node:
         if id in self.nodes:
             raise ValueError(f"duplicate node id {id!r}")
         if stream not in STREAM_KINDS:
             raise ValueError(f"node {id!r}: stream must be one of {STREAM_KINDS}")
+        if volatile and stream:
+            raise ValueError(f"node {id!r}: stream stages commit at chunk "
+                             "granularity and cannot be volatile")
         node = Node(
             id=id,
             fn=fn,
@@ -314,6 +336,7 @@ class ContextGraph:
             retries=retries,
             timeout_s=timeout_s,
             stream=stream,
+            volatile=volatile,
         )
         self.nodes[id] = node
         return node

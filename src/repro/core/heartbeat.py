@@ -25,7 +25,7 @@ from typing import Any, Dict, Optional
 
 __all__ = ["telemetry", "HeartbeatServer", "check_heartbeat"]
 
-_START = time.time()
+_START = time.monotonic()  # uptime is interval math: immune to clock steps
 
 
 def _meminfo() -> Dict[str, float]:
@@ -56,8 +56,8 @@ def telemetry(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     disk = shutil.disk_usage("/")
     report: Dict[str, Any] = {
         "ok": True,
-        "time": time.time(),
-        "uptime_s": time.time() - _START,
+        "time": time.time(),  # record timestamp: wall clock is correct here
+        "uptime_s": time.monotonic() - _START,
         "cpu": {
             "load1": load1,
             "load5": load5,
@@ -155,15 +155,17 @@ def check_heartbeat(address: str, timeout: float = 1.0) -> Optional[Dict[str, An
 
     A successful probe is stamped with ``probe_latency_s`` (round-trip time
     as seen by the caller) so the gateway's cached telemetry carries a
-    network-health signal alongside the worker's self-report.
+    network-health signal alongside the worker's self-report. The RTT is
+    measured on the monotonic clock — a wall-clock step mid-probe (NTP
+    correction, manual adjustment) must not poison the latency signal.
     """
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         with urllib.request.urlopen(
             address.rstrip("/") + "/heartbeat", timeout=timeout
         ) as resp:
             report = json.loads(resp.read())
-        report["probe_latency_s"] = time.time() - t0
+        report["probe_latency_s"] = time.monotonic() - t0
         return report
     except Exception:
         return None

@@ -34,6 +34,7 @@ from repro.wire import (
     encode_frame,
     encode_payload,
     read_frames,
+    unwrap_digested,
 )
 
 from .context import Context
@@ -108,12 +109,15 @@ def _execute(
             return {"status": "rejected", "reason": reason}
     with state.lock:
         state.busy += 1
-    t0 = time.time()
+    t0 = time.monotonic()  # wall_s is a duration: clock steps must not skew it
     try:
         if fail_injector is not None:
             fail_injector(task_name)  # test hook: raise to simulate app error
         fn = registry.get(task_name)
-        out = fn(ctx, **dict(inputs))
+        # tensor-bearing tasks may arrive with Digested digest-hint wrappers
+        # when invoked directly (the gateway strips them at submit); the
+        # registry surface always hands task functions plain payload values
+        out = fn(ctx, **unwrap_digested(dict(inputs)))
         if inspect.isgenerator(out):
             # a stream-source task: the body has not run yet — chunks are
             # produced as the caller (transport) iterates, so accounting
@@ -124,11 +128,19 @@ def _execute(
                 "status": "stream",
                 "stream": out,
                 "start": int(dict(inputs).get("start", 0) or 0),
-                "wall_s": time.time() - t0,
+                "wall_s": time.monotonic() - t0,
             }
         with state.lock:
             state.completed += 1
-        return {"status": "ok", "output": out, "wall_s": time.time() - t0}
+        # normalize results at the worker boundary: an HTTP transport strips
+        # Digested wrappers as a side effect of encoding, so the zero-copy
+        # in-proc path must strip them too — otherwise the same task output
+        # would journal under transport-dependent digests
+        return {
+            "status": "ok",
+            "output": unwrap_digested(out),
+            "wall_s": time.monotonic() - t0,
+        }
     except Exception as exc:  # application-level failure: report, stay alive
         with state.lock:
             state.failed += 1
@@ -136,7 +148,7 @@ def _execute(
             "status": "error",
             "error": f"{type(exc).__name__}: {exc}",
             "traceback": traceback.format_exc(),
-            "wall_s": time.time() - t0,
+            "wall_s": time.monotonic() - t0,
         }
     finally:
         with state.lock:
@@ -144,13 +156,21 @@ def _execute(
 
 
 class InProcWorker:
-    """Zero-transport worker — the unit-test and single-process fast path."""
+    """Zero-transport worker — the unit-test and single-process fast path.
+
+    ``max_concurrency`` models the worker's real execution capacity: a
+    worker standing in for one accelerator host processes one tensor task
+    at a time (``max_concurrency=1``), even though the gateway's dispatch
+    pool may hand it several requests concurrently. ``None`` (default)
+    keeps the historical unlimited-overlap behaviour for pure-Python tasks.
+    """
 
     def __init__(
         self,
         name: str,
         registry: TaskRegistry,
         middleware: Optional[List[Middleware]] = None,
+        max_concurrency: Optional[int] = None,
     ):
         self.name = name
         self.registry = registry
@@ -160,6 +180,9 @@ class InProcWorker:
         self.app_alive = True  # application liveness (simulated)
         self.latency_s = 0.0  # injected slowness for straggler tests
         self.fail_injector: Optional[Callable[[str], None]] = None
+        self._slots = (
+            threading.BoundedSemaphore(max_concurrency) if max_concurrency else None
+        )
 
     # same surface as WorkerClient ------------------------------------------
     def heartbeat(self) -> Optional[Dict[str, Any]]:
@@ -180,6 +203,14 @@ class InProcWorker:
             raise ConnectionError(f"worker {self.name} is down (system-level)")
         if not self.app_alive:
             raise TimeoutError(f"worker {self.name} application not responding")
+        if self._slots is None:
+            return self._run_task_inner(task_name, ctx, inputs)
+        with self._slots:  # capacity-bound execution (one accelerator's worth)
+            return self._run_task_inner(task_name, ctx, inputs)
+
+    def _run_task_inner(
+        self, task_name: str, ctx: Context, inputs: Mapping[str, Any]
+    ) -> Dict[str, Any]:
         if self.latency_s:
             time.sleep(self.latency_s)
         result = _execute(

@@ -1,0 +1,22 @@
+"""Training stack: durable trainer loops and their atomic step functions.
+
+``Trainer`` runs single-process durable rounds on a ``LocalExecutor``;
+``DistributedTrainer`` expands each step into a data-parallel cluster graph
+routed through the Gateway (see docs/training.md).
+"""
+
+from .distributed import DistTrainConfig, DistributedTrainer, build_grad_registry
+from .steps import make_decode_step, make_opt_init, make_prefill_step, make_train_step
+from .trainer import TrainConfig, Trainer
+
+__all__ = [
+    "TrainConfig",
+    "Trainer",
+    "DistTrainConfig",
+    "DistributedTrainer",
+    "build_grad_registry",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "make_opt_init",
+]

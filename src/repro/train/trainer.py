@@ -22,11 +22,12 @@ re-mesh on device-count change at recovery time.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +65,10 @@ class TrainConfig:
 
 
 class Trainer:
+    #: node-id prefix of the per-step metric commits this trainer journals;
+    #: the replay-digest scan and the metrics collector both key off it
+    step_node_prefix = "step@"
+
     def __init__(self, cfg: ModelConfig, tc: TrainConfig):
         self.cfg = cfg
         self.tc = tc
@@ -85,8 +90,16 @@ class Trainer:
         self.mesh = jax.make_mesh((max(1, n // model_ax), model_ax),
                                   ("data", "model"))
         self.rules = ShardingRules(cfg, self.mesh, ShardingOptions())
+        # The fresh-execution step donates params/opt buffers (in-place
+        # update memory profile). The VERIFY twin does not: a replayed step
+        # must be able to fail its digest check and leave the restored state
+        # untouched — donation would have already consumed it.
         self._train_step = jax.jit(make_train_step(self.model, tc.opt),
                                    donate_argnums=(0, 1))
+        self._train_step_verify = jax.jit(make_train_step(self.model, tc.opt))
+        # steps whose device buffers were donated this incarnation: a second
+        # execution would read freed buffers, so it is refused outright
+        self._donated_steps: set = set()
         self.metrics_log: list = []
 
     # -- run identity --------------------------------------------------------
@@ -103,8 +116,18 @@ class Trainer:
 
     # -- recovery ------------------------------------------------------------
     def recover(self) -> Tuple[int, Any, Any]:
-        """(start_step, params, opt_state) — from snapshot or fresh init."""
-        tag = self.store.latest()
+        """(start_step, params, opt_state) — from snapshot or fresh init.
+
+        Only *complete* checkpoint pairs count: the params save is sync but
+        the ``-opt`` companion may be async, so a crash can publish the base
+        tag without its optimizer shard. Recovery falls back to the newest
+        pair whose companion exists instead of failing on the missing shard.
+
+        Both shards restore through the digest-verified ``resolve()`` path:
+        on-disk corruption or tampering that preserves shapes aborts
+        recovery loudly instead of silently training onward from bad state.
+        """
+        tag = self.store.latest(companions=("-opt",))
         params, axes = None, None
         if tag is not None:
             man = self.store.manifest(tag)
@@ -112,12 +135,14 @@ class Trainer:
             like_p = jax.eval_shape(lambda r: self.model.init(r)[0],
                                     jax.random.key(self.tc.seed))
             like_p = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), like_p)
-            params = self.store.restore(tag, like_p)
+            params = self.store.resolve(f"{tag}@{man['digest']}", like_p)
             params = jax.tree.map(jnp.asarray, params)
             from repro.optim.adamw import adamw_init
 
             like_o = adamw_init(params, self.tc.opt)
-            opt_state = self.store.restore(tag + "-opt", like_o)
+            man_o = self.store.manifest(tag + "-opt")
+            opt_state = self.store.resolve(f"{tag}-opt@{man_o['digest']}",
+                                           like_o)
             opt_state = jax.tree.map(jnp.asarray, opt_state)
             return start, params, opt_state
         params, _ = self.model.init(jax.random.key(self.tc.seed))
@@ -153,24 +178,56 @@ class Trainer:
                 meta = deps[_fid]
                 batch = self.source.batch_at(_s)  # DI: regenerate (pure fn)
                 jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
-                state["params"], state["opt"], metrics = self._train_step(
+                want = replay_digests.get(_s)
+                if _s in self._donated_steps:
+                    # the donating step already consumed this state's device
+                    # buffers; a re-execution would read freed memory. This
+                    # is unreachable via the executor (step nodes carry
+                    # retries=0) and exists to make the hazard loud if a
+                    # future caller re-runs a round graph by hand.
+                    raise RuntimeError(
+                        f"step {_s} already donated its input buffers; "
+                        "re-executing it is unsafe (restore a snapshot and "
+                        "build a fresh round graph instead)")
+                if want is None:
+                    # fresh execution: donation is safe — nothing can demand
+                    # the pre-step state after this commit
+                    self._donated_steps.add(_s)
+                    step_fn = self._train_step
+                else:
+                    # replay-verification: run the NON-donating twin so a
+                    # digest mismatch leaves the restored state intact
+                    step_fn = self._train_step_verify
+                new_params, new_opt, metrics = step_fn(
                     state["params"], state["opt"], jbatch)
                 out = {k: float(v) for k, v in metrics.items()}
                 out["step"] = _s
                 out["data_digest"] = meta["digest"]
-                want = replay_digests.get(_s)
                 got = payload_digest(out)
                 if want is not None and want != got:
                     raise RuntimeError(
                         f"non-deterministic replay at step {_s}: "
                         f"journal={want} recomputed={got}")
+                # verified (or fresh): only now does the mutation commit
+                state["params"], state["opt"] = new_params, new_opt
                 return out
 
             deps = [fetch_id] + ([prev] if prev else [])
             g.add(step_id, run_step, deps=deps,
-                  data={"incarnation": incarnation})
+                  data={"incarnation": incarnation}, retries=0)
             prev = step_id
 
+        self._add_checkpoint_node(g, state, prev, end)
+        return g
+
+    def _add_checkpoint_node(self, g: ContextGraph, state: Dict[str, Any],
+                             prev: str, end: int) -> None:
+        """Append the round-closing checkpoint node (snapshot + CKPT record).
+
+        The params save is synchronous; the ``-opt`` companion may be async
+        (off the critical path). Recovery tolerates a torn pair — see
+        :meth:`recover` and docs/training.md §5.
+        """
         def checkpoint(ctx, **deps):
             last = deps[prev]
             next_step = last["step"] + 1
@@ -188,7 +245,44 @@ class Trainer:
                                {"last_ckpt": ref_p})
 
         g.add(f"ckpt@{end}", checkpoint, deps=[prev])
-        return g
+
+    # -- shared machinery (the distributed trainer reuses all of it) --------------
+    def _scan_journal(self) -> Tuple[Dict[int, str], int]:
+        """(replay_digests, incarnation) from previous runs of this journal.
+
+        ``replay_digests[step]`` is the metric-payload digest a previous
+        incarnation committed for that step: the determinism oracle the
+        re-executed step must match. The incarnation count salts stateful
+        nodes' Ψ so they re-execute instead of replay-skipping.
+        """
+        replay_digests: Dict[int, str] = {}
+        incarnation = 0
+        if os.path.exists(self.journal.path):
+            prefix = self.step_node_prefix
+            for rec in self.journal.records():
+                if rec.kind == "RUN_START":
+                    incarnation += 1
+                if rec.kind == "NODE_COMMIT" and rec.node_id.startswith(prefix):
+                    if isinstance(rec.payload, dict) and "step" in rec.payload:
+                        replay_digests[int(rec.payload["step"])] = \
+                            rec.output_digest
+        return replay_digests, incarnation
+
+    @contextlib.contextmanager
+    def _executor_scope(self) -> Iterator[Any]:
+        """Yield the executor this trainer runs rounds on (local here)."""
+        yield LocalExecutor(max_workers=4, journal=self.journal)
+
+    def _collect_metrics(self, report) -> None:
+        """Pull this round's step metrics out of a report, in step order."""
+        metrics = [report.outputs[n] for n in report.outputs
+                   if n.startswith(self.step_node_prefix)]
+        for m in sorted(metrics, key=lambda m: m["step"]):
+            self.metrics_log.append(m)
+            if m["step"] % self.tc.log_every == 0:
+                print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} "
+                      f"lr {m['lr']:.2e}", flush=True)
 
     # -- main loop ----------------------------------------------------------------
     def train(self) -> Dict[str, Any]:
@@ -197,37 +291,20 @@ class Trainer:
         t0 = time.time()
         # replay digests from previous incarnations (determinism check) +
         # incarnation nonce (see _round_graph docstring)
-        replay_digests: Dict[int, str] = {}
-        incarnation = 0
-        if os.path.exists(self.journal.path):
-            for rec in self.journal.records():
-                if rec.kind == "RUN_START":
-                    incarnation += 1
-                if rec.kind == "NODE_COMMIT" and rec.node_id.startswith("step@"):
-                    if isinstance(rec.payload, dict) and "step" in rec.payload:
-                        replay_digests[int(rec.payload["step"])] = \
-                            rec.output_digest
+        replay_digests, incarnation = self._scan_journal()
 
         start, params, opt_state = self.recover()
         state = {"params": params, "opt": opt_state}
-        executor = LocalExecutor(max_workers=4, journal=self.journal)
         self.rules.install()
         try:
-            with self.mesh:
+            with self._executor_scope() as executor, self.mesh:
                 s = start
                 while s < self.tc.num_steps:
                     e = min(s + self.tc.checkpoint_every, self.tc.num_steps)
                     graph = self._round_graph(s, e, state, replay_digests,
                                               incarnation=incarnation)
                     report = executor.run(graph)
-                    for nid in sorted(n for n in report.outputs
-                                      if n.startswith("step@")):
-                        m = report.outputs[nid]
-                        self.metrics_log.append(m)
-                        if m["step"] % self.tc.log_every == 0:
-                            print(f"step {m['step']:5d} loss {m['loss']:.4f} "
-                                  f"gnorm {m['grad_norm']:.3f} "
-                                  f"lr {m['lr']:.2e}", flush=True)
+                    self._collect_metrics(report)
                     s = e
         finally:
             self.rules.uninstall()

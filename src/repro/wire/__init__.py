@@ -26,15 +26,17 @@ from .base import Codec, DIGEST_HEX_LEN, normalize, stdlib_canonical
 from .compress import compress, decompress, zstd_available
 from .json_codec import JsonCodec
 from .msgpack_codec import MsgpackCodec
-from .payload import (PayloadDecodeError, decode_payload, encode_frame,
-                      encode_payload, payload_digest, read_frames)
+from .payload import (Digested, PayloadDecodeError, decode_payload,
+                      encode_frame, encode_payload, payload_digest,
+                      read_frames, unwrap_digested)
 
 __all__ = [
     "Codec", "JsonCodec", "MsgpackCodec", "DIGEST_HEX_LEN",
     "normalize", "stdlib_canonical",
     "available_codecs", "get_codec", "default_codec", "set_default_codec",
     "canonical_bytes", "canonical_digest", "from_canonical",
-    "PayloadDecodeError", "encode_payload", "decode_payload", "payload_digest",
+    "PayloadDecodeError", "Digested", "unwrap_digested",
+    "encode_payload", "decode_payload", "payload_digest",
     "encode_frame", "read_frames",
     "compress", "decompress", "zstd_available",
 ]

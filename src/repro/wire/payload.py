@@ -23,6 +23,8 @@ from .msgpack_codec import pack_default, unpack_ext
 
 __all__ = [
     "PayloadDecodeError",
+    "Digested",
+    "unwrap_digested",
     "encode_payload",
     "decode_payload",
     "payload_digest",
@@ -30,6 +32,62 @@ __all__ = [
     "read_frames",
     "FRAME_HEADER",
 ]
+
+
+class Digested:
+    """A payload value carrying its precomputed :func:`payload_digest`.
+
+    Tensor-bearing task graphs (the distributed trainer's params-sync path)
+    hash the same large pytree at several layers: the producing node's output
+    digest, every consumer's input digest, and the journal commit. Wrapping
+    the value once — ``Digested.wrap(params)`` — makes every subsequent
+    :func:`payload_digest` over it O(1): the digest is folded in as a
+    fixed-size token instead of re-feeding the raw buffers.
+
+    ``Digested`` is a *scheduling-layer* hint, never a wire type: executors
+    and the gateway unwrap it (:func:`unwrap_digested`) before a task function
+    or transport sees the inputs, :func:`encode_payload` strips any wrapper
+    left in an encoded tree, and workers strip wrappers from task *results*
+    so journal digests are transport-independent. Use it only on values that
+    stay executor-side; the wrapper owner is responsible for the digest
+    actually matching the value.
+    """
+
+    __slots__ = ("value", "digest")
+
+    def __init__(self, value: Any, digest: str):
+        self.value = value
+        self.digest = digest
+
+    @staticmethod
+    def wrap(value: Any) -> "Digested":
+        """Wrap ``value`` with its freshly computed payload digest."""
+        return Digested(value, payload_digest(value))
+
+    def __repr__(self) -> str:  # keep tensor pytrees out of logs/errors
+        return f"Digested({self.digest})"
+
+
+def unwrap_digested(obj: Any) -> Any:
+    """Strip :class:`Digested` wrappers from a payload pytree.
+
+    Copy-on-write: containers are rebuilt only along paths that actually
+    contain a wrapper, so the common wrapper-free case is a cheap identity
+    walk with no allocation.
+    """
+    if isinstance(obj, Digested):
+        return unwrap_digested(obj.value)
+    if isinstance(obj, dict):
+        out = {k: unwrap_digested(v) for k, v in obj.items()}
+        return obj if all(out[k] is obj[k] for k in out) else out
+    if isinstance(obj, (list, tuple)):
+        vals = [unwrap_digested(v) for v in obj]
+        if all(a is b for a, b in zip(vals, obj)):
+            return obj
+        if isinstance(obj, tuple) and hasattr(obj, "_fields"):
+            return type(obj)(*vals)  # NamedTuple: positional reconstruction
+        return type(obj)(vals)
+    return obj
 
 
 class PayloadDecodeError(ValueError):
@@ -42,8 +100,12 @@ class PayloadDecodeError(ValueError):
 
 
 def encode_payload(obj: Any, level: int = 3) -> bytes:
-    """Encode a pytree as a tagged-compressed msgpack frame (journal body)."""
-    body = msgpack.packb(obj, default=pack_default, use_bin_type=True)
+    """Encode a pytree as a tagged-compressed msgpack frame (journal body).
+
+    :class:`Digested` wrappers are stripped first — the digest hint is
+    process-local scheduling state, never part of the wire format.
+    """
+    body = msgpack.packb(unwrap_digested(obj), default=pack_default, use_bin_type=True)
     return compress(body, level=level)
 
 
@@ -109,7 +171,10 @@ def payload_digest(obj: Any) -> str:
     h = hashlib.sha256()
 
     def _feed(x: Any) -> None:
-        if isinstance(x, Mapping):
+        if isinstance(x, Digested):  # precomputed: fold the token, not the value
+            h.update(b"digested:")
+            h.update(x.digest.encode())
+        elif isinstance(x, Mapping):
             for k in sorted(x, key=str):
                 h.update(str(k).encode())
                 _feed(x[k])

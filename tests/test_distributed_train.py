@@ -1,0 +1,129 @@
+"""Distributed data-parallel training: durability, elastic re-shard, resume.
+
+The acceptance contract (docs/training.md §4): a round that loses a worker
+mid-flight, and a run that dies mid-round, must BOTH converge to a final
+params digest bit-identical to an uninterrupted run — gradients are pure
+functions of (params, step, shard), never of the worker or the schedule.
+"""
+
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import FlakyWorker, InProcWorker, Journal
+from repro.optim.adamw import AdamWConfig
+from repro.train import DistTrainConfig, DistributedTrainer
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return smoke_variant(get_config("serpytor-demo-100m"))
+
+
+def _tc(run_dir, **kw):
+    base = dict(
+        run_dir=str(run_dir),
+        num_steps=4,
+        checkpoint_every=4,
+        log_every=100,
+        global_batch=4,
+        seq_len=32,
+        heartbeat=False,
+        journal_sync="batch",
+        num_shards=2,
+        num_workers=2,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=4),
+    )
+    base.update(kw)
+    return DistTrainConfig(**base)
+
+
+def _final_digest(trainer):
+    """Content-true digest of the newest published checkpoint."""
+    return trainer.store.manifest(trainer.store.latest())["digest"]
+
+
+def _reference(small_cfg, tmp_path):
+    ref = DistributedTrainer(small_cfg, _tc(tmp_path / "ref"))
+    ref.train()
+    return _final_digest(ref), ref
+
+
+def test_distributed_round_trains_and_reduces_loss(tmp_path, small_cfg):
+    tr = DistributedTrainer(small_cfg, _tc(tmp_path / "runA"))
+    out = tr.train()
+    assert out["steps"] == 4
+    steps = [m["step"] for m in tr.metrics_log]
+    assert steps == [0, 1, 2, 3]  # numeric order, not lexicographic
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]
+
+
+def test_volatile_commits_keep_tensors_out_of_the_journal(tmp_path, small_cfg):
+    tr = DistributedTrainer(small_cfg, _tc(tmp_path / "runB", num_steps=2))
+    tr.train()
+    tensor_nodes = 0
+    for rec in Journal(str(tmp_path / "runB" / "journal.wal"), sync="never").records():
+        if rec.kind != "NODE_COMMIT":
+            continue
+        if rec.node_id.startswith(("sync@", "grad@", "reduce@")):
+            tensor_nodes += 1
+            assert rec.meta.get("volatile") is True
+            assert rec.payload is None  # digest-only: tensors never journaled
+            assert rec.output_digest
+    # 2 steps x (1 sync + 2 grads + 1 reduce)
+    assert tensor_nodes == 8
+
+
+def test_worker_killed_mid_round_converges_bit_identical(tmp_path, small_cfg):
+    ref_digest, _ = _reference(small_cfg, tmp_path)
+
+    tr = DistributedTrainer(small_cfg, _tc(tmp_path / "kill"))
+    # the third task start flips the kill switch: w0 dies with a shard
+    # accepted but unfinished — the gateway must requeue it on w1
+    tr.workers = [
+        FlakyWorker("w0", tr.registry, kill_after_starts=3),
+        InProcWorker("w1", tr.registry),
+    ]
+    out = tr.train()
+    assert out["steps"] == 4
+    assert _final_digest(tr) == ref_digest  # bit-identical params
+    kinds = Journal(str(tmp_path / "kill" / "journal.wal"), sync="never").kinds()
+    assert kinds.get("NODE_REQUEUE", 0) >= 1  # the orphaned shard was absorbed
+
+
+def test_run_killed_mid_round_resumes_bit_identical(tmp_path, small_cfg):
+    ref_digest, _ = _reference(small_cfg, tmp_path)
+
+    run = tmp_path / "crash"
+    tr1 = DistributedTrainer(small_cfg, _tc(run))
+    orig = tr1.registry.get("grad_shard")
+
+    def bomb(ctx, sync):
+        if int(sync["step"]) == 2:
+            raise RuntimeError("injected mid-round crash")
+        return orig(ctx, sync)
+
+    tr1.registry.register("grad_shard", bomb)
+    with pytest.raises(RuntimeError):
+        tr1.train()  # dies mid-round: steps 0-1 committed, no checkpoint
+
+    # fresh incarnation, same run_dir: recovery replays the committed steps
+    # from the journal (digest-verified) and finishes the run
+    tr2 = DistributedTrainer(small_cfg, _tc(run))
+    out = tr2.train()
+    assert out["steps"] == 4  # no snapshot existed: the whole run re-executed
+    assert _final_digest(tr2) == ref_digest
+    kinds = Journal(str(run / "journal.wal"), sync="never").kinds()
+    assert kinds["RUN_START"] == 2
+    assert kinds.get("NODE_FAIL", 0) >= 1  # the crash is in the event history
+
+
+def test_resume_after_completed_round_skips_finished_steps(tmp_path, small_cfg):
+    run = tmp_path / "resume"
+    tr1 = DistributedTrainer(small_cfg, _tc(run, num_steps=2, checkpoint_every=2))
+    tr1.train()
+
+    tr2 = DistributedTrainer(small_cfg, _tc(run, num_steps=4, checkpoint_every=2))
+    out = tr2.train()
+    assert out["steps"] == 2  # resumed at the snapshot, not from scratch
+    assert [m["step"] for m in tr2.metrics_log] == [2, 3]

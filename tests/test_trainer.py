@@ -101,3 +101,97 @@ def test_summary_written(tmp_path, small_cfg):
     Trainer(small_cfg, _tc(run, num_steps=2, checkpoint_every=2)).train()
     summary = json.load(open(run / "summary.json"))
     assert summary["steps"] == 2 and len(summary["log"]) == 2
+
+
+def test_digest_mismatch_does_not_advance_params(tmp_path, small_cfg):
+    """Replay verification is compute-then-verify-then-SWAP: a step whose
+    recomputation disagrees with the journal must fail WITHOUT mutating
+    state — the restored snapshot stays intact for forensics."""
+    from repro.core import LocalExecutor
+    from repro.wire import payload_digest
+    import jax
+
+    tr = Trainer(small_cfg, _tc(tmp_path / "runG", num_steps=2))
+    start, params, opt_state = tr.recover()
+    state = {"params": params, "opt": opt_state}
+    before = payload_digest(jax.device_get(state["params"]))
+
+    # a journal claiming step 0 committed with a digest the (deterministic)
+    # recomputation cannot possibly produce
+    graph = tr._round_graph(0, 1, state, {0: "bogus-journal-digest"},
+                            incarnation=1)
+    tr.rules.install()
+    try:
+        with tr.mesh:
+            with pytest.raises(RuntimeError, match="non-deterministic replay"):
+                LocalExecutor(max_workers=2).run(graph)
+    finally:
+        tr.rules.uninstall()
+    after = payload_digest(jax.device_get(state["params"]))
+    assert after == before  # the failed step did NOT advance params
+
+
+def test_step_never_rerun_after_donation(tmp_path, small_cfg):
+    """The donating (fresh-execution) step consumes its input buffers; a
+    second execution of the same step must be refused, not retried."""
+    from repro.core import LocalExecutor
+
+    tr = Trainer(small_cfg, _tc(tmp_path / "runH", num_steps=1))
+    start, params, opt_state = tr.recover()
+    state = {"params": params, "opt": opt_state}
+    tr.rules.install()
+    try:
+        with tr.mesh:
+            g1 = tr._round_graph(0, 1, state, {}, incarnation=0)
+            LocalExecutor(max_workers=2).run(g1)  # donates step 0's buffers
+            # step nodes must opt out of executor-policy retries outright
+            assert g1.nodes["step@0"].retries == 0
+            g2 = tr._round_graph(0, 1, state, {}, incarnation=0)
+            with pytest.raises(RuntimeError, match="donated"):
+                LocalExecutor(max_workers=2).run(g2)
+    finally:
+        tr.rules.uninstall()
+        tr.store.wait()
+
+
+def test_recover_falls_back_on_half_published_pair(tmp_path, small_cfg):
+    """An async -opt write that never landed must not wedge recovery: the
+    newest COMPLETE pair wins."""
+    import shutil
+
+    run = tmp_path / "runI"
+    tr = Trainer(small_cfg, _tc(run, num_steps=4, checkpoint_every=2))
+    tr.train()
+    assert tr.store.latest() == "step00000004"
+    # simulate the crash window: base tag published, companion lost
+    shutil.rmtree(run / "ckpt" / "step00000004-opt")
+
+    tr2 = Trainer(small_cfg, _tc(run, num_steps=4, checkpoint_every=2))
+    start, params, opt_state = tr2.recover()
+    assert start == 2  # fell back to the newest complete pair, didn't crash
+
+
+def test_recover_rejects_corrupted_checkpoint(tmp_path, small_cfg):
+    """Recovery restores through the digest-verified resolve() path: tensor
+    bytes flipped on disk (shapes intact) must abort, not train onward."""
+    import io
+    import numpy as np
+    from repro.cache.store import atomic_write_bytes
+    from repro.wire import compress, decompress
+
+    run = tmp_path / "runJ"
+    tr = Trainer(small_cfg, _tc(run, num_steps=2, checkpoint_every=2))
+    tr.train()
+
+    shard = run / "ckpt" / "step00000002" / "shard-0.npz.zst"
+    npz = np.load(io.BytesIO(decompress(shard.read_bytes())))
+    flat = {k: npz[k].copy() for k in npz.files}
+    key = sorted(flat)[0]
+    flat[key].reshape(-1)[0] += 1.0  # same shape/dtype, different bytes
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    atomic_write_bytes(str(shard), compress(buf.getvalue(), level=3))
+
+    tr2 = Trainer(small_cfg, _tc(run, num_steps=4, checkpoint_every=2))
+    with pytest.raises(ValueError, match="content mismatch"):
+        tr2.recover()

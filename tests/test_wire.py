@@ -269,3 +269,16 @@ def test_digest_matches_bare_subprocess():
     assert proc.returncode == 0, proc.stderr
     bare_digest = proc.stdout.strip().split()[-1]
     assert bare_digest == ctx.digest()
+
+
+def test_unwrap_digested_handles_namedtuples_and_identity():
+    from collections import namedtuple
+    from repro.wire import Digested, unwrap_digested
+
+    Pair = namedtuple("Pair", ["a", "b"])
+    wrapped = {"p": Pair(Digested.wrap([1, 2]), 3), "plain": (4, 5)}
+    out = unwrap_digested(wrapped)
+    assert out["p"] == Pair([1, 2], 3) and isinstance(out["p"], Pair)
+    assert out["plain"] is wrapped["plain"]  # wrapper-free paths keep identity
+    untouched = {"x": [1, {"y": 2}]}
+    assert unwrap_digested(untouched) is untouched
