@@ -24,6 +24,7 @@ rigor as docs/journal-format.md.
 from .key import CacheKey
 from .store import (
     CachedResult,
+    CacheView,
     FileCacheBackend,
     MemoryLRU,
     ResultCache,
@@ -33,6 +34,7 @@ from .store import (
 __all__ = [
     "CacheKey",
     "CachedResult",
+    "CacheView",
     "FileCacheBackend",
     "MemoryLRU",
     "ResultCache",

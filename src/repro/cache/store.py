@@ -42,6 +42,7 @@ from .key import CacheKey
 
 __all__ = [
     "CachedResult",
+    "CacheView",
     "FileCacheBackend",
     "MemoryLRU",
     "ResultCache",
@@ -382,3 +383,51 @@ class ResultCache:
     def clear(self) -> int:
         """Drop everything — ``evict("")``."""
         return self.evict("")
+
+    def restricted(self, deny: "set[str] | frozenset[str]") -> "CacheView":
+        """A read-restricted facade: ``deny`` key ids always miss.
+
+        Used by workflow ``fork()``: a child branched at record ``at`` must
+        re-execute everything the parent committed *after* that point, so the
+        parent's post-``at`` cache stores are masked while the shared prefix
+        stays cache-served. Writes still land in this cache.
+        """
+        return CacheView(self, deny)
+
+
+class CacheView:
+    """Deny-list view over a :class:`ResultCache` (see ``restricted``).
+
+    ``get`` filters; ``put``/``evict``/``clear``/``stats`` delegate to the
+    parent, so executors can use a view anywhere a cache is accepted.
+    """
+
+    def __init__(self, cache: ResultCache, deny: "set[str] | frozenset[str]"):
+        self.cache = cache
+        self.deny = frozenset(deny)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """The parent cache's (shared) counters."""
+        return self.cache.stats
+
+    def get(self, key: CacheKey) -> Optional[CachedResult]:
+        """Parent lookup, except denied key ids miss unconditionally."""
+        if key.id in self.deny:
+            self.cache.stats["misses"] += 1
+            return None
+        return self.cache.get(key)
+
+    def put(
+        self, key: CacheKey, value: Any, facts: Optional[Mapping[str, Any]] = None
+    ) -> CachedResult:
+        """Store through to the parent cache."""
+        return self.cache.put(key, value, facts=facts)
+
+    def evict(self, prefix: str = "") -> int:
+        """Delegate eviction to the parent cache."""
+        return self.cache.evict(prefix)
+
+    def clear(self) -> int:
+        """Delegate to the parent cache."""
+        return self.cache.clear()

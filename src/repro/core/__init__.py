@@ -5,12 +5,15 @@ The paper's contribution, realized for JAX/TPU clusters. See DESIGN.md §2-3.
 
 from .context import EMPTY_CONTEXT, Context, ContextEntry, canonical_digest
 from .durable import (
+    KNOWN_KINDS,
+    Interrupted,
     Journal,
     JournalRecord,
     ReplayCache,
     atomic_task,
     decode_payload,
     encode_payload,
+    interrupt,
     payload_digest,
 )
 from .executor import ClusterExecutor, ExecutionReport, LocalExecutor, WithContext
@@ -18,6 +21,7 @@ from .failure import FailureKind, LivenessDetector, RetryPolicy, StragglerWatch,
 from .gateway import (
     AllocationError,
     Gateway,
+    TaskCancelled,
     TaskRequest,
     WorkerHandle,
     context_affinity,
@@ -43,7 +47,10 @@ __all__ = [
     "canonical_digest",
     "Journal",
     "JournalRecord",
+    "KNOWN_KINDS",
     "ReplayCache",
+    "Interrupted",
+    "interrupt",
     "atomic_task",
     "encode_payload",
     "decode_payload",
@@ -61,6 +68,7 @@ __all__ = [
     "TaskRequest",
     "WorkerHandle",
     "AllocationError",
+    "TaskCancelled",
     "round_robin",
     "least_loaded",
     "power_of_two",

@@ -32,6 +32,7 @@ import os
 import struct
 import threading
 import time
+import warnings
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Tuple
@@ -44,6 +45,9 @@ __all__ = [
     "Journal",
     "JournalRecord",
     "ReplayCache",
+    "Interrupted",
+    "interrupt",
+    "KNOWN_KINDS",
     "encode_payload",
     "decode_payload",
     "payload_digest",
@@ -51,6 +55,63 @@ __all__ = [
 ]
 
 _HEADER = struct.Struct("<II")  # (length, crc32)
+
+#: Every record kind this reader version interprets. Kinds outside this set
+#: are *tolerated* (docs/journal-format.md §5): ``records()`` yields them
+#: untouched and interpreting readers (ReplayCache, executors) ignore them,
+#: so a journal written by a newer writer stays readable.
+KNOWN_KINDS = frozenset(
+    {
+        "RUN_START",
+        "NODE_START",
+        "NODE_COMMIT",
+        "NODE_REQUEUE",
+        "CHUNK_COMMIT",
+        "STREAM_EOS",
+        "CACHE_HIT",
+        "CACHE_STORE",
+        "NODE_FAIL",
+        "RUN_END",
+        "CKPT",
+        "SUSPEND",
+        "RESUME",
+        "FORK",
+        "LINEAGE",
+    }
+)
+
+
+class Interrupted(Exception):
+    """A task reached a named interrupt point without an answer in its ξ.
+
+    Raised by :func:`interrupt`; executors treat it as a *suspension
+    request*, not a failure: in-flight work drains to commit, the pending
+    frontier is journaled as a ``SUSPEND`` record, and the run returns a
+    report with ``suspended=True`` (docs/durable-workflows.md §2).
+    """
+
+    def __init__(self, name: str, payload: Any = None):
+        super().__init__(name)
+        self.name = name
+        self.payload = payload
+
+
+_MISSING = object()
+
+
+def interrupt(ctx: Context, name: str, payload: Any = None) -> Any:
+    """Named interrupt point — call from inside a task function.
+
+    If the context carries a fact under ``name`` (injected by
+    ``resume(workflow_id, inputs={name: ...})``), its value is returned and
+    the task proceeds. Otherwise the run suspends by raising
+    :class:`Interrupted`; ``payload`` rides along in the ``SUSPEND`` record
+    for the operator who will answer it.
+    """
+    value = ctx.get(name, _MISSING)
+    if value is _MISSING:
+        raise Interrupted(name, payload)
+    return value
 
 
 # --------------------------------------------------------------------------
@@ -65,6 +126,7 @@ class JournalRecord:
     kind: str  # RUN_START | NODE_START | NODE_COMMIT | NODE_REQUEUE
     #          # | CHUNK_COMMIT | STREAM_EOS (chunk-granular streams)
     #          # | CACHE_HIT | CACHE_STORE | NODE_FAIL | RUN_END | CKPT
+    #          # | SUSPEND | RESUME | FORK | LINEAGE (durable workflows)
     node_id: str = ""
     context_digest: str = ""
     input_digest: str = ""
@@ -91,17 +153,24 @@ class JournalRecord:
 
     @staticmethod
     def from_obj(o: Mapping) -> "JournalRecord":
+        """Decode one record object — forward-compatibly.
+
+        Missing fields default (a future writer may drop one) and unknown
+        keys are ignored (a future writer may add one), so a pre-upgrade
+        reader never raises on records written by a newer version — the
+        forward-compat contract of docs/journal-format.md §5.
+        """
         return JournalRecord(
-            kind=o["k"],
-            node_id=o["n"],
-            context_digest=o["c"],
-            input_digest=o["i"],
-            output_digest=o["o"],
-            payload=o["p"],
-            ref=o["r"],
-            wall_time=o["t"],
-            attempt=o["a"],
-            meta=dict(o["m"]),
+            kind=str(o.get("k", "")),
+            node_id=o.get("n", ""),
+            context_digest=o.get("c", ""),
+            input_digest=o.get("i", ""),
+            output_digest=o.get("o", ""),
+            payload=o.get("p"),
+            ref=o.get("r", ""),
+            wall_time=o.get("t", 0.0),
+            attempt=o.get("a", 0),
+            meta=dict(o.get("m") or {}),
         )
 
 
@@ -113,14 +182,25 @@ class Journal:
     benchmarks), "never" for in-memory tests.
     """
 
-    def __init__(self, path: str, sync: str = "always"):
+    def __init__(
+        self,
+        path: str,
+        sync: str = "always",
+        lineage: Optional[Mapping[str, Any]] = None,
+    ):
         assert sync in ("always", "batch", "never")
         self.path = path
         self.sync = sync
         self._lock = threading.Lock()
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._recover_tail()
+        empty = not os.path.exists(path) or os.path.getsize(path) == 0
         self._fh = open(path, "ab")
+        if lineage is not None and empty:
+            # lineage header: the FIRST record of a fresh journal names the
+            # durable identity the file belongs to (workflow_id, parent,
+            # fork point) — see docs/journal-format.md §2.5
+            self.append(JournalRecord(kind="LINEAGE", meta=dict(lineage)))
 
     # -- crash recovery ------------------------------------------------------
     def _recover_tail(self) -> None:
@@ -177,6 +257,13 @@ class Journal:
         return dict(Counter(rec.kind for rec in self.records()))
 
     def records(self) -> Iterator[JournalRecord]:
+        """Yield every committed record, in append order.
+
+        A checksum-valid frame whose body nonetheless fails to decode (e.g.
+        written by an incompatible future version) is skipped with a
+        warning, never raised — interpreting readers must stay usable on
+        journals that carry record shapes they predate (format §5).
+        """
         with open(self.path, "rb") as fh:
             data = fh.read()
         off = 0
@@ -185,8 +272,37 @@ class Journal:
             body = data[off + _HEADER.size : off + _HEADER.size + length]
             if len(body) < length or binascii.crc32(body) != crc:
                 break
-            yield JournalRecord.from_obj(decode_payload(body))
             off += _HEADER.size + length
+            try:
+                rec = JournalRecord.from_obj(decode_payload(body))
+            except Exception as exc:
+                warnings.warn(
+                    f"journal {self.path}: skipping undecodable record at "
+                    f"offset {off - _HEADER.size - length} ({exc})",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                continue
+            if rec.kind not in KNOWN_KINDS:
+                # forward-compat (format §5): a newer writer may introduce
+                # record kinds this reader predates — skip, never raise, so
+                # replay of the records we DO understand stays available
+                warnings.warn(
+                    f"journal {self.path}: skipping record of unknown kind "
+                    f"{rec.kind!r} at offset {off - _HEADER.size - length}",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                continue
+            yield rec
+
+    def lineage(self) -> Optional[Dict[str, Any]]:
+        """The lineage header (first record, if it is a ``LINEAGE``), or None."""
+        for rec in self.records():
+            if rec.kind == "LINEAGE":
+                return dict(rec.meta)
+            return None
+        return None
 
     def __enter__(self) -> "Journal":
         return self

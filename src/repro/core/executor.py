@@ -62,9 +62,9 @@ from repro.stream import (
 )
 
 from .context import Context, EMPTY_CONTEXT
-from .durable import Journal, JournalRecord, ReplayCache, payload_digest
+from .durable import Interrupted, Journal, JournalRecord, ReplayCache, payload_digest
 from .failure import RetryPolicy, StragglerWatch
-from .gateway import Gateway
+from .gateway import Gateway, TaskCancelled
 from .graph import ContextGraph, Node, UnionNode
 
 __all__ = ["WithContext", "ExecutionReport", "LocalExecutor", "ClusterExecutor"]
@@ -98,6 +98,10 @@ class ExecutionReport:
     executed: Tuple[str, ...]
     wall_s: float
     cached: Tuple[str, ...] = ()
+    suspended: bool = False  # a named interrupt point suspended the run
+    interrupt: str = ""  # name of the interrupt that suspended it
+    interrupt_node: str = ""  # node that raised the interrupt
+    frontier: Tuple[str, ...] = ()  # exec nodes still pending at suspension
 
 
 def _accepts_start(fn: Callable[..., Any]) -> bool:
@@ -351,6 +355,30 @@ class _BaseExecutor:
             digest_inputs[kwarg] = out
         return fn_inputs, digest_inputs, stream_kwarg, sdep
 
+    def _journal_suspend(
+        self,
+        suspend: Mapping[str, Interrupted],
+        frontier: Tuple[str, ...],
+    ) -> None:
+        """Journal one SUSPEND per interrupted node; the run ends WITHOUT RUN_END.
+
+        The frontier (exec nodes without a committed output) is recorded so a
+        resume can audit what remained; an unserializable interrupt payload
+        degrades to its repr rather than failing the suspension itself.
+        """
+        if self.journal is None:
+            return
+        for nid, exc in suspend.items():
+            meta: Dict[str, Any] = {"interrupt": exc.name, "frontier": list(frontier)}
+            if exc.payload is not None:
+                try:
+                    payload_digest(exc.payload)  # probes serializability
+                    meta["payload"] = exc.payload
+                except Exception:
+                    meta["payload_repr"] = repr(exc.payload)
+            self.journal.append(JournalRecord(kind="SUSPEND", node_id=nid, meta=meta))
+        self.journal.flush()
+
     def _journal_stream_start(
         self,
         nid: str,
@@ -408,14 +436,26 @@ class LocalExecutor(_BaseExecutor):
         super().__init__(**kw)
         self.max_workers = max_workers
 
-    def run(self, graph: ContextGraph) -> ExecutionReport:
-        """Execute ``graph`` on the thread pool; returns the run's report."""
+    def run(
+        self,
+        graph: ContextGraph,
+        run_meta: Optional[Mapping[str, Any]] = None,
+    ) -> ExecutionReport:
+        """Execute ``graph`` on the thread pool; returns the run's report.
+
+        ``run_meta`` is merged into the RUN_START record (e.g. a workflow id).
+        A node raising :class:`Interrupted` suspends the run: launched work
+        drains to commit, nothing new starts, SUSPEND records are journaled
+        with the pending frontier, and the report comes back with
+        ``suspended=True`` instead of an exception.
+        """
         t0 = time.time()
         levels, exec_nodes, member_to_group = graph.schedule()
         splan = plan_streams(exec_nodes)
         outputs: Dict[str, Any] = {}
         out_ctx: Dict[str, Context] = {}
         resolved: Dict[str, List[str]] = {"replayed": [], "cached": [], "executed": []}
+        suspend: Dict[str, Interrupted] = {}
         lock = threading.Lock()
 
         # dependency counting for maximal overlap (scheduling-level deps)
@@ -432,7 +472,7 @@ class LocalExecutor(_BaseExecutor):
                 JournalRecord(
                     kind="RUN_START",
                     node_id=graph.name,
-                    meta={"nodes": len(exec_nodes)},
+                    meta={"nodes": len(exec_nodes), **dict(run_meta or {})},
                 )
             )
 
@@ -536,6 +576,11 @@ class LocalExecutor(_BaseExecutor):
                             nid = futures.pop(f)
                         try:
                             f.result()  # re-raise task errors
+                        except Interrupted as exc:
+                            # a named interrupt point: suspend, don't fail —
+                            # stop launching and let in-flight work drain
+                            suspend.setdefault(nid, exc)
+                            continue
                         except (StreamCancelled, ChannelClosed) as exc:
                             # a stage stopped because the run is already
                             # doomed elsewhere; keep draining so the ROOT
@@ -549,9 +594,9 @@ class LocalExecutor(_BaseExecutor):
                             with lock:
                                 deps_left[c] -= 1
                                 ready = deps_left[c] == 0
-                            if ready:
+                            if ready and not suspend:
                                 launch(c)
-                if cascade_errors:
+                if cascade_errors and not suspend:
                     raise cascade_errors[0]  # every failure was a cascade
         except BaseException as exc:
             # stop sibling stream stages from committing past a doomed run,
@@ -564,6 +609,22 @@ class LocalExecutor(_BaseExecutor):
             if self.journal is not None:
                 self.journal.flush()
 
+        if suspend:
+            frontier = tuple(sorted(n for n in exec_nodes if n not in outputs))
+            self._journal_suspend(suspend, frontier)
+            first_nid = next(iter(suspend))
+            return ExecutionReport(
+                outputs=outputs,
+                contexts=out_ctx,
+                replayed=tuple(resolved["replayed"]),
+                executed=tuple(resolved["executed"]),
+                cached=tuple(resolved["cached"]),
+                wall_s=time.time() - t0,
+                suspended=True,
+                interrupt=suspend[first_nid].name,
+                interrupt_node=first_nid,
+                frontier=frontier,
+            )
         if self.journal is not None:
             self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
             self.journal.flush()
@@ -748,6 +809,8 @@ class LocalExecutor(_BaseExecutor):
                     )
                 value = node.fn(ctx, **fn_inputs)
                 break
+            except Interrupted:
+                raise  # suspension request, not a failure: no retry, no NODE_FAIL
             except Exception:
                 attempt += 1
                 if attempt > retry_limit:
@@ -896,8 +959,21 @@ class ClusterExecutor(_BaseExecutor):
         self.stream_retries = stream_retries
         self.straggler = StragglerWatch()
 
-    def run(self, graph: ContextGraph) -> ExecutionReport:
-        """Execute ``graph`` through the gateway; returns the run's report."""
+    def run(
+        self,
+        graph: ContextGraph,
+        run_meta: Optional[Mapping[str, Any]] = None,
+    ) -> ExecutionReport:
+        """Execute ``graph`` through the gateway; returns the run's report.
+
+        ``run_meta`` is merged into the RUN_START record (e.g. a workflow id).
+        An :class:`Interrupted` raised by an inline callable — or answered by
+        a worker as an ``"interrupt"`` status — suspends the run as a clean
+        drain: queued dispatches of this run are cancelled at the gateway
+        (:class:`TaskCancelled` is benign — those nodes return to the pending
+        frontier), in-flight work commits, SUSPEND records are journaled, and
+        the gateway books the run as suspended.
+        """
         t0 = time.time()
         _levels, exec_nodes, member_to_group = graph.schedule()  # validates DAG
         splan = plan_streams(exec_nodes)
@@ -907,6 +983,7 @@ class ClusterExecutor(_BaseExecutor):
         outputs: Dict[str, Any] = {}
         out_ctx: Dict[str, Context] = {}
         resolved: Dict[str, List[str]] = {"replayed": [], "cached": [], "executed": []}
+        suspend: Dict[str, Interrupted] = {}
         replayed, cached, executed = (
             resolved["replayed"],
             resolved["cached"],
@@ -926,7 +1003,7 @@ class ClusterExecutor(_BaseExecutor):
                 JournalRecord(
                     kind="RUN_START",
                     node_id=graph.name,
-                    meta={"nodes": len(exec_nodes)},
+                    meta={"nodes": len(exec_nodes), **dict(run_meta or {})},
                 )
             )
 
@@ -935,6 +1012,17 @@ class ClusterExecutor(_BaseExecutor):
             with cv:
                 completions.append((nid, fut))
                 cv.notify()
+
+        def request_suspend(nid: str, exc: Interrupted) -> None:
+            # first interrupt wins: flush this run's queued dispatches so the
+            # drain is bounded, and book the suspension at the gateway
+            with cv:
+                first = not suspend
+                suspend.setdefault(nid, exc)
+                cv.notify()
+            if first:
+                self.gateway.cancel_run(run_token)
+                self.gateway.mark_suspended(run_token, exc.name)
 
         def on_requeue(req: Any, reason: str) -> None:
             # gateway requeued one of our requests (eviction / worker failure);
@@ -1076,6 +1164,9 @@ class ClusterExecutor(_BaseExecutor):
                     try:
                         value = node.fn(ctx, **fn_inputs)
                         break
+                    except Interrupted as exc:
+                        request_suspend(nid, exc)
+                        return
                     except Exception:
                         attempt += 1
                         if attempt > node.retry_limit(0):
@@ -1154,7 +1245,7 @@ class ClusterExecutor(_BaseExecutor):
         try:
             total = len(exec_nodes)
             while done_count() < total:
-                while True:
+                while not suspend:  # suspending: park ready nodes, drain only
                     with cv:
                         nid = ready.popleft() if ready else None
                     if nid is None:
@@ -1163,8 +1254,17 @@ class ClusterExecutor(_BaseExecutor):
                 if done_count() >= total:
                     break
                 with cv:
-                    if not completions and not ready:
+                    if (
+                        suspend
+                        and not inflight
+                        and not stream_running[0]
+                        and not completions
+                    ):
+                        break  # clean drain complete: everything launched committed
+                    if not completions and (suspend or not ready):
                         if not inflight and not stream_running[0]:
+                            if suspend:
+                                break
                             if cascade_errors:
                                 raise cascade_errors[0]  # all roots cascaded
                             left = total - done_count()
@@ -1177,7 +1277,7 @@ class ClusterExecutor(_BaseExecutor):
                     while completions:
                         drained.append(completions.popleft())
                 if not drained:
-                    if self.speculative:
+                    if self.speculative and not suspend:
                         speculate()
                     continue
                 for nid, fut in drained:
@@ -1200,6 +1300,24 @@ class ClusterExecutor(_BaseExecutor):
                         continue  # duplicate of an already-committed node
                     try:
                         value = fut.result()
+                    except Interrupted as exc:
+                        # a worker reached a named interrupt point: suspend the
+                        # run; any other copies of this node become stale
+                        with cv:
+                            inflight.pop(nid, None)
+                        self.straggler.finished(str(st.node.fn), nid)
+                        request_suspend(nid, exc)
+                        continue
+                    except TaskCancelled:
+                        # our own cancel_run flushed this queued dispatch; the
+                        # node returns to the pending frontier. A still-running
+                        # copy (speculation) is left to commit normally.
+                        with cv:
+                            st.futures.remove(fut)
+                            if not st.futures:
+                                inflight.pop(nid, None)
+                                self.straggler.finished(str(st.node.fn), nid)
+                        continue
                     except Exception:
                         with cv:
                             st.futures.remove(fut)
@@ -1235,7 +1353,10 @@ class ClusterExecutor(_BaseExecutor):
                         nid, st.cache_key, st.ctx_digest, st.input_digest, value
                     )
                     finish(nid, value, st.ctx, "executed")
-            if self.journal is not None:
+            if suspend:
+                frontier = tuple(sorted(n for n in exec_nodes if n not in outputs))
+                self._journal_suspend(suspend, frontier)
+            elif self.journal is not None:
                 self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
                 self.journal.flush()
         except BaseException as exc:
@@ -1250,6 +1371,20 @@ class ClusterExecutor(_BaseExecutor):
                 self.gateway.on_requeue = prev_requeue
             with cv:
                 inflight.clear()  # keep a dead chained handler's closure cheap
+        if suspend:
+            first_nid = next(iter(suspend))
+            return ExecutionReport(
+                outputs=outputs,
+                contexts=out_ctx,
+                replayed=tuple(replayed),
+                executed=tuple(executed),
+                cached=tuple(cached),
+                wall_s=time.time() - t0,
+                suspended=True,
+                interrupt=suspend[first_nid].name,
+                interrupt_node=first_nid,
+                frontier=tuple(sorted(n for n in exec_nodes if n not in outputs)),
+            )
         return ExecutionReport(
             outputs=outputs,
             contexts=out_ctx,

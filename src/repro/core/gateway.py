@@ -27,11 +27,13 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.wire import PayloadDecodeError, unwrap_digested
 
 from .context import Context, EMPTY_CONTEXT
+from .durable import Interrupted
 
 __all__ = [
     "TaskRequest",
     "WorkerHandle",
     "AllocationError",
+    "TaskCancelled",
     "Gateway",
     "round_robin",
     "least_loaded",
@@ -42,6 +44,14 @@ __all__ = [
 
 class AllocationError(RuntimeError):
     """No worker could (ever) take the request — retries/backoffs exhausted."""
+
+
+class TaskCancelled(RuntimeError):
+    """A queued request was withdrawn by ``cancel_run`` before dispatch.
+
+    Benign by contract: the submitting executor treats it as "this node
+    returns to the pending frontier", never as a task failure.
+    """
 
 
 @dataclass
@@ -194,9 +204,11 @@ class Gateway:
             "requeued": 0,
             "evicted": 0,
             "corrupt": 0,
+            "cancelled": 0,
             "alloc_ns_total": 0,
             "alloc_calls": 0,
         }
+        self.suspended_runs: Dict[str, Dict[str, Any]] = {}  # run token → info
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "Gateway":
@@ -275,6 +287,42 @@ class Gateway:
     ) -> List[Future]:
         """Submit one task per input mapping; returns the Futures in order."""
         return [self.submit(task_name, ctx, inp, **kw) for inp in inputs_list]
+
+    # -- run-level control (suspension) ---------------------------------------
+    def cancel_run(self, run_token: str) -> int:
+        """Withdraw every still-QUEUED request whose ``meta["run"]`` matches.
+
+        Requests already handed to a worker are left to finish (a suspend is
+        a clean drain, not an abort). Each withdrawn future fails with
+        :class:`TaskCancelled`; returns the number withdrawn.
+        """
+        cancelled: List[TaskRequest] = []
+        with self._cv:
+            kept = deque()
+            while self._queue:
+                req = self._queue.popleft()
+                (cancelled if req.meta.get("run") == run_token else kept).append(req)
+            self._queue = kept
+            kept_silo = []
+            for entry in self._silo:
+                if entry[2].meta.get("run") == run_token:
+                    cancelled.append(entry[2])
+                else:
+                    kept_silo.append(entry)
+            heapq.heapify(kept_silo)
+            self._silo = kept_silo
+        for req in cancelled:
+            self.metrics["cancelled"] += 1
+            self._fail(req, TaskCancelled(f"run {run_token} suspended"))
+        return len(cancelled)
+
+    def mark_suspended(self, run_token: str, interrupt: str) -> None:
+        """Book a run as suspended at a named interrupt (shows up in stats())."""
+        with self._track_lock:
+            self.suspended_runs[run_token] = {
+                "interrupt": interrupt,
+                "since": time.time(),
+            }
 
     # -- internals ------------------------------------------------------------
     def _pop(self, timeout: float = 0.1) -> Optional[TaskRequest]:
@@ -475,6 +523,16 @@ class Gateway:
             # consumer drives it and handles mid-stream failures by
             # re-dispatching from its last durable offset (streaming.md §5)
             self._resolve(req, result["stream"])
+        elif status == "interrupt":
+            # the task reached a named interrupt point: surface the typed
+            # suspension request to the submitter — never retried, never
+            # charged to the failure budget
+            if not owned:
+                return
+            self._fail(
+                req,
+                Interrupted(str(result.get("name", "")), result.get("payload")),
+            )
         elif status == "rejected":
             if not owned:
                 return  # a requeued copy owns the outcome now
@@ -572,10 +630,13 @@ class Gateway:
                     "last_seen": h.last_seen,
                     "held_contexts": len(h.held_contexts),
                 }
+        with self._track_lock:
+            suspended = {k: dict(v) for k, v in self.suspended_runs.items()}
         return {
             "workers": workers,
             "queue_depth": queue_depth,
             "silo_depth": silo_depth,
+            "suspended_runs": suspended,
             "live_workers": sum(1 for w in workers.values() if w["live"] and w["app_live"]),
             "metrics": dict(self.metrics),
             "mean_alloc_us": self.mean_alloc_us(),

@@ -158,6 +158,14 @@ class Node:
     the executor's :class:`~repro.core.failure.RetryPolicy`; an explicit
     integer — including 0 — is exact. Stateful tasks whose inputs are
     consumed by execution (donated device buffers) must set ``retries=0``.
+
+    ``interrupt`` declares a *named interrupt point*: the node's fn may call
+    :func:`repro.core.interrupt` with that name to suspend the run until
+    ``resume(workflow_id, inputs={name: ...})`` supplies an answer
+    (docs/durable-workflows.md). Declaration is advisory for plain
+    executors (any node may raise ``Interrupted``) but validated here:
+    interrupt names must be unique per graph and are rejected on stream and
+    volatile nodes, whose commit protocols cannot suspend mid-unit.
     """
 
     id: str
@@ -170,6 +178,7 @@ class Node:
     timeout_s: Optional[float] = None
     stream: str = ""  # "" | "source" | "map" | "reduce"
     volatile: bool = False  # digest-only commits, re-execute-and-verify replay
+    interrupt: str = ""  # named interrupt point this node may suspend at
 
     def kwarg_for(self, dep_id: str) -> str:
         """Kwarg name a dependency's output is injected under (alias-aware)."""
@@ -318,6 +327,7 @@ class ContextGraph:
         timeout_s: Optional[float] = None,
         stream: str = "",
         volatile: bool = False,
+        interrupt: str = "",
     ) -> Node:
         if id in self.nodes:
             raise ValueError(f"duplicate node id {id!r}")
@@ -326,6 +336,11 @@ class ContextGraph:
         if volatile and stream:
             raise ValueError(f"node {id!r}: stream stages commit at chunk "
                              "granularity and cannot be volatile")
+        if interrupt and (stream or volatile):
+            raise ValueError(
+                f"node {id!r}: interrupt points are only valid on plain batch "
+                "nodes — stream and volatile commit protocols cannot suspend"
+            )
         node = Node(
             id=id,
             fn=fn,
@@ -337,6 +352,7 @@ class ContextGraph:
             timeout_s=timeout_s,
             stream=stream,
             volatile=volatile,
+            interrupt=interrupt,
         )
         self.nodes[id] = node
         return node
@@ -375,6 +391,27 @@ class ContextGraph:
                     raise KeyError(f"node {n.id!r} depends on unknown node {d!r}")
             self.stream_dep_of(n)  # raises on malformed stream topology
         self._check_stream_wait_cycles()
+        self.interrupt_points()  # raises on duplicate interrupt names
+
+    def interrupt_points(self) -> Dict[str, str]:
+        """Declared interrupt points: ``{interrupt name: node id}``.
+
+        Names must be unique — ``resume(inputs={name: ...})`` addresses an
+        interrupt by name alone, so two nodes sharing one would make the
+        injection ambiguous.
+        """
+        points: Dict[str, str] = {}
+        for n in self.nodes.values():
+            if not n.interrupt:
+                continue
+            other = points.get(n.interrupt)
+            if other is not None:
+                raise ValueError(
+                    f"duplicate interrupt point {n.interrupt!r}: declared by "
+                    f"both {other!r} and {n.id!r}"
+                )
+            points[n.interrupt] = n.id
+        return points
 
     def _check_stream_wait_cycles(self) -> None:
         """Reject topologies that would deadlock at runtime.

@@ -38,6 +38,7 @@ from repro.wire import (
 )
 
 from .context import Context
+from .durable import Interrupted, payload_digest
 from .heartbeat import HeartbeatServer
 
 __all__ = [
@@ -139,6 +140,22 @@ def _execute(
         return {
             "status": "ok",
             "output": unwrap_digested(out),
+            "wall_s": time.monotonic() - t0,
+        }
+    except Interrupted as exc:
+        # a named interrupt point: NOT a failure — the submitter suspends.
+        # Unserializable payloads degrade to repr so the status crosses
+        # any transport.
+        payload = exc.payload
+        if payload is not None:
+            try:
+                payload_digest(payload)  # probes serializability
+            except Exception:
+                payload = repr(payload)
+        return {
+            "status": "interrupt",
+            "name": exc.name,
+            "payload": payload,
             "wall_s": time.monotonic() - t0,
         }
     except Exception as exc:  # application-level failure: report, stay alive

@@ -1,0 +1,48 @@
+"""repro.workflow — interactive durability on top of the journal stack.
+
+Named interrupt points suspend a run (clean drain + journaled ``SUSPEND``);
+``resume(workflow_id, inputs=...)`` answers the interrupt durably and
+continues from the suspended frontier with the committed prefix replayed
+for free; ``fork(workflow_id, at=...)`` branches a child workflow whose
+shared history is served by the content-addressed cache.
+
+Usage::
+
+    from repro.workflow import WorkflowRegistry, WorkflowRunner
+    from repro.core import interrupt
+
+    registry = WorkflowRegistry()
+
+    @registry.define("order")
+    def order(args):
+        g = ContextGraph()
+        g.add("total", compute_total)
+        g.add("approved", lambda ctx, total: interrupt(ctx, "approve"),
+              deps=["total"], interrupt="approve")
+        g.add("ship", ship_it, deps=["approved"])
+        return g
+
+    runner = WorkflowRunner(registry, "runs/workflows")
+    res = runner.run("order")                 # → suspended at "approve"
+    res = runner.resume(res.workflow_id,      # possibly days later,
+                        inputs={"approve": True})  # in a fresh process
+
+Semantics, journal record formats, and the fork/cache contract are
+specified in docs/durable-workflows.md.
+"""
+
+from repro.core.durable import Interrupted, interrupt
+
+from .api import WorkflowError, WorkflowNotSuspended, WorkflowResult, WorkflowRunner
+from .registry import WorkflowRegistry, WorkflowStore
+
+__all__ = [
+    "Interrupted",
+    "interrupt",
+    "WorkflowError",
+    "WorkflowNotSuspended",
+    "WorkflowRegistry",
+    "WorkflowResult",
+    "WorkflowRunner",
+    "WorkflowStore",
+]

@@ -1,0 +1,338 @@
+"""Durable workflows: interrupt, suspend/resume, fork-from-checkpoint.
+
+The workflow layer gives a graph a *durable identity* — a ``workflow_id``
+that outlives any single run — on top of the journal/executor/cache stack:
+
+- a node declared with ``interrupt="approve"`` calls
+  ``repro.core.interrupt(ctx, "approve")``; when the fact is absent the run
+  *suspends* (a clean drain + journaled ``SUSPEND``, not an error),
+- ``resume(workflow_id, inputs={...})`` journals a ``RESUME`` carrying the
+  answers, injects them as Ψ facts on the interrupted node, and re-runs:
+  the committed prefix replays for free and execution continues from the
+  suspended frontier,
+- ``fork(workflow_id, at=record_seq)`` branches a child workflow that
+  shares the parent's committed prefix through the content-addressed cache
+  (post-``at`` cache entries are masked so divergent history re-executes).
+
+Each incarnation of a workflow is a separate *run* (``RUN_START`` …) in the
+same journal; the ``workflow_id`` lives in the journal's ``LINEAGE`` header
+and in the store's ``meta.json``. See docs/durable-workflows.md.
+"""
+
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+from repro.cache import ResultCache
+from repro.core.durable import Journal, JournalRecord
+from repro.core.executor import ExecutionReport, LocalExecutor
+from repro.core.graph import ContextGraph
+
+from .registry import WorkflowRegistry, WorkflowStore
+
+__all__ = [
+    "WorkflowError",
+    "WorkflowNotSuspended",
+    "WorkflowResult",
+    "WorkflowRunner",
+]
+
+
+class WorkflowError(RuntimeError):
+    """Typed failure from the workflow layer (unknown id, bad fork, ...)."""
+
+
+class WorkflowNotSuspended(WorkflowError):
+    """``resume(inputs=...)`` on a workflow with no suspended interrupt."""
+
+
+@dataclass
+class WorkflowResult:
+    """Outcome of one workflow incarnation (run / resume / fork)."""
+
+    workflow_id: str
+    status: str  # "completed" | "suspended"
+    report: ExecutionReport
+    interrupt: str = ""  # set when suspended: the interrupt's name
+    node: str = ""  # set when suspended: the node that raised it
+
+    @property
+    def suspended(self) -> bool:
+        """True iff this incarnation ended at an interrupt point."""
+        return self.status == "suspended"
+
+    @property
+    def outputs(self) -> Dict[str, Any]:
+        """The run's node outputs (partial when suspended)."""
+        return self.report.outputs
+
+
+class WorkflowRunner:
+    """Run, resume, and fork named workflows against a durable store.
+
+    ``executor_factory(journal=..., cache=...)`` lets callers swap in a
+    :class:`~repro.core.ClusterExecutor` (or anything with the same ``run``
+    surface); the default is a :class:`LocalExecutor`. All workflows of one
+    runner share a single content-addressed ResultCache, which is what makes
+    fork's shared-prefix reuse free.
+    """
+
+    def __init__(
+        self,
+        registry: WorkflowRegistry,
+        base_dir: str,
+        *,
+        executor_factory: Optional[Callable[..., Any]] = None,
+        journal_sync: str = "always",
+        max_workers: int = 8,
+        cache: Optional[ResultCache] = None,
+    ):
+        self.registry = registry
+        self.store = WorkflowStore(base_dir)
+        self.executor_factory = executor_factory
+        self.journal_sync = journal_sync
+        self.max_workers = max_workers
+        self.cache = cache if cache is not None else ResultCache(self.store.cache_root())
+
+    # -- public API ----------------------------------------------------------
+    def run(
+        self,
+        workflow: str,
+        args: Optional[Mapping[str, Any]] = None,
+        workflow_id: Optional[str] = None,
+    ) -> WorkflowResult:
+        """Start a new durable workflow; returns when it completes or suspends."""
+        wid = workflow_id or f"{workflow}-{uuid.uuid4().hex[:8]}"
+        if self.store.exists(wid):
+            raise WorkflowError(
+                f"workflow_id {wid!r} already exists; use resume() to continue it"
+            )
+        self.store.create(
+            wid,
+            {
+                "workflow": workflow,
+                "args": dict(args) if args else None,
+                "status": "running",
+            },
+        )
+        graph = self._graph(workflow, args)
+        with self._journal(wid, {"workflow_id": wid, "workflow": workflow}) as j:
+            self._apply_resumes(graph, j)
+            report = self._execute(graph, j, self.cache, wid)
+        return self._finish(wid, report)
+
+    def resume(
+        self,
+        workflow_id: str,
+        inputs: Optional[Mapping[str, Any]] = None,
+    ) -> WorkflowResult:
+        """Continue a suspended (or crashed) workflow in-place.
+
+        ``inputs`` answer the *latest* journaled interrupt: they are appended
+        as a durable ``RESUME`` record and injected as Ψ facts on the
+        interrupted node, so ``interrupt(ctx, name)`` finds them and the node
+        proceeds. The committed prefix is replayed from the journal — zero
+        re-execution. Without ``inputs`` the workflow simply re-runs (useful
+        after a crash that lost no interrupt: it drains to the same suspend).
+        """
+        meta = self.store.meta(workflow_id)
+        graph = self._graph(meta["workflow"], meta.get("args"))
+        with self._journal(workflow_id, None) as j:
+            node, name = self._latest_suspend(j)
+            if inputs:
+                if node is None:
+                    raise WorkflowNotSuspended(
+                        f"workflow {workflow_id!r} has no journaled SUSPEND to answer"
+                    )
+                j.append(
+                    JournalRecord(
+                        kind="RESUME",
+                        node_id=node,
+                        meta={"interrupt": name, "inputs": dict(inputs)},
+                    )
+                )
+                j.flush()
+            self._apply_resumes(graph, j)
+            report = self._execute(graph, j, self.cache, workflow_id)
+        return self._finish(workflow_id, report)
+
+    def fork(
+        self,
+        workflow_id: str,
+        at: Optional[int] = None,
+        inputs: Optional[Mapping[str, Any]] = None,
+        node: Optional[str] = None,
+        fork_id: Optional[str] = None,
+    ) -> WorkflowResult:
+        """Branch a child workflow from a committed prefix of the parent.
+
+        ``at`` is a record sequence number in the parent journal: history
+        journaled *before* ``at`` is shared (served from the content-addressed
+        cache — never re-executed); everything at or after ``at`` is masked
+        from the cache so the child re-executes it. ``at=None`` shares the
+        whole committed history. ``inputs`` (with ``node``, or defaulting to
+        the parent's latest suspended node) seed the divergence as Ψ facts,
+        journaled in the child as a ``RESUME`` so child re-runs are durable.
+        """
+        meta = self.store.meta(workflow_id)
+        child = fork_id or f"{workflow_id}-fork-{uuid.uuid4().hex[:6]}"
+        if self.store.exists(child):
+            raise WorkflowError(f"fork target {child!r} already exists")
+        with self._journal(workflow_id, None) as parent_j:
+            records = list(parent_j.records())
+            suspend_node, _suspend_name = self._latest_suspend_from(records)
+            # default divergence target: the latest interrupt decision point,
+            # whether or not the parent already answered it
+            decision_node = suspend_node
+            for rec in records:
+                if rec.kind == "SUSPEND":
+                    decision_node = rec.node_id
+            deny = set()
+            if at is not None:
+                if not 0 <= at <= len(records):
+                    raise WorkflowError(
+                        f"fork point at={at} outside journal (0..{len(records)})"
+                    )
+                for rec in records[at:]:
+                    if rec.kind in ("CACHE_STORE", "CACHE_HIT"):
+                        key = rec.meta.get("key") or rec.meta.get("cache")
+                        if key:
+                            deny.add(key)
+            parent_j.append(
+                JournalRecord(kind="FORK", node_id=suspend_node or "", meta={"child": child, "at": at})
+            )
+            parent_j.flush()
+        self.store.create(
+            child,
+            {
+                "workflow": meta["workflow"],
+                "args": meta.get("args"),
+                "status": "running",
+                "parent": workflow_id,
+                "forked_at": at,
+            },
+        )
+        graph = self._graph(meta["workflow"], meta.get("args"))
+        lineage = {
+            "workflow_id": child,
+            "workflow": meta["workflow"],
+            "parent": workflow_id,
+            "forked_at": at,
+        }
+        with self._journal(child, lineage) as j:
+            # carry the parent's pre-fork interrupt answers into the child
+            # journal, so the child is self-contained for its own re-runs
+            for i, rec in enumerate(records):
+                if rec.kind != "RESUME":
+                    continue
+                if at is not None and i >= at:
+                    continue
+                j.append(
+                    JournalRecord(kind="RESUME", node_id=rec.node_id, meta=dict(rec.meta))
+                )
+            if inputs:
+                target = node or decision_node
+                if target is None:
+                    raise WorkflowError(
+                        "fork(inputs=...) needs node= when the parent journal "
+                        "has no interrupt decision point to target"
+                    )
+                if target not in graph.nodes:
+                    raise WorkflowError(f"fork target node {target!r} not in graph")
+                j.append(
+                    JournalRecord(
+                        kind="RESUME",
+                        node_id=target,
+                        meta={
+                            "interrupt": graph.nodes[target].interrupt,
+                            "inputs": dict(inputs),
+                        },
+                    )
+                )
+            j.flush()
+            self._apply_resumes(graph, j)
+            cache = self.cache.restricted(deny) if deny else self.cache
+            report = self._execute(graph, j, cache, child)
+        return self._finish(child, report)
+
+    def status(self, workflow_id: str) -> Dict[str, Any]:
+        """The workflow's meta plus its pending interrupt (if suspended)."""
+        meta = self.store.meta(workflow_id)
+        with Journal(self.store.journal_path(workflow_id), sync="never") as j:
+            node, name = self._latest_suspend(j)
+        meta["pending_interrupt"] = (
+            {"node": node, "interrupt": name} if meta.get("status") == "suspended" and node else None
+        )
+        return meta
+
+    # -- internals -----------------------------------------------------------
+    def _graph(self, workflow: str, args: Optional[Mapping[str, Any]]) -> ContextGraph:
+        graph = self.registry.get(workflow)(dict(args) if args else None)
+        graph.validate()
+        return graph
+
+    def _journal(self, workflow_id: str, lineage: Optional[Mapping[str, Any]]) -> Journal:
+        return Journal(
+            self.store.journal_path(workflow_id),
+            sync=self.journal_sync,
+            lineage=lineage,
+        )
+
+    def _execute(
+        self,
+        graph: ContextGraph,
+        journal: Journal,
+        cache: Any,
+        workflow_id: str,
+    ) -> ExecutionReport:
+        if self.executor_factory is not None:
+            ex = self.executor_factory(journal=journal, cache=cache)
+        else:
+            ex = LocalExecutor(max_workers=self.max_workers, journal=journal, cache=cache)
+        return ex.run(graph, run_meta={"workflow": workflow_id})
+
+    @staticmethod
+    def _apply_resumes(graph: ContextGraph, journal: Journal) -> None:
+        # the journal is the source of truth for interrupt answers: re-apply
+        # every RESUME in order so any incarnation sees every answer so far
+        for rec in journal.records():
+            if rec.kind != "RESUME":
+                continue
+            nid = rec.node_id
+            inputs = rec.meta.get("inputs") or {}
+            if nid in graph.nodes and inputs:
+                n = graph.nodes[nid]
+                n.data = {**dict(n.data), **inputs}
+
+    @staticmethod
+    def _latest_suspend_from(records) -> Tuple[Optional[str], str]:
+        node, name = None, ""
+        for rec in records:
+            if rec.kind == "SUSPEND":
+                node, name = rec.node_id, str(rec.meta.get("interrupt", ""))
+            elif rec.kind == "RESUME" and rec.node_id == node:
+                node, name = None, ""  # already answered
+        return node, name
+
+    def _latest_suspend(self, journal: Journal) -> Tuple[Optional[str], str]:
+        return self._latest_suspend_from(list(journal.records()))
+
+    def _finish(self, workflow_id: str, report: ExecutionReport) -> WorkflowResult:
+        if report.suspended:
+            self.store.update(
+                workflow_id,
+                status="suspended",
+                interrupt=report.interrupt,
+                interrupt_node=report.interrupt_node,
+            )
+            return WorkflowResult(
+                workflow_id=workflow_id,
+                status="suspended",
+                report=report,
+                interrupt=report.interrupt,
+                node=report.interrupt_node,
+            )
+        self.store.update(workflow_id, status="completed", interrupt=None, interrupt_node=None)
+        return WorkflowResult(workflow_id=workflow_id, status="completed", report=report)

@@ -1,0 +1,123 @@
+"""Workflow registry and durable per-workflow store.
+
+A *workflow* is a named graph factory: ``factory(args) -> ContextGraph``.
+The factory must rebuild the same graph for the same ``args`` in every
+process incarnation — resume and fork re-create the graph from the factory
+and rely on structural fn digests plus the journal to skip committed work.
+
+The store owns the on-disk layout::
+
+    <base_dir>/
+      .cache/                 shared cross-run ResultCache (all workflows)
+      <workflow_id>/
+        journal.wal           the workflow's durable journal
+        meta.json             {"workflow", "args", "status", "parent", ...}
+
+``meta.json`` is published atomically (tmp + rename) so a concurrent reader
+never sees a torn document.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+from repro.cache import atomic_write_bytes
+from repro.core.graph import ContextGraph
+
+__all__ = ["WorkflowRegistry", "WorkflowStore"]
+
+GraphFactory = Callable[[Optional[Mapping[str, Any]]], ContextGraph]
+
+
+class WorkflowRegistry:
+    """name → graph factory. Weakly opinionated: any callable registers."""
+
+    def __init__(self) -> None:
+        self._factories: Dict[str, GraphFactory] = {}
+
+    def register(self, name: str, factory: GraphFactory) -> None:
+        """Register ``factory`` under ``name`` (last registration wins)."""
+        self._factories[name] = factory
+
+    def define(self, name: str):
+        """Decorator form of :meth:`register`: ``@registry.define("order")``."""
+
+        def wrap(factory: GraphFactory) -> GraphFactory:
+            self.register(name, factory)
+            return factory
+
+        return wrap
+
+    def get(self, name: str) -> GraphFactory:
+        """The factory registered under ``name``; KeyError if unknown."""
+        if name not in self._factories:
+            raise KeyError(f"unknown workflow {name!r}")
+        return self._factories[name]
+
+    def names(self) -> List[str]:
+        """Sorted names of every registered workflow."""
+        return sorted(self._factories)
+
+
+class WorkflowStore:
+    """Filesystem layout + atomic meta.json bookkeeping for workflows."""
+
+    def __init__(self, base_dir: str) -> None:
+        self.base_dir = base_dir
+        os.makedirs(base_dir, exist_ok=True)
+
+    # -- paths ---------------------------------------------------------------
+    def dir_for(self, workflow_id: str) -> str:
+        """The workflow's own directory under the store root."""
+        return os.path.join(self.base_dir, workflow_id)
+
+    def journal_path(self, workflow_id: str) -> str:
+        """Path of the workflow's durable journal."""
+        return os.path.join(self.dir_for(workflow_id), "journal.wal")
+
+    def meta_path(self, workflow_id: str) -> str:
+        """Path of the workflow's meta.json document."""
+        return os.path.join(self.dir_for(workflow_id), "meta.json")
+
+    def cache_root(self) -> str:
+        """Root of the ResultCache shared by every workflow in this store."""
+        return os.path.join(self.base_dir, ".cache")
+
+    # -- meta bookkeeping ----------------------------------------------------
+    def exists(self, workflow_id: str) -> bool:
+        """True iff the workflow has been created in this store."""
+        return os.path.exists(self.meta_path(workflow_id))
+
+    def create(self, workflow_id: str, meta: Mapping[str, Any]) -> None:
+        """Create the workflow directory and publish its initial meta."""
+        os.makedirs(self.dir_for(workflow_id), exist_ok=True)
+        self._write_meta(workflow_id, dict(meta))
+
+    def meta(self, workflow_id: str) -> Dict[str, Any]:
+        """The workflow's current meta document; KeyError if unknown."""
+        path = self.meta_path(workflow_id)
+        if not os.path.exists(path):
+            raise KeyError(f"unknown workflow_id {workflow_id!r}")
+        with open(path, "rb") as fh:
+            return json.loads(fh.read().decode("utf-8"))
+
+    def update(self, workflow_id: str, **fields: Any) -> Dict[str, Any]:
+        """Merge ``fields`` into the meta document and republish it."""
+        meta = self.meta(workflow_id)
+        meta.update(fields)
+        self._write_meta(workflow_id, meta)
+        return meta
+
+    def list(self) -> List[str]:
+        """Sorted ids of every workflow in the store."""
+        out = []
+        for name in os.listdir(self.base_dir):
+            if os.path.exists(self.meta_path(name)):
+                out.append(name)
+        return sorted(out)
+
+    def _write_meta(self, workflow_id: str, meta: Mapping[str, Any]) -> None:
+        body = json.dumps(meta, indent=2, sort_keys=True, default=str)
+        atomic_write_bytes(self.meta_path(workflow_id), body.encode("utf-8"))

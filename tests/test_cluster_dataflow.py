@@ -14,10 +14,11 @@ import inspect
 import threading
 import time
 
+from _faults import faults  # noqa: F401 — fixture
+
 from repro.core import (
     ClusterExecutor,
     ContextGraph,
-    FlakyWorker,
     Gateway,
     InProcWorker,
     Journal,
@@ -73,7 +74,7 @@ def test_cluster_wait_path_has_no_sleep_polling():
     assert "time.sleep" not in src  # completions arrive via Condition.wait
 
 
-def test_worker_killed_mid_graph_run_completes(tmp_path):
+def test_worker_killed_mid_graph_run_completes(tmp_path, faults):
     """Fast-crash death: the first task landing on w0 kills it mid-flight."""
     reg = TaskRegistry()
 
@@ -82,7 +83,7 @@ def test_worker_killed_mid_graph_run_completes(tmp_path):
         time.sleep(0.005)
         return sum(v for v in kw.values() if isinstance(v, int)) + 1
 
-    flaky = FlakyWorker("w0", reg, kill_after_starts=1)
+    flaky = faults.flaky_worker("w0", reg, after=1)
     workers = [flaky, InProcWorker("w1", reg), InProcWorker("w2", reg)]
     g = ContextGraph(name="kill-mid-run")
     for i in range(8):
@@ -106,7 +107,7 @@ def test_worker_killed_mid_graph_run_completes(tmp_path):
         assert kinds["RUN_END"] == 1
 
 
-def test_hung_worker_recovered_by_heartbeat_eviction():
+def test_hung_worker_recovered_by_heartbeat_eviction(faults):
     """Silent-partition death: the task hangs, only the heartbeat can tell."""
     reg = TaskRegistry()
 
@@ -115,7 +116,7 @@ def test_hung_worker_recovered_by_heartbeat_eviction():
         time.sleep(0.005)
         return 1
 
-    flaky = FlakyWorker("w0", reg, kill_after_starts=1, mode="hang", hang_timeout_s=5.0)
+    flaky = faults.flaky_worker("w0", reg, after=1, mode="hang", hang_timeout_s=5.0)
     workers = [flaky, InProcWorker("w1", reg)]
     g = ContextGraph(name="hang-recovery")
     for i in range(6):
@@ -127,7 +128,7 @@ def test_hung_worker_recovered_by_heartbeat_eviction():
     assert gw.metrics["evicted"] >= 1  # recovery came from the heartbeat path
 
 
-def test_failure_scarred_journal_replays_clean(tmp_path):
+def test_failure_scarred_journal_replays_clean(tmp_path, faults):
     """A run that survived a worker death leaves a fully replayable journal."""
     reg = TaskRegistry()
 
@@ -141,7 +142,7 @@ def test_failure_scarred_journal_replays_clean(tmp_path):
         g.add(f"b{i}", "work", deps=[f"a{i}"])
     path = str(tmp_path / "scarred.wal")
 
-    flaky = FlakyWorker("w0", reg, kill_after_starts=1)
+    flaky = faults.flaky_worker("w0", reg, after=1)
     workers = [flaky, InProcWorker("w1", reg)]
     with Journal(path, sync="batch") as j:
         with Gateway(workers, heartbeat_interval_s=0.05) as gw:

@@ -7,6 +7,7 @@ functions of (params, step, shard), never of the worker or the schedule.
 """
 
 import pytest
+from _faults import faults  # noqa: F401 — fixture
 
 from repro.configs import get_config, smoke_variant
 from repro.core import FlakyWorker, InProcWorker, Journal
@@ -91,18 +92,15 @@ def test_worker_killed_mid_round_converges_bit_identical(tmp_path, small_cfg):
     assert kinds.get("NODE_REQUEUE", 0) >= 1  # the orphaned shard was absorbed
 
 
-def test_run_killed_mid_round_resumes_bit_identical(tmp_path, small_cfg):
+def test_run_killed_mid_round_resumes_bit_identical(tmp_path, small_cfg, faults):
     ref_digest, _ = _reference(small_cfg, tmp_path)
 
     run = tmp_path / "crash"
     tr1 = DistributedTrainer(small_cfg, _tc(run))
     orig = tr1.registry.get("grad_shard")
-
-    def bomb(ctx, sync):
-        if int(sync["step"]) == 2:
-            raise RuntimeError("injected mid-round crash")
-        return orig(ctx, sync)
-
+    # pre-commit kill point via the shared fault harness: the shard task
+    # dies at step 2 before its result can commit
+    bomb = faults.fail_call(orig, when=lambda ctx, sync: int(sync["step"]) == 2)
     tr1.registry.register("grad_shard", bomb)
     with pytest.raises(RuntimeError):
         tr1.train()  # dies mid-round: steps 0-1 committed, no checkpoint

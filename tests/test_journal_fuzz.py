@@ -1,0 +1,177 @@
+"""Journal robustness under corruption + the forward-compat reader contract.
+
+Property: for ANY random graph and ANY torn/truncated/bit-flipped journal,
+reopening the journal and re-running the graph either (a) completes with
+outputs bit-identical to an uninterrupted clean run (the corrupted suffix is
+treated as never-happened and re-executed), or (b) fails with a *typed*
+error — never a raw struct/msgpack/Unicode explosion from deep inside the
+decoder.
+
+Also covers docs/journal-format.md §5: journal readers skip records of
+unknown kind (or with undecodable bodies) with a warning, so a pre-upgrade
+reader stays usable on journals written by a newer version.
+
+Seeded-random parametrized tests run everywhere; the hypothesis variants
+engage automatically when hypothesis is installed (tests/_propcheck.py).
+"""
+
+import binascii
+import os
+import random
+import struct
+import tempfile
+
+import pytest
+from _propcheck import HAS_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.core import Context, ContextGraph, Journal, LocalExecutor
+from repro.core.durable import KNOWN_KINDS, JournalRecord
+from repro.wire import encode_payload, payload_digest
+
+_HEADER = struct.Struct("<II")
+
+CORRUPTION_MODES = ("truncate", "bitflip", "garbage-tail")
+
+
+def salted(ctx, **kw):
+    """Deterministic node fn: per-node salt (Ψ data) + committed dep values."""
+    return ctx.get("salt", 0) + sum(v for v in kw.values() if isinstance(v, int))
+
+
+def _random_graph(seed):
+    """A seeded random DAG (3-9 nodes, random edges, per-node salts)."""
+    rng = random.Random(seed)
+    g = ContextGraph(origin=Context.origin({"seed": seed}), name=f"fuzz-{seed}")
+    for i in range(rng.randint(3, 9)):
+        deps = [f"n{j}" for j in range(i) if rng.random() < 0.4]
+        g.add(f"n{i}", salted, deps=deps, data={"salt": rng.randint(1, 99)})
+    return g
+
+
+def _corrupt(path, mode, rng):
+    """Apply one corruption to the journal file at ``path``."""
+    with open(path, "rb") as fh:
+        data = bytearray(fh.read())
+    if mode == "truncate" and data:
+        data = data[: rng.randrange(len(data))]
+    elif mode == "bitflip" and data:
+        pos = rng.randrange(len(data))
+        data[pos] ^= 1 << rng.randrange(8)
+    elif mode == "garbage-tail":
+        data += bytes(rng.getrandbits(8) for _ in range(rng.randint(1, 64)))
+    with open(path, "wb") as fh:
+        fh.write(bytes(data))
+
+
+def _check_corruption_roundtrip(seed, mode, knife, root):
+    """The core property, shared by the seeded and hypothesis variants."""
+    clean_path = os.path.join(root, "clean.wal")
+    with Journal(clean_path, sync="batch") as j:
+        clean = LocalExecutor(journal=j).run(_random_graph(seed))
+    clean_digest = payload_digest(clean.outputs)
+
+    hurt_path = os.path.join(root, "hurt.wal")
+    with open(clean_path, "rb") as src, open(hurt_path, "wb") as dst:
+        dst.write(src.read())
+    _corrupt(hurt_path, mode, random.Random(knife))
+
+    try:
+        with Journal(hurt_path, sync="batch") as j:  # recovery truncates bad tail
+            rep = LocalExecutor(journal=j).run(_random_graph(seed))
+    except RuntimeError:
+        return  # a typed failure is an acceptable outcome of corruption
+    # ... but a completed run must be bit-identical to the clean one
+    assert payload_digest(rep.outputs) == clean_digest
+    assert rep.outputs == clean.outputs
+    # and the repaired journal itself must now replay to zero re-execution
+    with Journal(hurt_path, sync="batch") as j:
+        rep2 = LocalExecutor(journal=j).run(_random_graph(seed))
+    assert rep2.executed == ()
+    assert rep2.outputs == clean.outputs
+
+
+@pytest.mark.parametrize("mode", CORRUPTION_MODES)
+@pytest.mark.parametrize("seed", range(10))
+def test_corrupted_journal_replays_consistently_or_fails_typed(
+    tmp_path, seed, mode
+):
+    _check_corruption_roundtrip(seed, mode, knife=seed * 7919 + 13, root=str(tmp_path))
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    mode=st.sampled_from(CORRUPTION_MODES),
+    knife=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_corrupted_journal_replays_consistently(seed, mode, knife):
+    with tempfile.TemporaryDirectory() as root:
+        _check_corruption_roundtrip(seed, mode, knife, root)
+
+
+# ---------------------------------------------------------------------------
+# forward-compat reader contract (docs/journal-format.md §5)
+# ---------------------------------------------------------------------------
+
+
+def _append_raw_frame(path, body):
+    """Append a checksum-valid frame with an arbitrary body (future writer)."""
+    frame = _HEADER.pack(len(body), binascii.crc32(body)) + body
+    with open(path, "ab") as fh:
+        fh.write(frame)
+
+
+def _two_node_graph():
+    g = ContextGraph(name="fwd")
+    g.add("a", salted, data={"salt": 5})
+    g.add("b", salted, deps=["a"], data={"salt": 2})
+    return g
+
+
+def test_unknown_record_kind_skipped_with_warning(tmp_path):
+    """A record kind from a future version is skipped, not raised — and the
+    replayable history around it stays fully usable."""
+    path = str(tmp_path / "fwd.wal")
+    with Journal(path, sync="batch") as j:
+        LocalExecutor(journal=j).run(_two_node_graph())
+    epoch = JournalRecord(kind="EPOCH_MARK", node_id="a", meta={"epoch": 3})
+    assert epoch.kind not in KNOWN_KINDS
+    _append_raw_frame(path, encode_payload(epoch.to_obj()))
+
+    j = Journal(path, sync="never")
+    with pytest.warns(RuntimeWarning, match="unknown kind 'EPOCH_MARK'"):
+        recs = list(j.records())
+    assert all(r.kind in KNOWN_KINDS for r in recs)
+
+    # replay is unaffected by the foreign record: zero re-execution
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        assert "EPOCH_MARK" not in j.kinds()
+        with Journal(path, sync="batch") as j2:
+            rep = LocalExecutor(journal=j2).run(_two_node_graph())
+    assert rep.executed == ()
+    assert rep.outputs == {"a": 5, "b": 7}
+
+
+def test_undecodable_record_body_skipped_with_warning(tmp_path):
+    """A checksum-valid frame whose body the codec cannot decode is skipped
+    with a warning; later records still stream out."""
+    path = str(tmp_path / "body.wal")
+    with Journal(path, sync="batch") as j:
+        j.append(JournalRecord(kind="RUN_START"))
+    _append_raw_frame(path, b"\xc1")  # valid crc, impossible payload frame
+    with Journal(path, sync="batch") as j:
+        j.append(JournalRecord(kind="RUN_END"))
+        j.flush()
+        with pytest.warns(RuntimeWarning, match="undecodable record"):
+            kinds = [r.kind for r in j.records()]
+    assert kinds == ["RUN_START", "RUN_END"]
+
+
+def test_record_decode_tolerates_missing_and_extra_fields():
+    """from_obj: future writers may add keys or drop defaults — never raise."""
+    rec = JournalRecord.from_obj({"k": "RUN_END", "zzz_future": {"x": 1}})
+    assert rec.kind == "RUN_END"
+    assert rec.node_id == "" and rec.attempt == 0 and rec.meta == {}

@@ -16,6 +16,7 @@ import threading
 import time
 
 import pytest
+from _faults import InjectedFault, faults  # noqa: F401 — fixture
 
 from repro.core import (
     ClusterExecutor,
@@ -300,7 +301,7 @@ def test_batch_consumer_of_stream_gets_materialized_list():
 # ---------------------------------------------------------------------------
 
 
-def _resume_graph(calls, fail_at=None):
+def _resume_graph(calls, fail_at=None, faults=None):
     def producer(ctx, start=0):
         calls["starts"].append(start)
         for i in range(start, 6):
@@ -308,10 +309,13 @@ def _resume_graph(calls, fail_at=None):
             yield i
 
     def mapper(ctx, src):
-        if fail_at is not None and src == fail_at:
-            raise RuntimeError("killed mid-stream")
         calls["mapped"].append(src)
         return src * 2
+
+    if fail_at is not None:
+        # mid-chunk kill point via the shared fault harness: dies BEFORE the
+        # trigger chunk is mapped, after earlier chunks committed
+        mapper = faults.fail_chunk(mapper, value=fail_at)
 
     g = ContextGraph(name="durable-stream")
     g.add_stream("src", producer)
@@ -342,15 +346,15 @@ def test_stream_journal_kinds_and_chain(tmp_path):
         assert eos[0].meta["chunks"] == 6
 
 
-def test_mid_stream_kill_replays_chunks_and_resumes_producer(tmp_path):
+def test_mid_stream_kill_replays_chunks_and_resumes_producer(tmp_path, faults):
     """THE acceptance property: kill a run mid-stream, re-run on the same
     journal — committed chunks come from the journal (zero producer
     re-emission) and the producer resumes from its last committed offset."""
     calls = {"starts": [], "emitted": [], "mapped": []}
     path = str(tmp_path / "kill.wal")
     with Journal(path, sync="batch") as j:
-        with pytest.raises(RuntimeError, match="killed mid-stream"):
-            LocalExecutor(journal=j).run(_resume_graph(calls, fail_at=3))
+        with pytest.raises(InjectedFault, match="killed mid-stream"):
+            LocalExecutor(journal=j).run(_resume_graph(calls, fail_at=3, faults=faults))
     assert calls["starts"] == [0]
     with Journal(path, sync="batch") as j:
         committed = [r.payload for r in j.records()

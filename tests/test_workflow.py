@@ -1,0 +1,492 @@
+"""Interactive durability (repro.workflow): interrupt, suspend/resume, fork.
+
+The acceptance contract (docs/durable-workflows.md):
+  - a node hitting a named interrupt point suspends the run as a clean drain
+    (journaled SUSPEND + frontier, no RUN_END, no error),
+  - resume(workflow_id, inputs=...) — even in a fresh process — answers the
+    interrupt durably and completes with ZERO re-execution of the committed
+    prefix (no duplicate NODE_COMMITs; prefix replayed/cache-served),
+  - fork(workflow_id, at=...) branches a divergent child whose shared prefix
+    is served from the content-addressed cache,
+  - crash windows around suspension (pre-commit, post-commit-pre-cache-store,
+    mid-suspend) recover cleanly — written against the tests/_faults harness.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from _faults import InjectedFault, faults  # noqa: F401 — fixture
+
+from repro.core import (
+    ClusterExecutor,
+    Context,
+    ContextGraph,
+    Gateway,
+    InProcWorker,
+    Interrupted,
+    Journal,
+    LocalExecutor,
+    TaskRegistry,
+    interrupt,
+)
+from repro.workflow import (
+    WorkflowError,
+    WorkflowNotSuspended,
+    WorkflowRegistry,
+    WorkflowRunner,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+# module-level functions: fn digests must be stable across incarnations
+CALLS = {"total": 0, "ship": 0}
+
+
+def compute_total(ctx):
+    CALLS["total"] += 1
+    return 100
+
+
+def needs_approval(ctx, total):
+    return interrupt(ctx, "approve", payload={"total": total})
+
+
+def ship(ctx, approved, total):
+    CALLS["ship"] += 1
+    return f"shipped x{total}" if approved else "held"
+
+
+REGISTRY = WorkflowRegistry()
+
+
+@REGISTRY.define("order")
+def order_graph(args):
+    g = ContextGraph(
+        origin=Context.origin({"region": (args or {}).get("region", "us")}),
+        name="order",
+    )
+    g.add("total", compute_total)
+    g.add("approved", needs_approval, deps=["total"], interrupt="approve")
+    g.add("ship", ship, deps=["approved", "total"])
+    return g
+
+
+@pytest.fixture(autouse=True)
+def _reset_calls():
+    CALLS["total"] = CALLS["ship"] = 0
+
+
+# ---------------------------------------------------------------------------
+# interrupt-point declaration and the interrupt() helper
+# ---------------------------------------------------------------------------
+
+
+def test_interrupt_returns_fact_when_present():
+    ctx = Context.origin({"approve": True})
+    assert interrupt(ctx, "approve") is True
+
+
+def test_interrupt_raises_typed_exception_with_payload():
+    with pytest.raises(Interrupted) as ei:
+        interrupt(Context.origin({}), "approve", payload={"total": 7})
+    assert ei.value.name == "approve"
+    assert ei.value.payload == {"total": 7}
+
+
+def test_duplicate_interrupt_names_rejected():
+    g = ContextGraph()
+    g.add("a", lambda ctx: 1, interrupt="gate")
+    g.add("b", lambda ctx: 2, interrupt="gate")
+    with pytest.raises(ValueError, match="duplicate interrupt point"):
+        g.validate()
+
+
+def test_interrupt_on_stream_or_volatile_node_rejected():
+    g = ContextGraph()
+    with pytest.raises(ValueError, match="interrupt"):
+        g.add("s", lambda ctx: iter(()), stream="source", interrupt="gate")
+    with pytest.raises(ValueError, match="interrupt"):
+        g.add("v", lambda ctx: 1, volatile=True, interrupt="gate")
+
+
+def test_interrupt_points_map():
+    g = order_graph(None)
+    assert g.interrupt_points() == {"approve": "approved"}
+
+
+# ---------------------------------------------------------------------------
+# suspend semantics (executor layer)
+# ---------------------------------------------------------------------------
+
+
+def test_local_suspend_is_clean_drain_not_error(tmp_path):
+    path = str(tmp_path / "j.wal")
+    with Journal(path, sync="always") as j:
+        rep = LocalExecutor(journal=j).run(order_graph(None))
+    assert rep.suspended and rep.interrupt == "approve"
+    assert rep.interrupt_node == "approved"
+    assert rep.outputs == {"total": 100}  # committed work is in the report
+    assert set(rep.frontier) == {"approved", "ship"}
+    with Journal(path, sync="never") as j:
+        kinds = j.kinds()
+        assert kinds["SUSPEND"] == 1
+        assert kinds.get("NODE_FAIL", 0) == 0  # an interrupt is not a failure
+        assert kinds.get("RUN_END", 0) == 0  # the run did not end
+        sus = [r for r in j.records() if r.kind == "SUSPEND"][0]
+    assert sus.node_id == "approved"
+    assert sus.meta["interrupt"] == "approve"
+    assert sus.meta["payload"] == {"total": 100}  # interrupt payload journaled
+    assert sorted(sus.meta["frontier"]) == ["approved", "ship"]
+
+
+def test_cluster_suspend_cancels_queued_and_books_gateway(tmp_path):
+    reg = TaskRegistry()
+    reg.register("seed", lambda ctx: 3)
+    reg.register("gate", lambda ctx, a: a + interrupt(ctx, "go"))
+    reg.register("double", lambda ctx, g: g * 2)
+
+    g = ContextGraph(name="wf")
+    g.add("a", "seed")
+    g.add("g", "gate", deps=["a"], interrupt="go")
+    g.add("b", "double", deps=["g"])
+
+    path = str(tmp_path / "c.wal")
+    workers = [InProcWorker("w0", reg), InProcWorker("w1", reg)]
+    with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+        with Journal(path, sync="always") as j:
+            rep = ClusterExecutor(gw, journal=j, speculative=False).run(g)
+        stats = gw.stats()
+    assert rep.suspended and rep.interrupt == "go" and rep.interrupt_node == "g"
+    assert set(rep.frontier) == {"g", "b"}
+    assert list(stats["suspended_runs"].values())[0]["interrupt"] == "go"
+
+    # resume on the same journal: prefix replays, gate answered via Ψ data
+    g2 = ContextGraph(name="wf")
+    g2.add("a", "seed")
+    g2.add("g", "gate", deps=["a"], interrupt="go", data={"go": 7})
+    g2.add("b", "double", deps=["g"])
+    with Gateway([InProcWorker("w0", reg)], heartbeat_interval_s=0.05) as gw:
+        with Journal(path, sync="always") as j:
+            rep2 = ClusterExecutor(gw, journal=j, speculative=False).run(g2)
+    assert not rep2.suspended
+    assert rep2.outputs == {"a": 3, "g": 10, "b": 20}
+    assert rep2.replayed == ("a",)  # zero re-execution of the prefix
+
+
+# ---------------------------------------------------------------------------
+# WorkflowRunner: run / resume / fork
+# ---------------------------------------------------------------------------
+
+
+def test_workflow_run_suspends_and_resume_completes(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    res = runner.run("order", args={"region": "eu"})
+    assert res.suspended and res.interrupt == "approve" and res.node == "approved"
+    assert CALLS["total"] == 1 and CALLS["ship"] == 0
+    st = runner.status(res.workflow_id)
+    assert st["status"] == "suspended"
+    assert st["pending_interrupt"] == {"node": "approved", "interrupt": "approve"}
+
+    done = runner.resume(res.workflow_id, inputs={"approve": True})
+    assert done.status == "completed"
+    assert done.outputs["ship"] == "shipped x100"
+    assert CALLS["total"] == 1  # the committed prefix was NOT re-executed
+    assert "total" in done.report.replayed
+    assert runner.status(res.workflow_id)["status"] == "completed"
+    # the journal carries the full interactive history
+    kinds = Journal(runner.store.journal_path(res.workflow_id), sync="never").kinds()
+    assert kinds["SUSPEND"] == 1 and kinds["RESUME"] == 1
+    assert kinds["RUN_START"] == 2 and kinds["RUN_END"] == 1
+    assert kinds["LINEAGE"] == 1
+
+
+def test_workflow_id_is_durable_and_distinct_from_runs(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    res = runner.run("order", workflow_id="order-42")
+    assert res.workflow_id == "order-42"
+    j = Journal(runner.store.journal_path("order-42"), sync="never")
+    assert j.lineage() == {"workflow_id": "order-42", "workflow": "order"}
+    # each incarnation is a new run in the SAME journal under the same id
+    runner.resume("order-42", inputs={"approve": False})
+    recs = list(Journal(runner.store.journal_path("order-42"), sync="never").records())
+    runs = [r for r in recs if r.kind == "RUN_START"]
+    assert len(runs) == 2
+    assert all(r.meta.get("workflow") == "order-42" for r in runs)
+
+
+def test_resume_without_inputs_resuspends(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    res = runner.run("order")
+    again = runner.resume(res.workflow_id)
+    assert again.suspended and again.interrupt == "approve"
+    assert CALLS["total"] == 1  # prefix replayed, not re-executed
+
+
+def test_resume_with_inputs_requires_suspend_record(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    res = runner.run("order")
+    done = runner.resume(res.workflow_id, inputs={"approve": True})
+    assert done.status == "completed"
+    with pytest.raises(WorkflowNotSuspended):
+        runner.resume(res.workflow_id, inputs={"approve": False})
+
+
+def test_duplicate_workflow_id_rejected(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    runner.run("order", workflow_id="dup")
+    with pytest.raises(WorkflowError, match="already exists"):
+        runner.run("order", workflow_id="dup")
+
+
+def test_fork_diverges_with_cache_served_prefix(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    res = runner.run("order")
+    done = runner.resume(res.workflow_id, inputs={"approve": True})
+    assert done.outputs["ship"] == "shipped x100"
+
+    child = runner.fork(res.workflow_id, inputs={"approve": False})
+    assert child.status == "completed"
+    assert child.outputs["ship"] == "held"  # divergent decision
+    assert "total" in child.report.cached  # shared prefix cache-served
+    assert CALLS["total"] == 1  # ... and never re-executed
+    # lineage: the child journal names its parent; the parent journals FORK
+    cj = Journal(runner.store.journal_path(child.workflow_id), sync="never")
+    lin = cj.lineage()
+    assert lin["parent"] == res.workflow_id
+    pk = Journal(runner.store.journal_path(res.workflow_id), sync="never").kinds()
+    assert pk["FORK"] == 1
+
+
+def test_fork_at_record_seq_masks_later_cache(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    res = runner.run("order")
+    runner.resume(res.workflow_id, inputs={"approve": True})
+    recs = list(Journal(runner.store.journal_path(res.workflow_id), sync="never").records())
+    at = next(i for i, r in enumerate(recs) if r.kind == "SUSPEND")
+
+    ship_calls = CALLS["ship"]
+    child = runner.fork(res.workflow_id, at=at, inputs={"approve": False})
+    assert child.outputs["ship"] == "held"
+    # pre-at history (total) is shared; post-at history re-executed fresh
+    assert "total" in child.report.cached
+    assert "ship" in child.report.executed
+    assert CALLS["ship"] == ship_calls + 1
+
+
+def test_fork_at_out_of_range_rejected(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "store"))
+    res = runner.run("order")
+    with pytest.raises(WorkflowError, match="outside journal"):
+        runner.fork(res.workflow_id, at=10_000)
+
+
+def test_workflow_runner_over_cluster_executor(tmp_path):
+    reg = TaskRegistry()
+    reg.register("seed", lambda ctx: 3)
+    reg.register("gate", lambda ctx, a: a + interrupt(ctx, "go"))
+    reg.register("double", lambda ctx, g: g * 2)
+
+    wreg = WorkflowRegistry()
+
+    @wreg.define("pipeline")
+    def pipeline(args):
+        g = ContextGraph(name="pipeline")
+        g.add("a", "seed")
+        g.add("g", "gate", deps=["a"], interrupt="go")
+        g.add("b", "double", deps=["g"])
+        return g
+
+    workers = [InProcWorker("w0", reg), InProcWorker("w1", reg)]
+    with Gateway(workers, heartbeat_interval_s=0.05) as gw:
+        runner = WorkflowRunner(
+            wreg,
+            str(tmp_path / "store"),
+            executor_factory=lambda journal, cache: ClusterExecutor(
+                gw, journal=journal, cache=cache, speculative=False
+            ),
+        )
+        res = runner.run("pipeline")
+        assert res.suspended and res.interrupt == "go"
+        done = runner.resume(res.workflow_id, inputs={"go": 7})
+    assert done.status == "completed"
+    assert done.outputs == {"a": 3, "g": 10, "b": 20}
+    assert "a" in done.report.replayed
+
+
+# ---------------------------------------------------------------------------
+# crash windows (tests/_faults harness)
+# ---------------------------------------------------------------------------
+
+
+def test_precommit_kill_then_resume_completes(tmp_path, faults):
+    """Kill point: pre-commit. The gate's upstream dies once; retry-free
+    resume replays the committed prefix and finishes the workflow."""
+    wreg = WorkflowRegistry()
+    armed = {"on": True}  # the "process" stays dead across executor retries
+    flaky_total = faults.fail_call(compute_total, when=lambda ctx: armed["on"])
+
+    @wreg.define("order")
+    def order(args):
+        g = ContextGraph(name="order")
+        g.add("total", flaky_total)
+        g.add("approved", needs_approval, deps=["total"], interrupt="approve")
+        g.add("ship", ship, deps=["approved", "total"])
+        return g
+
+    runner = WorkflowRunner(wreg, str(tmp_path / "store"))
+    with pytest.raises(InjectedFault):
+        runner.run("order", workflow_id="w")
+    armed["on"] = False  # next incarnation comes up healthy
+    res = runner.resume("w")  # crashed before any commit: full clean re-run
+    assert res.suspended and res.interrupt == "approve"
+    done = runner.resume("w", inputs={"approve": True})
+    assert done.outputs["ship"] == "shipped x100"
+
+
+def test_postcommit_precachestore_kill_replays_from_journal(tmp_path, faults):
+    """Kill point: post-commit-pre-cache-store. The journal owns durability:
+    a crash between NODE_COMMIT and CACHE_STORE loses only cache warmth."""
+    from repro.cache import ResultCache
+
+    path = str(tmp_path / "j.wal")
+    cache = ResultCache(str(tmp_path / "cache"))
+    with Journal(path, sync="always") as j:
+        ex = LocalExecutor(journal=j, cache=cache)
+        faults.fail_cache_store(ex)
+        with pytest.raises(InjectedFault):
+            ex.run(order_graph(None))
+    calls_before = CALLS["total"]
+    with Journal(path, sync="always") as j:
+        rep = LocalExecutor(journal=j, cache=cache).run(order_graph(None))
+    assert rep.suspended  # continues to the interrupt as normal
+    assert "total" in rep.replayed  # the commit survived the cache-store crash
+    assert CALLS["total"] == calls_before
+    kinds = Journal(path, sync="never").kinds()
+    assert kinds["NODE_COMMIT"] == 1  # exactly one durable commit for "total"
+
+
+def test_midsuspend_kill_resuspends_durably(tmp_path, faults):
+    """Kill point: mid-suspend. A crash while journaling SUSPEND leaves no
+    durable suspension — the next incarnation drains to the same interrupt
+    and journals it durably this time."""
+    path = str(tmp_path / "j.wal")
+    with Journal(path, sync="always") as j:
+        faults.fail_suspend_append(j)
+        with pytest.raises(InjectedFault):
+            LocalExecutor(journal=j).run(order_graph(None))
+    kinds = Journal(path, sync="never").kinds()
+    assert kinds.get("SUSPEND", 0) == 0  # the suspension was torn away
+
+    with Journal(path, sync="always") as j:
+        rep = LocalExecutor(journal=j).run(order_graph(None))
+    assert rep.suspended and rep.interrupt == "approve"
+    assert "total" in rep.replayed  # committed prefix still replayed
+    kinds = Journal(path, sync="never").kinds()
+    assert kinds["SUSPEND"] == 1  # durable on the second attempt
+
+
+# ---------------------------------------------------------------------------
+# the end-to-end acceptance test: kill at the interrupt, resume in a fresh
+# process with zero re-execution of the committed prefix
+# ---------------------------------------------------------------------------
+
+_E2E_SCRIPT = textwrap.dedent(
+    """
+    import os, sys
+    from repro.core import Context, ContextGraph, interrupt
+    from repro.workflow import WorkflowRegistry, WorkflowRunner
+
+    MARK = os.environ["WF_MARK"]  # side-effect marker directory
+
+    def touch(name):
+        with open(os.path.join(MARK, name), "a") as fh:
+            fh.write("x")
+
+    def step_a(ctx):
+        touch("a")
+        return 10
+
+    def step_b(ctx, a):
+        touch("b")
+        return a + 1
+
+    def gate(ctx, b):
+        return interrupt(ctx, "approve", payload={"b": b})
+
+    def final(ctx, gate, a):
+        touch("final")
+        return (a, gate)
+
+    registry = WorkflowRegistry()
+
+    @registry.define("wf")
+    def wf(args):
+        g = ContextGraph(origin=Context.origin({"v": 1}), name="wf")
+        g.add("a", step_a)
+        g.add("b", step_b, deps=["a"])
+        g.add("gate", gate, deps=["b"], interrupt="approve")
+        g.add("final", final, deps=["gate", "a"])
+        return g
+
+    runner = WorkflowRunner(registry, os.environ["WF_STORE"])
+    if sys.argv[1] == "run":
+        res = runner.run("wf", workflow_id="wf-1")
+        assert res.suspended and res.interrupt == "approve", res
+        print("SUSPENDED", res.node, flush=True)
+        os._exit(7)  # hard kill: no interpreter shutdown, no cleanup
+    else:
+        res = runner.resume("wf-1", inputs={"approve": "yes"})
+        assert res.status == "completed", res
+        print("OUT", res.outputs["final"], flush=True)
+        print("REPLAYED", ",".join(sorted(res.report.replayed)), flush=True)
+        print("EXECUTED", ",".join(sorted(res.report.executed)), flush=True)
+    """
+)
+
+
+def test_e2e_kill_at_interrupt_resume_in_fresh_process(tmp_path):
+    script = tmp_path / "wf_script.py"
+    script.write_text(_E2E_SCRIPT)
+    mark = tmp_path / "marks"
+    mark.mkdir()
+    env = dict(
+        os.environ,
+        PYTHONPATH=SRC,
+        WF_STORE=str(tmp_path / "store"),
+        WF_MARK=str(mark),
+    )
+
+    p1 = subprocess.run(
+        [sys.executable, str(script), "run"],
+        env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert p1.returncode == 7, p1.stderr
+    assert "SUSPENDED gate" in p1.stdout
+    assert (mark / "a").read_text() == "x" and (mark / "b").read_text() == "x"
+
+    p2 = subprocess.run(
+        [sys.executable, str(script), "resume"],
+        env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert p2.returncode == 0, p2.stderr
+    assert "OUT (10, 'yes')" in p2.stdout
+    assert "REPLAYED a,b" in p2.stdout  # committed prefix: replayed, not re-run
+    assert "EXECUTED final,gate" in p2.stdout
+    # zero re-execution, proven by side effects: each prefix step ran ONCE
+    assert (mark / "a").read_text() == "x"
+    assert (mark / "b").read_text() == "x"
+    assert (mark / "final").read_text() == "x"
+
+    # journal audit: no duplicate NODE_COMMIT for any (node, ξ, inputs)
+    journal = Journal(
+        os.path.join(str(tmp_path / "store"), "wf-1", "journal.wal"), sync="never"
+    )
+    commits = [r for r in journal.records() if r.kind == "NODE_COMMIT"]
+    triples = [(r.node_id, r.context_digest, r.input_digest) for r in commits]
+    assert len(triples) == len(set(triples)) == 4  # a, b, gate, final — once each
+    kinds = journal.kinds()
+    assert kinds["SUSPEND"] == 1 and kinds["RESUME"] == 1
+    assert kinds["RUN_START"] == 2 and kinds["RUN_END"] == 1
