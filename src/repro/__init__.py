@@ -3,19 +3,58 @@
 Kept intentionally light: importing ``repro`` must not pull in jax or any
 optional dependency (tests/test_wire.py asserts the import works on a bare
 stdlib+msgpack environment). Heavy subsystems load on attribute access.
+
+The supported entry point is :class:`repro.Client` (see docs/migration-v2.md);
+the historical constructors remain importable from their subpackages, and the
+top-level aliases below resolve but emit ``DeprecationWarning``.
 """
+import warnings
 from importlib import import_module
 from typing import Any
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
 _SUBMODULES = ("core", "wire", "checkpoint", "data", "serve", "models",
-               "kernels", "train", "configs", "launch", "optim", "sharding")
+               "kernels", "train", "configs", "launch", "optim", "sharding",
+               "cache", "stream", "workflow")
 
-__all__ = ["__version__", *_SUBMODULES]
+#: lazily-resolved first-class exports: attr -> (module, attr)
+_EXPORTS = {
+    "Client": ("repro.client", "Client"),
+    "WorkflowHandle": ("repro.client", "WorkflowHandle"),
+}
+
+#: pre-Client entry points kept as aliases: attr -> (module, attr, hint)
+_DEPRECATED = {
+    "DurableExecutor": ("repro.core.executor", "LocalExecutor",
+                        "repro.Client(base_dir).run(graph)"),
+    "LocalExecutor": ("repro.core.executor", "LocalExecutor",
+                      "repro.Client(base_dir).run(graph)"),
+    "ClusterExecutor": ("repro.core.executor", "ClusterExecutor",
+                        "repro.Client(base_dir, cluster=workers).run(graph)"),
+    "WorkflowRunner": ("repro.workflow.api", "WorkflowRunner",
+                       "repro.Client(base_dir).workflow(name)"),
+    "Trainer": ("repro.train.trainer", "Trainer",
+                "repro.Client(base_dir).train(trainer)"),
+    "DistributedTrainer": ("repro.train.distributed", "DistributedTrainer",
+                           "repro.Client(base_dir).train(trainer)"),
+}
+
+__all__ = ["__version__", "Client", "WorkflowHandle", *_SUBMODULES]
 
 
 def __getattr__(name: str) -> Any:
     if name in _SUBMODULES:
         return import_module(f"{__name__}.{name}")
+    if name in _EXPORTS:
+        module, attr = _EXPORTS[name]
+        return getattr(import_module(module), attr)
+    if name in _DEPRECATED:
+        module, attr, hint = _DEPRECATED[name]
+        warnings.warn(
+            f"repro.{name} is deprecated; use {hint} (docs/migration-v2.md)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(import_module(module), attr)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

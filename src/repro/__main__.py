@@ -1,0 +1,211 @@
+"""Command-line entry point: ``python -m repro``.
+
+Operational tooling for durable stores — no training or execution logic
+lives here. The first subcommand family is ``workflows``: inspect pending
+interrupt suspensions across a :class:`~repro.workflow.WorkflowStore` and
+answer one from a terminal::
+
+    python -m repro workflows list --store ./wf
+    python -m repro workflows show --store ./wf order-ab12cd34
+    python -m repro workflows resume --store ./wf --registry shop.flows:REGISTRY \\
+        order-ab12cd34 --input approve=true
+
+``list`` and ``show`` need only the on-disk store (meta.json + journal);
+``resume`` additionally imports the graph-factory registry named by
+``--registry module:attr`` so the workflow can actually continue. ``--input``
+values are parsed as JSON when possible and fall back to raw strings, so
+``--input approve=true`` injects a boolean and ``--input note=hi`` a string.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.durable import Journal
+from repro.workflow import WorkflowRunner, WorkflowStore
+from repro.workflow.api import WorkflowInterruptTimeout
+
+__all__ = ["main"]
+
+
+def _pending(store: WorkflowStore, workflow_id: str) -> Optional[Dict[str, Any]]:
+    """The unanswered SUSPEND of one workflow, or None (journal may be absent)."""
+    try:
+        with Journal(store.journal_path(workflow_id), sync="never") as j:
+            rec = WorkflowRunner._pending_suspend_from(list(j.records()))
+    except FileNotFoundError:
+        return None
+    if rec is None:
+        return None
+    info: Dict[str, Any] = {
+        "node": rec.node_id,
+        "interrupt": str(rec.meta.get("interrupt", "")),
+    }
+    deadline = rec.meta.get("deadline")
+    if deadline is not None:
+        info["deadline"] = float(deadline)
+        info["on_timeout"] = str(rec.meta.get("on_timeout", ""))
+        info["expired"] = time.time() >= float(deadline)
+    return info
+
+
+def _row(store: WorkflowStore, workflow_id: str) -> Dict[str, Any]:
+    meta = store.meta(workflow_id)
+    return {
+        "id": workflow_id,
+        "workflow": meta.get("workflow", "?"),
+        "status": meta.get("status", "?"),
+        "pending": _pending(store, workflow_id),
+    }
+
+
+def _describe_pending(pending: Optional[Dict[str, Any]]) -> str:
+    if not pending:
+        return "-"
+    desc = f"{pending['interrupt']}@{pending['node']}"
+    if "deadline" in pending:
+        state = "EXPIRED" if pending["expired"] else "pending"
+        remain = pending["deadline"] - time.time()
+        desc += f" ({state}, t{remain:+.0f}s, on_timeout={pending['on_timeout']})"
+    return desc
+
+
+def _cmd_list(args: argparse.Namespace) -> int:
+    store = WorkflowStore(args.store)
+    rows = [_row(store, wid) for wid in store.list()]
+    if args.pending:
+        rows = [r for r in rows if r["pending"]]
+    if args.json:
+        print(json.dumps(rows, indent=2, sort_keys=True))
+        return 0
+    if not rows:
+        print("no workflows" + (" with pending interrupts" if args.pending else ""))
+        return 0
+    width = max(len(r["id"]) for r in rows)
+    for r in rows:
+        print(
+            f"{r['id']:<{width}}  {r['workflow']:<12} {r['status']:<10} "
+            f"{_describe_pending(r['pending'])}"
+        )
+    return 0
+
+
+def _cmd_show(args: argparse.Namespace) -> int:
+    store = WorkflowStore(args.store)
+    meta = store.meta(args.workflow_id)
+    meta["pending_interrupt"] = _pending(store, args.workflow_id)
+    print(json.dumps(meta, indent=2, sort_keys=True, default=str))
+    return 0
+
+
+def _parse_inputs(pairs: List[str]) -> Dict[str, Any]:
+    inputs: Dict[str, Any] = {}
+    for pair in pairs:
+        key, sep, raw = pair.partition("=")
+        if not sep or not key:
+            raise SystemExit(f"--input expects k=v, got {pair!r}")
+        try:
+            inputs[key] = json.loads(raw)
+        except ValueError:
+            inputs[key] = raw  # bare strings need no quoting
+    return inputs
+
+
+def _load_registry(spec: str) -> Any:
+    module_name, sep, attr = spec.partition(":")
+    if not sep or not attr:
+        raise SystemExit(f"--registry expects module:attr, got {spec!r}")
+    try:
+        module = importlib.import_module(module_name)
+    except ImportError as exc:
+        raise SystemExit(f"cannot import registry module {module_name!r}: {exc}")
+    try:
+        return getattr(module, attr)
+    except AttributeError:
+        raise SystemExit(f"module {module_name!r} has no attribute {attr!r}")
+
+
+def _cmd_resume(args: argparse.Namespace) -> int:
+    registry = _load_registry(args.registry)
+    runner = WorkflowRunner(registry, args.store, journal_sync=args.journal_sync)
+    inputs = _parse_inputs(args.input)
+    try:
+        result = runner.resume(args.workflow_id, inputs=inputs or None)
+    except WorkflowInterruptTimeout as exc:
+        print(f"escalated: {exc}", file=sys.stderr)
+        return 3
+    pending = _pending(runner.store, args.workflow_id)
+    print(
+        json.dumps(
+            {
+                "id": result.workflow_id,
+                "status": result.status,
+                "interrupt": result.interrupt or None,
+                "node": result.node or None,
+                "pending": pending,
+            },
+            indent=2,
+            sort_keys=True,
+        )
+    )
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The ``python -m repro`` argument parser (exposed for tests)."""
+    parser = argparse.ArgumentParser(prog="repro", description=__doc__)
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    wf = sub.add_parser("workflows", help="inspect and answer durable workflows")
+    wfsub = wf.add_subparsers(dest="workflows_command", required=True)
+
+    p_list = wfsub.add_parser("list", help="list workflows and pending interrupts")
+    p_list.add_argument("--store", required=True, help="WorkflowStore base directory")
+    p_list.add_argument("--pending", action="store_true", help="only suspended entries")
+    p_list.add_argument("--json", action="store_true", help="machine-readable output")
+    p_list.set_defaults(fn=_cmd_list)
+
+    p_show = wfsub.add_parser("show", help="full meta + pending interrupt of one id")
+    p_show.add_argument("--store", required=True)
+    p_show.add_argument("workflow_id")
+    p_show.set_defaults(fn=_cmd_show)
+
+    p_resume = wfsub.add_parser("resume", help="answer an interrupt and continue")
+    p_resume.add_argument("--store", required=True)
+    p_resume.add_argument(
+        "--registry",
+        required=True,
+        help="module:attr naming the WorkflowRegistry with the graph factories",
+    )
+    p_resume.add_argument(
+        "--input",
+        action="append",
+        default=[],
+        metavar="K=V",
+        help="interrupt answer (JSON value, falls back to raw string); repeatable",
+    )
+    p_resume.add_argument(
+        "--journal-sync", default="always", choices=("always", "batch", "never")
+    )
+    p_resume.add_argument("workflow_id")
+    p_resume.set_defaults(fn=_cmd_resume)
+    return parser
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """Run the CLI; returns the process exit code."""
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except KeyError as exc:
+        print(f"error: {exc.args[0]}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,6 +3,7 @@
 The paper's contribution, realized for JAX/TPU clusters. See DESIGN.md §2-3.
 """
 
+from .aio import AsyncGateway, AsyncWorkerClient, AsyncWorkerServer, ShardedGateway
 from .context import EMPTY_CONTEXT, Context, ContextEntry, canonical_digest
 from .durable import (
     KNOWN_KINDS,
@@ -30,7 +31,7 @@ from .gateway import (
     round_robin,
 )
 from .graph import ContextGraph, CycleError, Node, UnionNode, toposort_levels
-from .heartbeat import HeartbeatServer, check_heartbeat, telemetry
+from .heartbeat import HeartbeatServer, check_heartbeat, check_heartbeat_async, telemetry
 from .server import (
     FlakyWorker,
     InProcWorker,
@@ -80,7 +81,12 @@ __all__ = [
     "toposort_levels",
     "HeartbeatServer",
     "check_heartbeat",
+    "check_heartbeat_async",
     "telemetry",
+    "AsyncGateway",
+    "AsyncWorkerClient",
+    "AsyncWorkerServer",
+    "ShardedGateway",
     "TaskRegistry",
     "WorkerServer",
     "WorkerClient",

@@ -1,0 +1,20 @@
+"""Asyncio control-plane runtime: event-loop gateway, workers, and shards.
+
+Everything here preserves the sync runtime's stage semantics — the same
+allocation chain, failure taxonomy, journal kinds, and blocking public API —
+while swapping threads-and-condition-variables for one event loop per
+component. ``REPRO_RUNTIME=async`` routes plain ``Gateway(...)`` construction
+to :class:`AsyncGateway`, so either runtime runs the whole existing test
+suite unmodified.
+"""
+
+from .gateway import AsyncGateway
+from .server import AsyncWorkerClient, AsyncWorkerServer
+from .shards import ShardedGateway
+
+__all__ = [
+    "AsyncGateway",
+    "AsyncWorkerClient",
+    "AsyncWorkerServer",
+    "ShardedGateway",
+]

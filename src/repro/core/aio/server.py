@@ -1,0 +1,494 @@
+"""Async worker transport: asyncio HTTP server + client sessions (§3.2).
+
+Same wire protocol as the threaded ``WorkerServer``/``WorkerClient`` pair —
+msgpack-framed POST /task, GET /tasks, a separate heartbeat port, and
+HTTP/1.1 chunked responses carrying crc-checked stream frames — rebuilt on
+``asyncio.start_server``/``open_connection`` so one event loop multiplexes
+thousands of concurrent connections instead of one thread per request. Task
+*bodies* stay synchronous Python functions and run on a small offload pool;
+only the transport is coroutine-native.
+
+Interop contract with the sync world:
+
+- :class:`AsyncWorkerClient` raises the same exception taxonomy as
+  ``WorkerClient`` (connect/read failures ⇒ ``TimeoutError`` at the
+  application level, undecodable answers ⇒ ``PayloadDecodeError``), so the
+  gateway's failure handling is runtime-agnostic.
+- A streaming response resolves to a plain *synchronous* chunk iterator: the
+  consumer (an executor stream thread) pulls frames through
+  :class:`_SyncStreamBridge`, which marshals each read onto the client's
+  event loop — pull-based, so HTTP chunked transfer provides natural
+  backpressure end to end.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+from urllib.parse import urlsplit
+
+from repro.wire import canonical_bytes, decode_payload, encode_frame, encode_payload
+
+from ..context import Context
+from ..heartbeat import check_heartbeat_async, telemetry
+from ..server import (
+    STREAM_CONTENT_TYPE,
+    Middleware,
+    TaskRegistry,
+    _execute,
+    _stream_values,
+    _WorkerState,
+)
+
+__all__ = ["AsyncWorkerServer", "AsyncWorkerClient"]
+
+_SENTINEL = object()  # exhausted-generator marker for offloaded next() calls
+
+
+async def _read_head(
+    reader: asyncio.StreamReader,
+) -> Optional[Tuple[str, str, Dict[str, str]]]:
+    """Parse one HTTP/1.1 request head: (method, path, lowercase headers)."""
+    line = await reader.readline()
+    if not line:
+        return None
+    parts = line.decode("latin-1").split()
+    if len(parts) < 2:
+        return None
+    headers: Dict[str, str] = {}
+    while True:
+        raw = await reader.readline()
+        if raw in (b"\r\n", b"\n", b""):
+            break
+        key, _, value = raw.decode("latin-1").partition(":")
+        headers[key.strip().lower()] = value.strip()
+    return parts[0], parts[1], headers
+
+
+async def _write_response(
+    writer: asyncio.StreamWriter,
+    status: int,
+    body: bytes,
+    content_type: str = "",
+) -> None:
+    reason = {200: "OK", 404: "Not Found"}.get(status, "Error")
+    head = f"HTTP/1.1 {status} {reason}\r\nContent-Length: {len(body)}\r\n"
+    if content_type:
+        head += f"Content-Type: {content_type}\r\n"
+    head += "Connection: close\r\n\r\n"
+    writer.write(head.encode("latin-1") + body)
+    await writer.drain()
+
+
+class AsyncWorkerServer:
+    """Application server + separate heartbeat server on one event loop.
+
+    The two-port rule of §3.2 is preserved: the heartbeat listener is a
+    distinct asyncio server on its own port, so :meth:`crash_application`
+    (close ONLY the app listener) leaves the system-liveness signal up —
+    the asymmetry the failure detector reads.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        registry: TaskRegistry,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        middleware: Optional[List[Middleware]] = None,
+        offload_threads: int = 16,
+    ):
+        self.name = name
+        self.registry = registry
+        self.middleware = list(middleware or [])
+        self.state = _WorkerState()
+        self.host = host
+        self.port = port  # rebound to the OS-assigned port at start()
+        self.hb_port = 0
+        self._offload_threads = offload_threads
+        self._offload: Optional[ThreadPoolExecutor] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stopped: Optional[asyncio.Event] = None
+        self._app_server: Optional[asyncio.base_events.Server] = None
+        self._hb_server: Optional[asyncio.base_events.Server] = None
+        self._startup_error: Optional[BaseException] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "AsyncWorkerServer":
+        """Bind both listeners on a fresh loop thread; returns when bound."""
+        ready = threading.Event()
+        self._thread = threading.Thread(
+            target=self._loop_main, args=(ready,), name=f"aioworker:{self.name}", daemon=True
+        )
+        self._thread.start()
+        ready.wait()
+        if self._startup_error is not None:
+            raise RuntimeError(
+                f"async worker {self.name} failed to start"
+            ) from self._startup_error
+        return self
+
+    def stop(self, stop_heartbeat: bool = True) -> None:
+        """Close listeners and join the loop thread (bounded wait)."""
+        loop = self._loop
+        if loop is not None:
+            try:
+                loop.call_soon_threadsafe(self._signal_stop, stop_heartbeat)
+            except RuntimeError:
+                pass
+        if stop_heartbeat:
+            if self._thread is not None:
+                self._thread.join(timeout=5)
+            if self._offload is not None:
+                self._offload.shutdown(wait=False, cancel_futures=True)
+
+    def crash_application(self) -> None:
+        """Kill ONLY the app listener — heartbeat stays up (application-level)."""
+        self.stop(stop_heartbeat=False)
+
+    def _signal_stop(self, stop_heartbeat: bool) -> None:
+        if self._app_server is not None:
+            self._app_server.close()
+            self._app_server = None
+        if stop_heartbeat and self._stopped is not None:
+            self._stopped.set()
+
+    def _loop_main(self, ready: threading.Event) -> None:
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+        try:
+            loop.run_until_complete(self._main(ready))
+        except BaseException as exc:  # surface bind failures to start()
+            self._startup_error = exc
+        finally:
+            pending = asyncio.all_tasks(loop)
+            for task in pending:
+                task.cancel()
+            if pending:
+                loop.run_until_complete(asyncio.gather(*pending, return_exceptions=True))
+            loop.close()
+            self._loop = None
+            ready.set()
+
+    async def _main(self, ready: threading.Event) -> None:
+        self._stopped = asyncio.Event()
+        self._offload = ThreadPoolExecutor(
+            max_workers=self._offload_threads, thread_name_prefix=f"{self.name}:task"
+        )
+        self._app_server = await asyncio.start_server(self._handle_app, self.host, self.port)
+        self._hb_server = await asyncio.start_server(self._handle_hb, self.host, 0)
+        self.port = self._app_server.sockets[0].getsockname()[1]
+        self.hb_port = self._hb_server.sockets[0].getsockname()[1]
+        ready.set()
+        await self._stopped.wait()
+        for srv in (self._app_server, self._hb_server):
+            if srv is not None:
+                srv.close()
+                await srv.wait_closed()
+        self._app_server = self._hb_server = None
+
+    @property
+    def address(self) -> str:
+        """The application endpoint URL (valid once started)."""
+        return f"http://{self.host}:{self.port}"
+
+    @property
+    def heartbeat_address(self) -> str:
+        """The separate heartbeat endpoint URL (valid once started)."""
+        return f"http://{self.host}:{self.hb_port}"
+
+    def __enter__(self) -> "AsyncWorkerServer":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    def client(self, timeout: float = 30.0) -> "AsyncWorkerClient":
+        """An :class:`AsyncWorkerClient` wired to this server's two ports."""
+        return AsyncWorkerClient(self.name, self.address, self.heartbeat_address, timeout)
+
+    # -- handlers -----------------------------------------------------------
+    async def _handle_app(
+        self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter
+    ) -> None:
+        loop = asyncio.get_running_loop()
+        try:
+            head = await _read_head(reader)
+            if head is None:
+                return
+            method, path, headers = head
+            path = path.rstrip("/") or "/"
+            if method == "GET" and path == "/tasks":
+                await _write_response(writer, 200, canonical_bytes(self.registry.names()))
+                return
+            if method != "POST" or path != "/task":
+                await _write_response(writer, 404, b"not found", "text/plain")
+                return
+            length = int(headers.get("content-length", "0"))
+            body = await reader.readexactly(length) if length else b""
+            try:
+                req = decode_payload(body)
+                ctx = Context.from_wire(req["context"])
+                # the task body is synchronous Python: run it on the offload
+                # pool so a slow task never stalls the accept/transport loop
+                result = await loop.run_in_executor(
+                    self._offload,
+                    _execute,
+                    self.registry,
+                    self.middleware,
+                    self.state,
+                    req["task"],
+                    ctx,
+                    req["inputs"],
+                )
+            except Exception as exc:  # malformed request
+                result = {"status": "error", "error": str(exc)}
+            if result.get("status") == "stream":
+                await self._send_stream(writer, result)
+                return
+            await _write_response(
+                writer, 200, encode_payload(result), "application/x-msgpack-zstd"
+            )
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass  # client went away mid-request; nothing left to tell it
+        finally:
+            await _close_writer(writer)
+
+    async def _send_stream(
+        self, writer: asyncio.StreamWriter, result: Dict[str, Any]
+    ) -> None:
+        """Incremental chunk transport: one wire frame per produced chunk.
+
+        Identical frame protocol to the threaded worker (docs/streaming.md
+        §5): ``{"s": seq, "c": chunk}`` per chunk, terminal ``{"eos": n}``,
+        ``{"err": msg}`` on a mid-stream task failure. The generator body is
+        pulled chunk-by-chunk on the offload pool; each frame is drained
+        before the next pull, so the event loop's write buffer — and behind
+        it HTTP chunked transfer — provides pull-based backpressure.
+        """
+        loop = asyncio.get_running_loop()
+        writer.write(
+            (
+                "HTTP/1.1 200 OK\r\n"
+                f"Content-Type: {STREAM_CONTENT_TYPE}\r\n"
+                "Transfer-Encoding: chunked\r\n"
+                "Connection: close\r\n\r\n"
+            ).encode("latin-1")
+        )
+        await writer.drain()
+
+        async def emit(frame: bytes) -> None:
+            writer.write(f"{len(frame):X}\r\n".encode("latin-1") + frame + b"\r\n")
+            await writer.drain()
+
+        seq = int(result.get("start", 0) or 0)
+        state, gen = self.state, result["stream"]
+        with state.lock:
+            state.busy += 1  # the task body runs HERE, not in _execute
+        try:
+            while True:
+                chunk = await loop.run_in_executor(self._offload, next, gen, _SENTINEL)
+                if chunk is _SENTINEL:
+                    break
+                await emit(encode_frame({"s": seq, "c": chunk}))
+                seq += 1
+            await emit(encode_frame({"eos": seq}))
+            with state.lock:
+                state.completed += 1
+        except Exception as exc:  # mid-stream task failure: typed error frame
+            with state.lock:
+                state.failed += 1
+            try:
+                await emit(encode_frame({"err": f"{type(exc).__name__}: {exc}"}))
+            except Exception:
+                pass  # consumer already gone; nothing left to tell it
+        finally:
+            with state.lock:
+                state.busy -= 1
+        try:
+            writer.write(b"0\r\n\r\n")  # terminate the chunked body
+            await writer.drain()
+        except Exception:
+            pass
+
+    async def _handle_hb(
+        self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter
+    ) -> None:
+        try:
+            head = await _read_head(reader)
+            if head is None:
+                return
+            method, path, _ = head
+            if method == "GET" and path.rstrip("/") in ("", "/heartbeat", "/health"):
+                body = json.dumps(telemetry({"worker": self.name})).encode()
+                await _write_response(writer, 200, body, "application/json")
+            else:
+                await _write_response(writer, 404, b"not found", "text/plain")
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            await _close_writer(writer)
+
+
+async def _close_writer(writer: asyncio.StreamWriter) -> None:
+    try:
+        writer.close()
+        await writer.wait_closed()
+    except Exception:
+        pass
+
+
+class _ChunkedBodyReader:
+    """Decode an HTTP/1.1 chunked body into a plain byte stream (async)."""
+
+    def __init__(self, reader: asyncio.StreamReader):
+        self._reader = reader
+        self._buf = b""
+        self._eof = False
+
+    async def read(self, n: int) -> bytes:
+        while not self._buf and not self._eof:
+            await self._fill()
+        out, self._buf = self._buf[:n], self._buf[n:]
+        return out
+
+    async def _fill(self) -> None:
+        size_line = await self._reader.readline()
+        size = int(size_line.strip() or b"0", 16)
+        if size == 0:
+            self._eof = True  # terminal chunk (or torn line ⇒ frame layer torn)
+            return
+        self._buf += await self._reader.readexactly(size)
+        await self._reader.readexactly(2)  # chunk-terminating CRLF
+
+
+class _SyncStreamBridge:
+    """Blocking file-like view of an async chunked body, for ``read_frames``.
+
+    Each ``read`` marshals onto the client's event loop and blocks the
+    calling (consumer) thread for the result — so sync stream stages consume
+    async transports unchanged. A transport error surfaces as a short read,
+    which the frame layer reports as a torn stream (missing EOS).
+    """
+
+    def __init__(
+        self,
+        areader: _ChunkedBodyReader,
+        writer: asyncio.StreamWriter,
+        loop: asyncio.AbstractEventLoop,
+    ):
+        self._areader = areader
+        self._writer = writer
+        self._loop = loop
+
+    def read(self, n: int) -> bytes:
+        try:
+            return asyncio.run_coroutine_threadsafe(
+                self._areader.read(n), self._loop
+            ).result()
+        except Exception:
+            return b""  # torn transport ⇒ missing EOS at the frame layer
+
+    def close(self) -> None:
+        try:
+            self._loop.call_soon_threadsafe(self._writer.close)
+        except RuntimeError:
+            pass  # loop already gone; the socket dies with it
+
+
+class AsyncWorkerClient:
+    """Coroutine worker transport with ``WorkerClient``'s failure taxonomy.
+
+    The async gateway awaits :meth:`run_task_async` / :meth:`heartbeat_async`
+    natively (no offload thread per call). Streaming responses resolve to a
+    synchronous chunk iterator backed by :class:`_SyncStreamBridge`.
+    """
+
+    def __init__(
+        self, name: str, address: str, heartbeat_address: str, timeout: float = 30.0
+    ):
+        self.name = name
+        self.address = address
+        self.heartbeat_address = heartbeat_address
+        self.timeout = timeout
+        parts = urlsplit(address)
+        self._host, self._port = parts.hostname or "127.0.0.1", parts.port or 80
+
+    async def heartbeat_async(self) -> Optional[Dict[str, Any]]:
+        """Probe the separate heartbeat port; None ⇒ system-level failure."""
+        return await check_heartbeat_async(
+            self.heartbeat_address, timeout=min(2.0, self.timeout)
+        )
+
+    async def run_task_async(
+        self, task_name: str, ctx: Context, inputs: Mapping[str, Any]
+    ) -> Dict[str, Any]:
+        """POST one task; returns the worker's status dict (or a live stream)."""
+        body = encode_payload(
+            {"task": task_name, "context": ctx.to_wire(), "inputs": dict(inputs)}
+        )
+        try:
+            reader, writer = await asyncio.wait_for(
+                asyncio.open_connection(self._host, self._port), timeout=self.timeout
+            )
+        except Exception as exc:
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+        try:
+            writer.write(
+                (
+                    f"POST /task HTTP/1.1\r\nHost: {self._host}\r\n"
+                    f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n"
+                ).encode("latin-1")
+                + body
+            )
+            await writer.drain()
+            headers = await asyncio.wait_for(
+                self._read_response_head(reader), timeout=self.timeout
+            )
+        except Exception as exc:
+            await _close_writer(writer)
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+        if headers.get("content-type", "") == STREAM_CONTENT_TYPE:
+            # incremental chunk stream: hand back a live frame iterator over
+            # the open connection; the bridge closes it when the stream ends
+            bridge = _SyncStreamBridge(
+                _ChunkedBodyReader(reader), writer, asyncio.get_running_loop()
+            )
+            return {"status": "stream", "stream": _stream_values(bridge, self.name)}
+        try:
+            length = headers.get("content-length")
+            if length is not None:
+                raw = await asyncio.wait_for(
+                    reader.readexactly(int(length)), timeout=self.timeout
+                )
+            else:
+                raw = await asyncio.wait_for(reader.read(-1), timeout=self.timeout)
+        except Exception as exc:
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+        finally:
+            await _close_writer(writer)
+        # a transport that answered but with undecodable bytes is a TYPED
+        # failure (PayloadDecodeError) — the gateway retries it elsewhere
+        return decode_payload(raw)
+
+    @staticmethod
+    async def _read_response_head(reader: asyncio.StreamReader) -> Dict[str, str]:
+        status_line = await reader.readline()
+        if not status_line:
+            raise ConnectionError("empty response")
+        parts = status_line.split()
+        if len(parts) < 2 or parts[1] != b"200":
+            raise ConnectionError(f"bad response status: {status_line!r}")
+        headers: Dict[str, str] = {}
+        while True:
+            raw = await reader.readline()
+            if raw in (b"\r\n", b"\n", b""):
+                break
+            key, _, value = raw.decode("latin-1").partition(":")
+            headers[key.strip().lower()] = value.strip()
+        return headers

@@ -77,6 +77,7 @@ KNOWN_KINDS = frozenset(
         "RESUME",
         "FORK",
         "LINEAGE",
+        "GW_HANDOFF",
     }
 )
 

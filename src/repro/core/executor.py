@@ -62,7 +62,14 @@ from repro.stream import (
 )
 
 from .context import Context, EMPTY_CONTEXT
-from .durable import Interrupted, Journal, JournalRecord, ReplayCache, payload_digest
+from .durable import (
+    Interrupted,
+    Journal,
+    JournalRecord,
+    ReplayCache,
+    encode_payload,
+    payload_digest,
+)
 from .failure import RetryPolicy, StragglerWatch
 from .gateway import Gateway, TaskCancelled
 from .graph import ContextGraph, Node, UnionNode
@@ -359,12 +366,19 @@ class _BaseExecutor:
         self,
         suspend: Mapping[str, Interrupted],
         frontier: Tuple[str, ...],
+        nodes: Optional[Mapping[str, Any]] = None,
     ) -> None:
         """Journal one SUSPEND per interrupted node; the run ends WITHOUT RUN_END.
 
         The frontier (exec nodes without a committed output) is recorded so a
         resume can audit what remained; an unserializable interrupt payload
         degrades to its repr rather than failing the suspension itself.
+
+        A node declaring ``interrupt_timeout_s`` stamps its SUSPEND with the
+        *absolute* answer deadline plus the on-timeout policy and (for the
+        ``"default"`` policy) the journaled default answer — the deadline is
+        resolved to wall time HERE, at suspension, so replaying the journal
+        later reaches the identical timeout verdict (docs/durable-workflows.md).
         """
         if self.journal is None:
             return
@@ -372,10 +386,26 @@ class _BaseExecutor:
             meta: Dict[str, Any] = {"interrupt": exc.name, "frontier": list(frontier)}
             if exc.payload is not None:
                 try:
-                    payload_digest(exc.payload)  # probes serializability
+                    encode_payload(exc.payload)  # probes wire serializability
                     meta["payload"] = exc.payload
                 except Exception:
                     meta["payload_repr"] = repr(exc.payload)
+            node = (nodes or {}).get(nid)
+            timeout_s = getattr(node, "interrupt_timeout_s", None)
+            if timeout_s is not None:
+                meta["timeout_s"] = float(timeout_s)
+                meta["deadline"] = time.time() + float(timeout_s)
+                policy = getattr(node, "interrupt_on_timeout", "") or "escalate"
+                if policy == "default":
+                    default = getattr(node, "interrupt_default", None)
+                    try:
+                        encode_payload(default)  # probes wire serializability
+                        meta["default"] = default
+                    except Exception:
+                        # an unjournalable auto-answer cannot replay
+                        # deterministically — degrade to escalation
+                        policy = "escalate"
+                meta["on_timeout"] = policy
             self.journal.append(JournalRecord(kind="SUSPEND", node_id=nid, meta=meta))
         self.journal.flush()
 
@@ -611,7 +641,7 @@ class LocalExecutor(_BaseExecutor):
 
         if suspend:
             frontier = tuple(sorted(n for n in exec_nodes if n not in outputs))
-            self._journal_suspend(suspend, frontier)
+            self._journal_suspend(suspend, frontier, exec_nodes)
             first_nid = next(iter(suspend))
             return ExecutionReport(
                 outputs=outputs,
@@ -1355,7 +1385,7 @@ class ClusterExecutor(_BaseExecutor):
                     finish(nid, value, st.ctx, "executed")
             if suspend:
                 frontier = tuple(sorted(n for n in exec_nodes if n not in outputs))
-                self._journal_suspend(suspend, frontier)
+                self._journal_suspend(suspend, frontier, exec_nodes)
             elif self.journal is not None:
                 self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
                 self.journal.flush()

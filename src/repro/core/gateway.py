@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 import random
 import threading
 import time
@@ -160,7 +161,25 @@ _ALGOS: Dict[str, Callable] = {
 
 
 class Gateway:
-    """Central task router with queue/queue-silo + allocation fallback chain."""
+    """Central task router with queue/queue-silo + allocation fallback chain.
+
+    Two runtimes share this class's semantics: the default thread-per-request
+    runtime implemented here, and the asyncio runtime in
+    :mod:`repro.core.aio` (an event-loop pump on a dedicated thread behind
+    the same blocking API). Setting ``REPRO_RUNTIME=async`` makes plain
+    ``Gateway(...)`` construction transparently build the async subclass, so
+    existing callers and tests exercise either runtime unmodified.
+    """
+
+    def __new__(cls, *args, **kw):
+        """Dispatch to the asyncio runtime when ``REPRO_RUNTIME=async``."""
+        if cls is Gateway and os.environ.get("REPRO_RUNTIME", "").lower() == "async":
+            from .aio.gateway import AsyncGateway
+
+            gw = AsyncGateway(*args, **kw)
+            gw.__dispatched_init__ = True  # __init__ below must not run twice
+            return gw
+        return super().__new__(cls)
 
     def __init__(
         self,
@@ -174,6 +193,8 @@ class Gateway:
         quarantine_s: float = 2.0,
         name: str = "gateway",
     ):
+        if getattr(self, "__dispatched_init__", False):
+            return  # __new__ already ran the async subclass's full __init__
         self.name = name
         self.handles: List[WorkerHandle] = [
             WorkerHandle(worker=w, name=getattr(w, "name", f"w{i}"))
@@ -209,6 +230,7 @@ class Gateway:
             "alloc_calls": 0,
         }
         self.suspended_runs: Dict[str, Dict[str, Any]] = {}  # run token → info
+        self.crashed = False  # set by crash() — fault injection, not shutdown
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "Gateway":
@@ -232,6 +254,18 @@ class Gateway:
             self._cv.notify_all()
         for t in self._threads:
             t.join(timeout=2)
+
+    def crash(self) -> None:
+        """Sudden-death simulation: halt dispatch/heartbeats WITHOUT draining.
+
+        Unlike :meth:`stop` this is fault injection, not shutdown — queued
+        requests stay unresolved and in-flight futures are left dangling,
+        exactly as if the gateway process died. A :class:`~repro.core.aio.
+        shards.ShardedGateway` detects the ``crashed`` flag and hands the
+        replica's partition to a survivor via the shared journal.
+        """
+        self.crashed = True
+        self.stop()
 
     def __enter__(self) -> "Gateway":
         return self.start()
@@ -448,12 +482,27 @@ class Gateway:
         t0 = time.monotonic()  # interval math must survive wall-clock steps
         try:
             result = handle.worker.run_task(req.task_name, req.ctx, req.inputs)
-        except ConnectionError:
-            # system-level failure: mark dead, requeue elsewhere. Siblings
-            # still executing on the handle are NOT evicted here — in-flight
-            # calls may yet succeed, and the heartbeat path (consecutive
-            # misses) recovers the truly-stuck ones without double-running
-            # the healthy ones.
+        except (ConnectionError, TimeoutError, PayloadDecodeError) as exc:
+            self._on_invoke_error(handle, req, exc)
+            return
+        self._on_result(handle, req, result, time.monotonic() - t0)
+
+    def _on_invoke_error(
+        self, handle: WorkerHandle, req: TaskRequest, exc: BaseException
+    ) -> None:
+        """Shared failure taxonomy for a worker invocation (both runtimes).
+
+        ``ConnectionError`` is a system-level failure: mark dead, requeue
+        elsewhere. Siblings still executing on the handle are NOT evicted
+        here — in-flight calls may yet succeed, and the heartbeat path
+        (consecutive misses) recovers the truly-stuck ones without
+        double-running the healthy ones. ``TimeoutError`` and
+        ``PayloadDecodeError`` are application-level: heartbeat may still be
+        fine, so the worker is quarantined rather than declared dead, and
+        the request retries on a healthy worker with its typed last_error
+        preserved.
+        """
+        if isinstance(exc, ConnectionError):
             owned = self._release(handle, req)
             with self._track_lock:
                 was_live, handle.live = handle.live, False
@@ -472,40 +521,27 @@ class Gateway:
             else:
                 self._resubmit(req, f"system failure on {handle.name}")
             return
-        except TimeoutError as exc:
-            # application-level failure: heartbeat may still be fine
-            owned = self._release(handle, req)
-            handle.app_live = False
-            handle.app_quarantined_until = time.monotonic() + self.quarantine_s
-            req.last_error = exc
-            if not owned:
-                return
-            req.attempts += 1
-            if req.attempts >= req.max_attempts:
-                self._fail(req, exc)
-            else:
-                self._resubmit(req, f"application failure on {handle.name}")
-            return
-        except PayloadDecodeError as exc:
-            # the worker ANSWERED, but with undecodable bytes — the typed
-            # corruption signal from repro.wire. Quarantine the worker at
-            # the application level and retry the request on a healthy one;
-            # when every attempt hits corruption the caller sees the typed
-            # PayloadDecodeError, not a generic timeout.
-            owned = self._release(handle, req)
-            handle.app_live = False
-            handle.app_quarantined_until = time.monotonic() + self.quarantine_s
-            req.last_error = exc
+        owned = self._release(handle, req)
+        handle.app_live = False
+        handle.app_quarantined_until = time.monotonic() + self.quarantine_s
+        req.last_error = exc
+        corrupt = isinstance(exc, PayloadDecodeError)
+        if corrupt:
             self.metrics["corrupt"] += 1
-            if not owned:
-                return
-            req.attempts += 1
-            if req.attempts >= req.max_attempts:
-                self._fail(req, exc)
-            else:
-                self._resubmit(req, f"corrupt payload from {handle.name}")
+        if not owned:
             return
-        dt = time.monotonic() - t0
+        req.attempts += 1
+        if req.attempts >= req.max_attempts:
+            self._fail(req, exc)
+        elif corrupt:
+            self._resubmit(req, f"corrupt payload from {handle.name}")
+        else:
+            self._resubmit(req, f"application failure on {handle.name}")
+
+    def _on_result(
+        self, handle: WorkerHandle, req: TaskRequest, result: Mapping[str, Any], dt: float
+    ) -> None:
+        """Shared status-dict handling for a completed invocation (both runtimes)."""
         owned = self._release(handle, req)
         handle.completed += 1
         handle.ewma_latency_s = (
@@ -547,6 +583,37 @@ class Gateway:
             else:
                 self._resubmit(req, f"application error on {handle.name}")
 
+    def _apply_probe(self, h: WorkerHandle, tel: Optional[Dict[str, Any]]) -> None:
+        """Apply one heartbeat verdict to a handle (both runtimes).
+
+        Liveness transition, telemetry/last_seen/miss bookkeeping, app-level
+        self-heal, the once-per-death ``on_worker_down`` edge, and the
+        consecutive-miss eviction threshold all live here so the asyncio
+        prober shares the exact state machine of the threaded one.
+        """
+        with self._track_lock:  # transition must be atomic vs _run_on's
+            was_live, h.live = h.live, tel is not None
+        h.telemetry = tel
+        h.last_seen = time.time() if tel else h.last_seen
+        h.hb_misses = 0 if tel is not None else h.hb_misses + 1
+        if tel is not None:
+            reported = getattr(h.worker, "app_alive", None)
+            if reported is not None:
+                h.app_live = reported  # the worker self-reports: trust it
+            elif time.monotonic() >= h.app_quarantined_until:
+                # workers without a self-report (HTTP transports) only
+                # self-heal after the quarantine window — a corrupt-but-
+                # alive worker must not re-enter rotation every probe
+                h.app_live = True
+        if was_live and not h.live and self.on_worker_down:
+            self.on_worker_down(h)
+        if not h.live and h.inflight_reqs and h.hb_misses >= self.evict_after_misses:
+            # the heartbeat verdict drives recovery, not just routing —
+            # but a single missed probe is routing-only (self-heals on the
+            # next probe); eviction needs consecutive misses so one GC
+            # pause or network blip can't charge the task failure budget
+            self._evict(h, "heartbeat lost")
+
     def _refresh_heartbeats(self) -> None:
         for h in self.handles:
             tel = None
@@ -560,28 +627,7 @@ class Gateway:
                 # in-proc workers with the gateway-measured probe time so
                 # stats() always carries a probe_latency_s signal
                 tel.setdefault("probe_latency_s", time.perf_counter() - t0)
-            with self._track_lock:  # transition must be atomic vs _run_on's
-                was_live, h.live = h.live, tel is not None
-            h.telemetry = tel
-            h.last_seen = time.time() if tel else h.last_seen
-            h.hb_misses = 0 if tel is not None else h.hb_misses + 1
-            if tel is not None:
-                reported = getattr(h.worker, "app_alive", None)
-                if reported is not None:
-                    h.app_live = reported  # the worker self-reports: trust it
-                elif time.monotonic() >= h.app_quarantined_until:
-                    # workers without a self-report (HTTP transports) only
-                    # self-heal after the quarantine window — a corrupt-but-
-                    # alive worker must not re-enter rotation every probe
-                    h.app_live = True
-            if was_live and not h.live and self.on_worker_down:
-                self.on_worker_down(h)
-            if not h.live and h.inflight_reqs and h.hb_misses >= self.evict_after_misses:
-                # the heartbeat verdict drives recovery, not just routing —
-                # but a single missed probe is routing-only (self-heals on the
-                # next probe); eviction needs consecutive misses so one GC
-                # pause or network blip can't charge the task failure budget
-                self._evict(h, "heartbeat lost")
+            self._apply_probe(h, tel)
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():

@@ -130,6 +130,9 @@ class CycleError(ValueError):
 
 
 STREAM_KINDS = ("", "source", "map", "reduce")
+INTERRUPT_TIMEOUT_POLICIES = ("", "default", "escalate")
+
+_UNSET = object()  # distinguishes "no default given" from an explicit None
 
 
 @dataclass
@@ -166,6 +169,14 @@ class Node:
     executors (any node may raise ``Interrupted``) but validated here:
     interrupt names must be unique per graph and are rejected on stream and
     volatile nodes, whose commit protocols cannot suspend mid-unit.
+
+    ``interrupt_timeout_s`` bounds how long a suspension may sit unanswered:
+    the deadline is journaled in the ``SUSPEND`` record (absolute wall time,
+    so replay is deterministic), and a ``resume()`` arriving after it applies
+    the ``interrupt_on_timeout`` policy — ``"default"`` auto-answers with
+    ``interrupt_default`` (journaled as an auto-``RESUME``), ``"escalate"``
+    refuses to resume and marks the workflow escalated. Explicit inputs
+    supplied by the caller always win over the timeout policy.
     """
 
     id: str
@@ -179,6 +190,9 @@ class Node:
     stream: str = ""  # "" | "source" | "map" | "reduce"
     volatile: bool = False  # digest-only commits, re-execute-and-verify replay
     interrupt: str = ""  # named interrupt point this node may suspend at
+    interrupt_timeout_s: Optional[float] = None  # unanswered-suspension bound
+    interrupt_default: Any = None  # auto-answer under the "default" policy
+    interrupt_on_timeout: str = ""  # "" | "default" | "escalate"
 
     def kwarg_for(self, dep_id: str) -> str:
         """Kwarg name a dependency's output is injected under (alias-aware)."""
@@ -328,6 +342,9 @@ class ContextGraph:
         stream: str = "",
         volatile: bool = False,
         interrupt: str = "",
+        interrupt_timeout_s: Optional[float] = None,
+        interrupt_default: Any = _UNSET,
+        interrupt_on_timeout: str = "",
     ) -> Node:
         if id in self.nodes:
             raise ValueError(f"duplicate node id {id!r}")
@@ -341,6 +358,36 @@ class ContextGraph:
                 f"node {id!r}: interrupt points are only valid on plain batch "
                 "nodes — stream and volatile commit protocols cannot suspend"
             )
+        if interrupt_on_timeout not in INTERRUPT_TIMEOUT_POLICIES:
+            raise ValueError(
+                f"node {id!r}: interrupt_on_timeout must be one of "
+                f"{INTERRUPT_TIMEOUT_POLICIES}"
+            )
+        has_timeout_cfg = (
+            interrupt_timeout_s is not None
+            or interrupt_default is not _UNSET
+            or bool(interrupt_on_timeout)
+        )
+        if has_timeout_cfg and not interrupt:
+            raise ValueError(
+                f"node {id!r}: interrupt timeout settings require an "
+                "interrupt point"
+            )
+        if interrupt_on_timeout and interrupt_timeout_s is None:
+            raise ValueError(
+                f"node {id!r}: interrupt_on_timeout needs interrupt_timeout_s"
+            )
+        if interrupt_on_timeout == "default" and interrupt_default is _UNSET:
+            raise ValueError(
+                f"node {id!r}: the 'default' timeout policy needs an "
+                "explicit interrupt_default answer"
+            )
+        if interrupt_timeout_s is not None and not interrupt_on_timeout:
+            # policy inference: a declared default answer means auto-answer;
+            # a bare timeout means somebody must be told — escalate
+            interrupt_on_timeout = (
+                "default" if interrupt_default is not _UNSET else "escalate"
+            )
         node = Node(
             id=id,
             fn=fn,
@@ -353,6 +400,11 @@ class ContextGraph:
             stream=stream,
             volatile=volatile,
             interrupt=interrupt,
+            interrupt_timeout_s=interrupt_timeout_s,
+            interrupt_default=(
+                None if interrupt_default is _UNSET else interrupt_default
+            ),
+            interrupt_on_timeout=interrupt_on_timeout,
         )
         self.nodes[id] = node
         return node

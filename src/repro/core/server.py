@@ -15,6 +15,12 @@ its chunks cross the wire incrementally as crc-checked frames in a chunked
 response body (docs/streaming.md §5); in-process the generator itself is
 handed to the caller. Either way the consumer sees chunks as they are
 produced, never a materialized batch.
+
+This module is also the *semantic* layer of the asyncio worker transport:
+``repro.core.aio.server`` rebuilds only the HTTP plumbing on an event loop
+and reuses ``_execute`` (middleware chain, DI, failure taxonomy, state
+accounting) and ``_stream_values`` (frame decode + torn-stream detection)
+from here — one execution contract, two transports.
 """
 
 from __future__ import annotations

@@ -252,8 +252,9 @@ def run_source_stage(
         attempt = 0
         while True:
             _check_cancel(cancel, node_id)
+            chunks = invoke(log.next_seq)
             try:
-                for value in invoke(log.next_seq):
+                for value in chunks:
                     _check_cancel(cancel, node_id)
                     seq = log.commit_chunk(value)  # durable BEFORE visible
                     handle.put(seq, value)
@@ -265,6 +266,16 @@ def run_source_stage(
                 attempt += 1
                 if attempt > retries:
                     raise
+            finally:
+                # a remote chunk iterator (the async transport's bridge, or a
+                # WorkerClient stream) holds a live connection — release it
+                # deterministically on cancel/failure instead of waiting on GC
+                close = getattr(chunks, "close", None)
+                if close is not None:
+                    try:
+                        close()
+                    except Exception:
+                        pass
         log.commit_eos()
         handle.close()
     except BaseException as exc:

@@ -21,6 +21,7 @@ and in the store's ``meta.json``. See docs/durable-workflows.md.
 
 from __future__ import annotations
 
+import time
 import uuid
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
@@ -34,6 +35,7 @@ from .registry import WorkflowRegistry, WorkflowStore
 
 __all__ = [
     "WorkflowError",
+    "WorkflowInterruptTimeout",
     "WorkflowNotSuspended",
     "WorkflowResult",
     "WorkflowRunner",
@@ -46,6 +48,17 @@ class WorkflowError(RuntimeError):
 
 class WorkflowNotSuspended(WorkflowError):
     """``resume(inputs=...)`` on a workflow with no suspended interrupt."""
+
+
+class WorkflowInterruptTimeout(WorkflowError):
+    """An ``on_timeout="escalate"`` interrupt expired without an answer.
+
+    Raised by :meth:`WorkflowRunner.resume` when the pending interrupt's
+    journaled deadline has passed, no explicit ``inputs`` were provided, and
+    the node's policy is to escalate rather than answer itself. The workflow
+    is marked ``status="escalated"`` in the store; a later ``resume`` with
+    explicit ``inputs`` still works (human answers always win).
+    """
 
 
 @dataclass
@@ -136,11 +149,22 @@ class WorkflowRunner:
         proceeds. The committed prefix is replayed from the journal — zero
         re-execution. Without ``inputs`` the workflow simply re-runs (useful
         after a crash that lost no interrupt: it drains to the same suspend).
+
+        Interrupts declared with ``interrupt_timeout_s`` carry an absolute
+        ``deadline`` in their SUSPEND record. When that deadline has passed
+        and no explicit ``inputs`` are given, the journaled ``on_timeout``
+        policy decides: ``"default"`` self-answers with the node's declared
+        default (journaled as an auto-RESUME, so replay is deterministic);
+        ``"escalate"`` marks the workflow ``escalated`` and raises
+        :class:`WorkflowInterruptTimeout`. Explicit ``inputs`` always win,
+        even after the deadline.
         """
         meta = self.store.meta(workflow_id)
         graph = self._graph(meta["workflow"], meta.get("args"))
         with self._journal(workflow_id, None) as j:
-            node, name = self._latest_suspend(j)
+            pending = self._pending_suspend(j)
+            node = pending.node_id if pending is not None else None
+            name = str(pending.meta.get("interrupt", "")) if pending is not None else ""
             if inputs:
                 if node is None:
                     raise WorkflowNotSuspended(
@@ -154,6 +178,28 @@ class WorkflowRunner:
                     )
                 )
                 j.flush()
+            elif pending is not None and self._expired(pending.meta):
+                policy = str(pending.meta.get("on_timeout", ""))
+                if policy == "default":
+                    j.append(
+                        JournalRecord(
+                            kind="RESUME",
+                            node_id=node,
+                            meta={
+                                "interrupt": name,
+                                "inputs": {name: pending.meta.get("default")},
+                                "auto": "timeout",
+                            },
+                        )
+                    )
+                    j.flush()
+                elif policy == "escalate":
+                    self.store.update(workflow_id, status="escalated")
+                    raise WorkflowInterruptTimeout(
+                        f"workflow {workflow_id!r} interrupt {name!r} on node "
+                        f"{node!r} expired at deadline "
+                        f"{pending.meta.get('deadline')}; escalation required"
+                    )
             self._apply_resumes(graph, j)
             report = self._execute(graph, j, self.cache, workflow_id)
         return self._finish(workflow_id, report)
@@ -258,13 +304,27 @@ class WorkflowRunner:
         return self._finish(child, report)
 
     def status(self, workflow_id: str) -> Dict[str, Any]:
-        """The workflow's meta plus its pending interrupt (if suspended)."""
+        """The workflow's meta plus its pending interrupt (if suspended).
+
+        A pending interrupt declared with a timeout also reports its absolute
+        ``deadline`` (epoch seconds), the ``on_timeout`` policy, and whether
+        the deadline has already ``expired``.
+        """
         meta = self.store.meta(workflow_id)
         with Journal(self.store.journal_path(workflow_id), sync="never") as j:
-            node, name = self._latest_suspend(j)
-        meta["pending_interrupt"] = (
-            {"node": node, "interrupt": name} if meta.get("status") == "suspended" and node else None
-        )
+            pending = self._pending_suspend(j)
+        if meta.get("status") in ("suspended", "escalated") and pending is not None:
+            info: Dict[str, Any] = {
+                "node": pending.node_id,
+                "interrupt": str(pending.meta.get("interrupt", "")),
+            }
+            if pending.meta.get("deadline") is not None:
+                info["deadline"] = pending.meta["deadline"]
+                info["on_timeout"] = str(pending.meta.get("on_timeout", ""))
+                info["expired"] = self._expired(pending.meta)
+            meta["pending_interrupt"] = info
+        else:
+            meta["pending_interrupt"] = None
         return meta
 
     # -- internals -----------------------------------------------------------
@@ -307,17 +367,35 @@ class WorkflowRunner:
                 n.data = {**dict(n.data), **inputs}
 
     @staticmethod
-    def _latest_suspend_from(records) -> Tuple[Optional[str], str]:
-        node, name = None, ""
+    def _pending_suspend_from(records) -> Optional[JournalRecord]:
+        # latest SUSPEND not yet answered by a RESUME for the same node
+        pending: Optional[JournalRecord] = None
         for rec in records:
             if rec.kind == "SUSPEND":
-                node, name = rec.node_id, str(rec.meta.get("interrupt", ""))
-            elif rec.kind == "RESUME" and rec.node_id == node:
-                node, name = None, ""  # already answered
-        return node, name
+                pending = rec
+            elif rec.kind == "RESUME" and pending is not None and rec.node_id == pending.node_id:
+                pending = None  # already answered
+        return pending
+
+    def _pending_suspend(self, journal: Journal) -> Optional[JournalRecord]:
+        return self._pending_suspend_from(list(journal.records()))
+
+    @classmethod
+    def _latest_suspend_from(cls, records) -> Tuple[Optional[str], str]:
+        rec = cls._pending_suspend_from(records)
+        if rec is None:
+            return None, ""
+        return rec.node_id, str(rec.meta.get("interrupt", ""))
 
     def _latest_suspend(self, journal: Journal) -> Tuple[Optional[str], str]:
         return self._latest_suspend_from(list(journal.records()))
+
+    @staticmethod
+    def _expired(meta: Mapping[str, Any], now: Optional[float] = None) -> bool:
+        deadline = meta.get("deadline")
+        if deadline is None:
+            return False
+        return (time.time() if now is None else now) >= float(deadline)
 
     def _finish(self, workflow_id: str, report: ExecutionReport) -> WorkflowResult:
         if report.suspended:

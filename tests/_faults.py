@@ -13,6 +13,9 @@ test_stream, and test_distributed_train:
     on a chosen chunk, after earlier chunks committed.
   - ``mid-suspend``:   ``fail_suspend_append(journal)`` — the crash lands
     while the SUSPEND record itself is being journaled.
+  - ``fail-gateway``:  ``fail_gateway(replica, after=N)`` — a (sharded)
+    gateway replica dies right after accepting its Nth submission, with
+    queued and in-flight work stranded for journal-backed handoff.
 
 Worker-level faults go through :meth:`FaultInjector.flaky_worker`, which
 wraps ``repro.core.FlakyWorker`` and auto-releases hung workers on
@@ -37,6 +40,7 @@ KILL_POINTS = (
     "post-commit-pre-cache-store",
     "mid-chunk",
     "mid-suspend",
+    "fail-gateway",
 )
 
 
@@ -137,6 +141,32 @@ class FaultInjector:
 
         journal.append = dying
         self._restores.append(lambda: setattr(journal, "append", orig))
+        return state
+
+    # -- kill point: fail-gateway ---------------------------------------------
+    def fail_gateway(self, gateway, *, after=1, message="gateway replica killed"):
+        """Arm ``gateway`` to crash right after its ``after``-th accepted submit.
+
+        The submission itself lands (queued or in-flight on the replica),
+        then :meth:`Gateway.crash` fires — the fault-injection death that
+        abandons queued work without draining. With a
+        :class:`~repro.core.aio.ShardedGateway` replica this is the handoff
+        trigger: the monitor notices ``crashed`` and a survivor adopts the
+        dead replica's partition. Restored on teardown.
+        """
+        orig = gateway.submit
+        state = {"submits": 0, "fired": False}
+
+        def dying(*args, **kw):
+            fut = orig(*args, **kw)
+            state["submits"] += 1
+            if state["submits"] >= after and not state["fired"]:
+                state["fired"] = True
+                gateway.crash()
+            return fut
+
+        gateway.submit = dying
+        self._restores.append(lambda: setattr(gateway, "submit", orig))
         return state
 
     # -- worker-level faults --------------------------------------------------

@@ -1,0 +1,280 @@
+"""Asyncio control plane (repro.core.aio): event-loop gateway, async worker
+transport, runtime-equivalence with the threaded path, and sharded gateway
+replicas with journal-backed handoff.
+
+The contract under test:
+  - ``REPRO_RUNTIME=async`` routes plain ``Gateway(...)`` construction to
+    :class:`AsyncGateway` with the public surface unchanged,
+  - an identical graph journals the identical kinds histogram on the sync
+    and async runtimes (stage-semantics equivalence, not just same outputs),
+  - the async HTTP worker speaks the same wire protocol — including
+    incremental chunk streams — as the threaded one,
+  - killing a sharded-gateway replica mid-run loses nothing and duplicates
+    nothing: a survivor adopts the partition, the journal audits the
+    handoff (GW_HANDOFF), and NODE_COMMITs stay exactly one-per-node.
+"""
+
+import collections
+import os
+import time
+
+import pytest
+from _faults import faults  # noqa: F401 — fixture
+
+from repro.core import (
+    AsyncGateway,
+    AsyncWorkerServer,
+    ClusterExecutor,
+    ContextGraph,
+    Gateway,
+    InProcWorker,
+    Journal,
+    ShardedGateway,
+    TaskRegistry,
+)
+
+
+def _registry():
+    reg = TaskRegistry()
+
+    @reg.task("add")
+    def add(ctx, a, b):
+        return a + b
+
+    @reg.task("mul2")
+    def mul2(ctx, a):
+        return a * 2
+
+    @reg.task("slow")
+    def slow(ctx, dt=0.02):
+        time.sleep(dt)
+        return dt
+
+    @reg.task("countup")
+    def countup(ctx, n=5, start=0):
+        def gen():
+            for i in range(int(start), int(n)):
+                yield i
+
+        return gen()
+
+    return reg
+
+
+def _chain_graph(n=6):
+    g = ContextGraph(name="chain")
+    g.add("seed", lambda ctx: 1)
+    prev = "seed"
+    for i in range(n):
+        nid = f"d{i}"
+        g.add(nid, "mul2", deps=[prev], aliases={prev: "a"})
+        prev = nid
+    return g, prev
+
+
+# ---------------------------------------------------------------------------
+# runtime dispatch + basic async dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_env_dispatches_async_runtime(monkeypatch):
+    monkeypatch.setenv("REPRO_RUNTIME", "async")
+    reg = _registry()
+    gw = Gateway([InProcWorker("w0", reg)])
+    assert isinstance(gw, AsyncGateway)
+    with gw:
+        assert gw.submit("add", inputs={"a": 2, "b": 3}).result(timeout=5) == 5
+
+
+def test_env_unset_keeps_threaded_runtime(monkeypatch):
+    monkeypatch.delenv("REPRO_RUNTIME", raising=False)
+    reg = _registry()
+    gw = Gateway([InProcWorker("w0", reg)])
+    assert not isinstance(gw, AsyncGateway)
+    gw.stop()
+
+
+def test_async_gateway_map_and_metrics():
+    reg = _registry()
+    workers = [InProcWorker(f"w{i}", reg) for i in range(3)]
+    with AsyncGateway(workers) as gw:
+        futs = gw.map("add", [{"a": i, "b": i} for i in range(20)])
+        assert [f.result(timeout=10) for f in futs] == [2 * i for i in range(20)]
+        assert gw.metrics["scheduled"] == 20
+        assert sum(h.completed for h in gw.handles) == 20
+
+
+def test_async_gateway_app_failure_reroutes():
+    reg = _registry()
+
+    calls = collections.Counter()
+
+    @reg.task("sometimes")
+    def sometimes(ctx):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise ValueError("first call dies")
+        return "ok"
+
+    workers = [InProcWorker(f"w{i}", reg) for i in range(2)]
+    with AsyncGateway(workers) as gw:
+        assert gw.submit("sometimes", max_attempts=3).result(timeout=10) == "ok"
+
+
+# ---------------------------------------------------------------------------
+# sync-vs-async equivalence: identical journal kinds histogram
+# ---------------------------------------------------------------------------
+
+
+def _run_cluster(gw_cls, journal_path):
+    reg = _registry()
+    graph, last = _chain_graph(5)
+    workers = [InProcWorker(f"w{i}", reg) for i in range(3)]
+    with Journal(journal_path, sync="never") as journal:
+        with gw_cls(workers) as gw:
+            ex = ClusterExecutor(gw, journal=journal, speculative=False)
+            report = ex.run(graph)
+        assert report.outputs[last] == 2**5
+        return dict(journal.kinds())
+
+
+def test_sync_and_async_runtimes_journal_same_kinds(tmp_path):
+    sync_kinds = _run_cluster(Gateway, str(tmp_path / "sync.wal"))
+    async_kinds = _run_cluster(AsyncGateway, str(tmp_path / "async.wal"))
+    assert sync_kinds == async_kinds
+    assert sync_kinds["NODE_COMMIT"] == 6  # seed + 5 chain nodes, exactly once
+
+
+# ---------------------------------------------------------------------------
+# async HTTP worker transport
+# ---------------------------------------------------------------------------
+
+
+def test_async_http_worker_end_to_end():
+    reg = _registry()
+    with AsyncWorkerServer("aw0", reg) as server:
+        client = server.client(timeout=5.0)
+        with AsyncGateway([client]) as gw:
+            assert gw.submit("add", inputs={"a": 4, "b": 5}).result(timeout=10) == 9
+            futs = gw.map("mul2", [{"a": i} for i in range(10)])
+            assert [f.result(timeout=10) for f in futs] == [2 * i for i in range(10)]
+
+
+def test_async_http_worker_streams_chunks():
+    reg = _registry()
+    with AsyncWorkerServer("aw0", reg) as server:
+        client = server.client(timeout=5.0)
+        with AsyncGateway([client]) as gw:
+            out = gw.submit("countup", inputs={"n": 6}).result(timeout=10)
+            assert list(out) == list(range(6))
+
+
+def test_async_http_worker_death_is_system_level():
+    reg = _registry()
+    server = AsyncWorkerServer("aw0", reg).start()
+    client = server.client(timeout=0.5)
+    fallback = InProcWorker("w1", reg)
+    with AsyncGateway(
+        [client, fallback], heartbeat_interval_s=0.05, evict_after_misses=2
+    ) as gw:
+        assert gw.submit("add", inputs={"a": 1, "b": 1}).result(timeout=10) == 2
+        server.stop()  # both ports down: system-level death
+        deadline = time.time() + 5
+        while time.time() < deadline:
+            names = {h.name for h in gw.live_workers()}
+            if names == {"w1"}:
+                break
+            time.sleep(0.05)
+        assert {h.name for h in gw.live_workers()} == {"w1"}
+        # the fleet keeps serving through the survivor
+        assert gw.submit("add", inputs={"a": 2, "b": 2}).result(timeout=10) == 4
+
+
+# ---------------------------------------------------------------------------
+# sharded gateway: partitioning, replica kill, journal-backed handoff
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_gateway_partitions_and_serves():
+    reg = _registry()
+    workers = [InProcWorker(f"w{i}", reg) for i in range(3)]
+    with ShardedGateway(workers, shards=3) as sgw:
+        futs = [
+            sgw.submit("add", inputs={"a": i, "b": 1}, meta={"node": f"n{i}"})
+            for i in range(12)
+        ]
+        assert [f.result(timeout=10) for f in futs] == [i + 1 for i in range(12)]
+        stats = sgw.stats()
+        assert stats["shards"] == 3 and len(stats["alive"]) == 3
+
+
+def test_sharded_replica_kill_zero_lost_zero_duplicated(tmp_path, faults):
+    """The acceptance audit: kill a replica mid-run, check the journal."""
+    reg = _registry()
+    graph, last = _chain_graph(8)
+    n_nodes = len(graph.nodes)
+    workers = [InProcWorker(f"w{i}", reg) for i in range(3)]
+    journal_path = str(tmp_path / "sharded.wal")
+    with Journal(journal_path, sync="always") as journal:
+        with ShardedGateway(workers, shards=2, journal=journal) as sgw:
+            # arm one replica to crash right after accepting a submission
+            faults.fail_gateway(sgw.replicas[0], after=1)
+            ex = ClusterExecutor(sgw, journal=journal, speculative=False)
+            report = ex.run(graph)
+        assert report.outputs[last] == 2**8
+        kinds = dict(journal.kinds())
+    # zero lost: the run completed; zero duplicated: one commit per node
+    assert kinds["NODE_COMMIT"] == n_nodes, kinds
+    assert kinds["RUN_END"] == 1
+    assert kinds.get("GW_HANDOFF", 0) >= 1
+    assert sgw.metrics["handoffs"] >= 1
+    assert sgw.metrics["recovered"] + sgw.metrics["resubmitted"] >= 1
+
+    # replay incarnation: same journal, no gateway work at all
+    with Journal(journal_path, sync="always") as journal:
+        with ShardedGateway(
+            [InProcWorker(f"v{i}", reg) for i in range(2)], shards=2, journal=journal
+        ) as sgw2:
+            ex2 = ClusterExecutor(sgw2, journal=journal, speculative=False)
+            report2 = ex2.run(graph)
+        assert report2.outputs[last] == 2**8
+        kinds2 = dict(journal.kinds())
+    assert kinds2["NODE_COMMIT"] == n_nodes  # replay added zero new commits
+
+
+def test_handoff_with_all_replicas_dead_fails_typed():
+    reg = _registry()
+    workers = [InProcWorker("w0", reg)]
+    with ShardedGateway(workers, shards=1) as sgw:
+        sgw.replicas[0].crash()
+        deadline = time.time() + 3
+        while time.time() < deadline and 0 in sgw._alive:
+            time.sleep(0.02)
+        fut = sgw.submit("add", inputs={"a": 1, "b": 1})
+        with pytest.raises(Exception):
+            fut.result(timeout=5)
+
+
+def test_sharded_gateway_under_async_runtime(monkeypatch):
+    monkeypatch.setenv("REPRO_RUNTIME", "async")
+    reg = _registry()
+    workers = [InProcWorker(f"w{i}", reg) for i in range(2)]
+    with ShardedGateway(workers, shards=2) as sgw:
+        assert all(isinstance(r, AsyncGateway) for r in sgw.replicas)
+        futs = sgw.map("mul2", [{"a": i} for i in range(8)])
+        assert [f.result(timeout=10) for f in futs] == [2 * i for i in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# inflight scale smoke (the bench runs 10k; keep CI at a quick 1k)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(os.environ.get("REPRO_FAST") == "1", reason="scale smoke")
+def test_async_gateway_sustains_many_inflight():
+    reg = _registry()
+    workers = [InProcWorker(f"w{i}", reg, max_concurrency=64) for i in range(4)]
+    with AsyncGateway(workers, max_inflight_rpc=512) as gw:
+        futs = gw.map("add", [{"a": i, "b": 1} for i in range(1000)])
+        assert [f.result(timeout=60) for f in futs] == [i + 1 for i in range(1000)]
+        assert sum(h.completed for h in gw.handles) >= 1000

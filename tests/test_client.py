@@ -1,0 +1,218 @@
+"""The unified repro.Client façade and the v2 entry-point deprecations.
+
+Covers the migration contract (docs/migration-v2.md): one constructor wires
+run-dir/journal/cache for local, cluster, sharded, workflow, and training
+paths; the pre-Client top-level aliases still resolve but warn.
+"""
+
+import warnings
+
+import pytest
+
+import repro
+from repro.client import Client, WorkflowHandle
+from repro.core import ContextGraph, Gateway, InProcWorker, Journal, TaskRegistry, interrupt
+
+
+def _registry():
+    reg = TaskRegistry()
+
+    @reg.task("mul2")
+    def mul2(ctx, a):
+        return a * 2
+
+    return reg
+
+
+def _batch_graph(name="g"):
+    g = ContextGraph(name=name)
+    g.add("a", lambda ctx: 21)
+    g.add("b", lambda ctx, a: a * 2, deps=["a"])
+    return g
+
+
+# ---------------------------------------------------------------------------
+# local execution
+# ---------------------------------------------------------------------------
+
+
+def test_local_run_and_journal_layout(tmp_path):
+    with Client(str(tmp_path)) as client:
+        report = client.run(_batch_graph(), run_id="r1")
+        assert report.outputs["b"] == 42
+    with Journal(str(tmp_path / "runs" / "r1" / "journal.wal"), sync="never") as j:
+        kinds = dict(j.kinds())
+    assert kinds["NODE_COMMIT"] == 2 and kinds["RUN_END"] == 1
+
+
+def test_rerun_same_id_replays_no_new_commits(tmp_path):
+    with Client(str(tmp_path)) as client:
+        client.run(_batch_graph(), run_id="r1")
+        report = client.run(_batch_graph(), run_id="r1")  # durable re-run
+        assert report.outputs["b"] == 42
+    with Journal(str(tmp_path / "runs" / "r1" / "journal.wal"), sync="never") as j:
+        assert dict(j.kinds())["NODE_COMMIT"] == 2  # replayed, not re-executed
+
+
+def test_run_id_defaults_to_graph_name(tmp_path):
+    with Client(str(tmp_path)) as client:
+        client.run(_batch_graph(name="named"))
+    assert (tmp_path / "runs" / "named" / "journal.wal").exists()
+
+
+def test_stream_runs_and_guards_batch_graphs(tmp_path):
+    with Client(str(tmp_path)) as client:
+        sg = ContextGraph(name="sg")
+        sg.add("src", lambda ctx: iter(range(5)), stream="source")
+        sg.add("total", lambda ctx, src: sum(src), deps=["src"], stream="reduce")
+        assert client.stream(sg).outputs["total"] == 10
+        with pytest.raises(ValueError, match="no stream stages"):
+            client.stream(_batch_graph())
+
+
+def test_closed_client_refuses_work(tmp_path):
+    client = Client(str(tmp_path))
+    client.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        client.run(_batch_graph())
+
+
+# ---------------------------------------------------------------------------
+# cluster execution
+# ---------------------------------------------------------------------------
+
+
+def _cluster_graph():
+    g = ContextGraph(name="cg")
+    g.add("a", lambda ctx: 10)
+    g.add("b", "mul2", deps=["a"])
+    return g
+
+
+def test_cluster_run_with_worker_list(tmp_path):
+    workers = [InProcWorker(f"w{i}", _registry()) for i in range(2)]
+    with Client(str(tmp_path), cluster=workers) as client:
+        assert client.run(_cluster_graph()).outputs["b"] == 20
+        assert client.gateway() is not None
+
+
+def test_sharded_cluster_run(tmp_path):
+    workers = [InProcWorker(f"w{i}", _registry()) for i in range(2)]
+    with Client(str(tmp_path), cluster=workers, shards=2) as client:
+        assert client.run(_cluster_graph()).outputs["b"] == 20
+        assert client.gateway().stats()["shards"] == 2
+
+
+def test_prebuilt_gateway_is_not_owned(tmp_path):
+    workers = [InProcWorker("w0", _registry())]
+    gw = Gateway(workers).start()
+    try:
+        with Client(str(tmp_path), cluster=gw) as client:
+            assert client.run(_cluster_graph()).outputs["b"] == 20
+        # client.close() must NOT stop a caller-owned gateway
+        assert gw.submit("mul2", inputs={"a": 3}).result(timeout=5) == 6
+    finally:
+        gw.stop()
+
+
+def test_invalid_cluster_and_shards_rejected(tmp_path):
+    with pytest.raises(TypeError, match="gateway-like"):
+        Client(str(tmp_path), cluster=42)
+    with pytest.raises(ValueError, match="shards"):
+        Client(str(tmp_path), shards=0)
+
+
+# ---------------------------------------------------------------------------
+# workflows through the client
+# ---------------------------------------------------------------------------
+
+
+def _ask(ctx):
+    return interrupt(ctx, "approve")
+
+
+def _wf(args):
+    g = ContextGraph(name="wf")
+    g.add("ask", _ask, interrupt="approve")
+    return g
+
+
+def test_workflow_handle_run_resume_status_fork(tmp_path):
+    with Client(str(tmp_path)) as client:
+        client.workflows.register("wf", _wf)
+        handle = client.workflow("wf")
+        assert isinstance(handle, WorkflowHandle)
+        res = handle.run(workflow_id="wf-1")
+        assert res.suspended and res.interrupt == "approve"
+        assert handle.status("wf-1")["pending_interrupt"]["node"] == "ask"
+        res = handle.resume("wf-1", inputs={"approve": True})
+        assert res.status == "completed" and res.outputs["ask"] is True
+        forked = handle.fork("wf-1", inputs={"approve": False}, fork_id="wf-1-b")
+        assert forked.outputs["ask"] is False
+
+
+def test_workflow_unknown_name_fails_fast(tmp_path):
+    with Client(str(tmp_path)) as client:
+        with pytest.raises(KeyError, match="unknown workflow"):
+            client.workflow("nope")
+
+
+# ---------------------------------------------------------------------------
+# training through the client
+# ---------------------------------------------------------------------------
+
+
+class _StubTrainer:
+    def __init__(self):
+        self.ran = False
+
+    def train(self):
+        self.ran = True
+        return {"final_step": 3}
+
+
+def test_train_drives_trainer_loop(tmp_path):
+    with Client(str(tmp_path)) as client:
+        trainer = _StubTrainer()
+        assert client.train(trainer) == {"final_step": 3}
+        assert trainer.ran
+        with pytest.raises(TypeError, match="train"):
+            client.train(object())
+
+
+# ---------------------------------------------------------------------------
+# deprecated entry points
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "alias,target_module,target_attr",
+    [
+        ("DurableExecutor", "repro.core.executor", "LocalExecutor"),
+        ("LocalExecutor", "repro.core.executor", "LocalExecutor"),
+        ("ClusterExecutor", "repro.core.executor", "ClusterExecutor"),
+        ("WorkflowRunner", "repro.workflow.api", "WorkflowRunner"),
+    ],
+)
+def test_deprecated_aliases_resolve_and_warn(alias, target_module, target_attr):
+    import importlib
+
+    expected = getattr(importlib.import_module(target_module), target_attr)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        resolved = getattr(repro, alias)
+    assert resolved is expected
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert any("migration-v2" in str(w.message) for w in caught)
+
+
+def test_client_export_does_not_warn():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert repro.Client is Client
+    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)]
+
+
+def test_unknown_attribute_still_raises():
+    with pytest.raises(AttributeError):
+        repro.does_not_exist

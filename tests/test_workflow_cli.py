@@ -1,0 +1,312 @@
+"""Interrupt timeouts (default-answer / escalate policies, journaled for
+deterministic replay) and the ``python -m repro workflows`` operator CLI.
+
+Contract:
+  - ``Node.interrupt`` timeout declarations are validated at graph build
+    time; the SUSPEND record carries the *absolute* deadline so every later
+    incarnation — any process, any machine — makes the same decision,
+  - an expired ``on_timeout="default"`` interrupt self-answers via a
+    journaled auto-RESUME (replay-deterministic); ``"escalate"`` marks the
+    workflow escalated and raises; explicit human inputs always win,
+  - the CLI lists pending suspensions across a store, shows one, and
+    answers one with ``resume --input k=v``.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.core import ContextGraph, Journal, interrupt
+from repro.workflow import WorkflowRegistry, WorkflowRunner
+from repro.workflow.api import WorkflowInterruptTimeout
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _ask(ctx):
+    return interrupt(ctx, "approve")
+
+
+def _after(ctx, ask):
+    return f"final:{ask}"
+
+
+def _registry(timeout_s=0.01, default=..., on_timeout=""):
+    reg = WorkflowRegistry()
+    kw = {"interrupt_timeout_s": timeout_s, "interrupt_on_timeout": on_timeout}
+    if default is not ...:
+        kw["interrupt_default"] = default
+
+    def build(args):
+        g = ContextGraph(name="wf")
+        g.add("ask", _ask, interrupt="approve", **kw)
+        g.add("after", _after, deps=["ask"])
+        return g
+
+    reg.register("wf", build)
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# declaration-time validation
+# ---------------------------------------------------------------------------
+
+
+def test_timeout_without_interrupt_rejected():
+    g = ContextGraph()
+    with pytest.raises(ValueError, match="require an interrupt"):
+        g.add("x", lambda ctx: 1, interrupt_timeout_s=5.0)
+
+
+def test_policy_without_timeout_rejected():
+    g = ContextGraph()
+    with pytest.raises(ValueError, match="interrupt_timeout_s"):
+        g.add("x", lambda ctx: 1, interrupt="gate", interrupt_on_timeout="escalate")
+
+
+def test_default_policy_requires_explicit_default():
+    g = ContextGraph()
+    with pytest.raises(ValueError, match="default"):
+        g.add(
+            "x",
+            lambda ctx: 1,
+            interrupt="gate",
+            interrupt_timeout_s=5.0,
+            interrupt_on_timeout="default",
+        )
+
+
+def test_unknown_policy_rejected():
+    g = ContextGraph()
+    with pytest.raises(ValueError, match="interrupt_on_timeout"):
+        g.add(
+            "x",
+            lambda ctx: 1,
+            interrupt="gate",
+            interrupt_timeout_s=5.0,
+            interrupt_on_timeout="page-oncall",
+        )
+
+
+def test_policy_inference():
+    g = ContextGraph()
+    n1 = g.add("a", lambda ctx: 1, interrupt="g1", interrupt_timeout_s=1.0)
+    assert n1.interrupt_on_timeout == "escalate"
+    n2 = g.add(
+        "b", lambda ctx: 1, interrupt="g2", interrupt_timeout_s=1.0, interrupt_default=0
+    )
+    assert n2.interrupt_on_timeout == "default"
+
+
+# ---------------------------------------------------------------------------
+# journaled deadline + policies at resume time
+# ---------------------------------------------------------------------------
+
+
+def test_suspend_record_carries_absolute_deadline(tmp_path):
+    runner = WorkflowRunner(_registry(timeout_s=30.0, default="ok"), str(tmp_path))
+    runner.run("wf", workflow_id="w1")
+    with Journal(runner.store.journal_path("w1"), sync="never") as j:
+        sus = [r for r in j.records() if r.kind == "SUSPEND"]
+    assert sus, "no SUSPEND journaled"
+    meta = sus[-1].meta
+    assert meta["timeout_s"] == 30.0
+    assert meta["on_timeout"] == "default" and meta["default"] == "ok"
+    assert abs(meta["deadline"] - (time.time() + 30.0)) < 5.0  # absolute epoch
+
+
+def test_expired_default_policy_self_answers_durably(tmp_path):
+    runner = WorkflowRunner(_registry(default="auto-ok"), str(tmp_path))
+    assert runner.run("wf", workflow_id="w1").suspended
+    time.sleep(0.03)
+    res = runner.resume("w1")
+    assert res.status == "completed"
+    assert res.outputs["after"] == "final:auto-ok"
+    with Journal(runner.store.journal_path("w1"), sync="never") as j:
+        auto = [r for r in j.records() if r.kind == "RESUME" and r.meta.get("auto")]
+    assert auto and auto[0].meta["auto"] == "timeout"
+    assert auto[0].meta["inputs"] == {"approve": "auto-ok"}
+    # deterministic replay: a later incarnation re-reads the SAME answer
+    res2 = runner.resume("w1")
+    assert res2.status == "completed" and res2.outputs["after"] == "final:auto-ok"
+
+
+def test_expired_escalate_policy_raises_and_marks_store(tmp_path):
+    runner = WorkflowRunner(_registry(), str(tmp_path))  # no default ⇒ escalate
+    assert runner.run("wf", workflow_id="w1").suspended
+    time.sleep(0.03)
+    with pytest.raises(WorkflowInterruptTimeout, match="escalation required"):
+        runner.resume("w1")
+    st = runner.status("w1")
+    assert st["status"] == "escalated"
+    assert st["pending_interrupt"]["expired"] is True
+    # a human answer still lands after escalation
+    res = runner.resume("w1", inputs={"approve": "human"})
+    assert res.status == "completed" and res.outputs["after"] == "final:human"
+
+
+def test_explicit_inputs_beat_expired_default(tmp_path):
+    runner = WorkflowRunner(_registry(default="auto-ok"), str(tmp_path))
+    runner.run("wf", workflow_id="w1")
+    time.sleep(0.03)
+    res = runner.resume("w1", inputs={"approve": "human"})
+    assert res.outputs["after"] == "final:human"  # not the auto default
+
+
+def test_unexpired_timeout_just_resuspends(tmp_path):
+    runner = WorkflowRunner(_registry(timeout_s=60.0, default="x"), str(tmp_path))
+    runner.run("wf", workflow_id="w1")
+    res = runner.resume("w1")  # deadline far away: plain crash-resume
+    assert res.suspended
+    st = runner.status("w1")
+    assert st["pending_interrupt"]["expired"] is False
+
+
+def test_unserializable_default_degrades_to_escalate(tmp_path):
+    reg = WorkflowRegistry()
+
+    def build(args):
+        g = ContextGraph(name="wf")
+        g.add(
+            "ask",
+            _ask,
+            interrupt="approve",
+            interrupt_timeout_s=0.01,
+            interrupt_default=lambda: None,  # not journal-serializable
+        )
+        return g
+
+    reg.register("wf", build)
+    runner = WorkflowRunner(reg, str(tmp_path))
+    runner.run("wf", workflow_id="w1")
+    with Journal(runner.store.journal_path("w1"), sync="never") as j:
+        sus = [r for r in j.records() if r.kind == "SUSPEND"][-1]
+    assert sus.meta["on_timeout"] == "escalate"
+    assert "default" not in sus.meta
+
+
+# ---------------------------------------------------------------------------
+# python -m repro workflows CLI
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def cli_env(tmp_path):
+    """A store with one suspended workflow + an importable registry module."""
+    (tmp_path / "flows.py").write_text(
+        textwrap.dedent(
+            """
+            from repro.core import interrupt
+            from repro.core.graph import ContextGraph
+            from repro.workflow import WorkflowRegistry
+
+            REGISTRY = WorkflowRegistry()
+
+            def ask(ctx):
+                return interrupt(ctx, "approve")
+
+            def after(ctx, ask):
+                return f"final:{ask}"
+
+            @REGISTRY.define("order")
+            def order(args):
+                g = ContextGraph(name="order")
+                g.add("ask", ask, interrupt="approve", interrupt_timeout_s=3600.0)
+                g.add("after", after, deps=["ask"])
+                return g
+            """
+        )
+    )
+    store = str(tmp_path / "store")
+    sys.path.insert(0, str(tmp_path))
+    try:
+        import flows
+
+        WorkflowRunner(flows.REGISTRY, store).run("order", workflow_id="order-1")
+    finally:
+        sys.path.remove(str(tmp_path))
+        sys.modules.pop("flows", None)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + str(tmp_path)
+    return store, env
+
+
+def _cli(args, env):
+    return subprocess.run(
+        [sys.executable, "-m", "repro", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=120,
+    )
+
+
+def test_cli_list_shows_pending_suspension(cli_env):
+    store, env = cli_env
+    proc = _cli(["workflows", "list", "--store", store], env)
+    assert proc.returncode == 0, proc.stderr
+    assert "order-1" in proc.stdout and "approve@ask" in proc.stdout
+
+    proc = _cli(["workflows", "list", "--store", store, "--pending", "--json"], env)
+    rows = json.loads(proc.stdout)
+    assert rows[0]["id"] == "order-1"
+    assert rows[0]["pending"]["interrupt"] == "approve"
+    assert rows[0]["pending"]["expired"] is False
+
+
+def test_cli_show_reports_deadline(cli_env):
+    store, env = cli_env
+    proc = _cli(["workflows", "show", "--store", store, "order-1"], env)
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert doc["status"] == "suspended"
+    assert doc["pending_interrupt"]["on_timeout"] == "escalate"
+
+
+def test_cli_resume_answers_interrupt(cli_env):
+    store, env = cli_env
+    proc = _cli(
+        [
+            "workflows",
+            "resume",
+            "--store",
+            store,
+            "--registry",
+            "flows:REGISTRY",
+            "order-1",
+            "--input",
+            "approve=true",
+        ],
+        env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["status"] == "completed" and out["pending"] is None
+
+    proc = _cli(["workflows", "list", "--store", store, "--pending"], env)
+    assert "order-1" not in proc.stdout
+
+
+def test_cli_input_values_parse_as_json_with_string_fallback(cli_env):
+    from repro.__main__ import _parse_inputs
+
+    assert _parse_inputs(["a=true", "b=3", "c=hello", 'd={"k": 1}']) == {
+        "a": True,
+        "b": 3,
+        "c": "hello",
+        "d": {"k": 1},
+    }
+    with pytest.raises(SystemExit):
+        _parse_inputs(["missing-equals"])
+
+
+def test_cli_unknown_id_exits_nonzero(cli_env):
+    store, env = cli_env
+    proc = _cli(["workflows", "show", "--store", store, "nope"], env)
+    assert proc.returncode == 1
+    assert "nope" in proc.stderr
