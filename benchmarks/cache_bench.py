@@ -15,8 +15,17 @@ The warm journal is then audited (CACHE_HIT/NODE_COMMIT counts in
 cache-accelerated run remains a complete, standalone durable record —
 the contract specified in docs/result-cache.md §5.
 
+``--tiered`` benches the fleet scenario instead (docs/journal-lifecycle.md
+§4): host A runs cold through a :class:`~repro.cache.TieredCacheBackend`
+(local tier + shared remote path), then host B — a *fresh* local tier, same
+shared remote — runs the same graph. Every node must be answered by
+read-through from the shared tier (and promoted into B's local tier), making
+B's "cold" run ≥2x faster than a genuinely cold one: cross-host dedup, not
+just cross-run.
+
 Run:   PYTHONPATH=src python -m benchmarks.cache_bench
        PYTHONPATH=src python -m benchmarks.cache_bench --smoke --json out.json
+       PYTHONPATH=src python -m benchmarks.cache_bench --smoke --tiered
 """
 
 from __future__ import annotations
@@ -124,6 +133,85 @@ def bench(args: argparse.Namespace) -> dict:
     return result
 
 
+def bench_tiered(args: argparse.Namespace) -> dict:
+    """Two-host tiered-cache cycle: host A cold, host B served by the shared tier."""
+    k = 3 if args.smoke else args.diamonds
+    task_s = 0.002 if args.smoke else args.task_s
+    slow_s = 0.01 if args.smoke else args.slow_s
+    n_nodes = 4 * k
+    expected = {f"join{i}": 5 for i in range(k)}
+
+    from repro.wire import payload_digest
+
+    payload_digest({"warmup": 0})  # pull in numpy etc. outside the timed region
+
+    remote_root = os.path.join(args.out, "cache_bench_remote")
+    host_a = os.path.join(args.out, "cache_bench_hostA")
+    host_b = os.path.join(args.out, "cache_bench_hostB")
+    cold_wal = os.path.join(args.out, "cache_bench_tiered_cold.wal")
+    b_wal = os.path.join(args.out, "cache_bench_tiered_b.wal")
+    for path in (cold_wal, b_wal):
+        if os.path.exists(path):
+            os.remove(path)
+    for root in (remote_root, host_a, host_b):
+        shutil.rmtree(root, ignore_errors=True)
+
+    cache_a = ResultCache(host_a, remote_root=remote_root)
+    rep_cold, cold_s = _timed_run(args, k, task_s, slow_s, cold_wal, cache_a)
+    assert len(rep_cold.executed) == n_nodes, rep_cold
+    assert cache_a.backend.remote_errors == 0, cache_a.backend.remote_errors
+    remote_bytes = cache_a.backend.remote_size_bytes()
+    assert remote_bytes > 0, "cold run published nothing to the shared tier"
+
+    floor = 2.0
+    b_s = float("inf")
+    for _attempt in range(3):  # best-of-3: one scheduler hiccup must not fail CI
+        if os.path.exists(b_wal):
+            os.remove(b_wal)
+        shutil.rmtree(host_b, ignore_errors=True)  # host B starts locally cold
+        cache_b = ResultCache(host_b, remote_root=remote_root)
+        rep_b, attempt_s = _timed_run(args, k, task_s, slow_s, b_wal, cache_b)
+        assert len(rep_b.cached) == n_nodes, rep_b
+        assert rep_b.executed == (), rep_b
+        # every *unique* key came through the shared tier and was promoted
+        # (duplicate-key nodes are then answered by memory/local tiers)
+        assert cache_b.backend.remote_hits > 0, cache_b.backend.remote_hits
+        assert cache_b.backend.promotions == cache_b.backend.remote_hits, (
+            cache_b.backend.promotions,
+            cache_b.backend.remote_hits,
+        )
+        b_s = min(b_s, attempt_s)
+        if cold_s / b_s >= floor:
+            break
+
+    for nid, want in expected.items():
+        assert rep_b.outputs[nid] == want, f"hostB {nid}: {rep_b.outputs[nid]}"
+
+    speedup = cold_s / b_s if b_s else float("inf")
+    assert speedup >= floor, (
+        f"second-host cold run only {speedup:.2f}x faster via the shared "
+        f"tier (floor {floor}x)"
+    )
+    result = {
+        "mode": "tiered",
+        "diamonds": k,
+        "nodes": n_nodes,
+        "workers": args.workers,
+        "cold_wall_s": round(cold_s, 4),
+        "warm_wall_s": round(b_s, 4),  # host B; named for best-of-N aggregation
+        "speedup": round(speedup, 2),
+        "remote_hits": cache_b.backend.remote_hits,
+        "promotions": cache_b.backend.promotions,
+        "remote_bytes": remote_bytes,
+        "local_b_bytes": cache_b.backend.size_bytes(),
+        "outputs_ok": True,
+    }
+    print(f"cold_wall_s,{cold_s * 1e3:.1f}ms")
+    print(f"second_host_wall_s,{b_s * 1e3:.1f}ms")
+    print(f"tiered_speedup,{speedup:.2f}x")
+    return result
+
+
 def main() -> None:
     """CLI entry point (CSV-ish lines; ``--json`` writes the result blob)."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -143,12 +231,18 @@ def main() -> None:
         help="take the best-of-N of each mode's wall clock",
     )
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, assert-no-crash")
+    ap.add_argument(
+        "--tiered",
+        action="store_true",
+        help="bench the two-host shared-remote-tier scenario instead",
+    )
     ap.add_argument("--json", type=str, default="", help="write the result blob to this path")
     ap.add_argument("--out", type=str, default=".", help="directory for journals and the cache")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
-    runs = [bench(args) for _ in range(1 if args.smoke else args.repeat)]
+    bench_fn = bench_tiered if args.tiered else bench
+    runs = [bench_fn(args) for _ in range(1 if args.smoke else args.repeat)]
     best = dict(runs[0])
     # best-of-N per MODE (not per run): each mode's floor is its honest cost
     best["cold_wall_s"] = min(r["cold_wall_s"] for r in runs)

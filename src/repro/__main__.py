@@ -15,6 +15,17 @@ answer one from a terminal::
 ``--registry module:attr`` so the workflow can actually continue. ``--input``
 values are parsed as JSON when possible and fall back to raw strings, so
 ``--input approve=true`` injects a boolean and ``--input note=hi`` a string.
+
+The journal-lifecycle family (docs/journal-lifecycle.md) operates on a
+journal *path* — a run's ``runs/<id>/journal.wal`` or a workflow store's
+``<id>/journal.wal`` — while the owning process is stopped::
+
+    python -m repro compact ./state/runs/etl/journal.wal --keep-since 120
+    python -m repro lineage ./state/runs/etl/journal.wal --node train --depth 2
+
+``compact`` folds committed history into one digest-chained SNAPSHOT record
+(``--keep-since N`` retains logical seqs >= N as addressable suffix
+records); ``lineage`` projects and queries the provenance index.
 """
 
 from __future__ import annotations
@@ -156,6 +167,60 @@ def _cmd_resume(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_compact(args: argparse.Namespace) -> int:
+    from repro.journal import CompactionError, compact_journal
+
+    try:
+        stats = compact_journal(
+            args.journal, keep_since=args.keep_since, dry_run=args.dry_run
+        )
+    except CompactionError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+    obj = stats.to_obj()
+    if args.json:
+        print(json.dumps(obj, indent=2, sort_keys=True))
+        return 0
+    verb = "would fold" if stats.dry_run else "folded"
+    print(
+        f"{verb} {stats.folded} records into SNAPSHOT "
+        f"({stats.state_records} live, base_seq={stats.base_seq}, "
+        f"chain={stats.chain}); "
+        f"{stats.before_records} -> {stats.after_records} records, "
+        f"{stats.bytes_before} -> {stats.bytes_after} bytes"
+    )
+    return 0
+
+
+def _cmd_lineage(args: argparse.Namespace) -> int:
+    import os
+
+    from repro.journal import LineageIndex
+
+    if not os.path.exists(args.journal):
+        print(f"error: no journal at {args.journal!r}", file=sys.stderr)
+        return 1
+    with Journal(args.journal, sync="never") as j:
+        idx = LineageIndex.build(j)
+    if args.node:
+        out: Any = idx.provenance(args.node, depth=args.depth)
+        if args.consumers:
+            out = {"provenance": out, "consumers": idx.consumers(args.node)}
+    elif args.json:
+        out = idx.to_obj()
+    else:
+        for n in idx.nodes():
+            e = idx.entry(n)
+            print(
+                f"{n}: out={e['output_digest'][:12]} "
+                f"ctx={e['context_digest'][:12]} in={e['input_digest'][:12]} "
+                f"deps={','.join(e['deps']) or '-'}"
+            )
+        return 0
+    print(json.dumps(out, indent=2, sort_keys=True))
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The ``python -m repro`` argument parser (exposed for tests)."""
     parser = argparse.ArgumentParser(prog="repro", description=__doc__)
@@ -194,6 +259,46 @@ def build_parser() -> argparse.ArgumentParser:
     )
     p_resume.add_argument("workflow_id")
     p_resume.set_defaults(fn=_cmd_resume)
+
+    p_compact = sub.add_parser(
+        "compact", help="fold committed journal history into a SNAPSHOT record"
+    )
+    p_compact.add_argument("journal", help="path to the journal file (quiescent)")
+    p_compact.add_argument(
+        "--keep-since",
+        type=int,
+        default=None,
+        metavar="SEQ",
+        help="retain logical record seqs >= SEQ as addressable suffix records",
+    )
+    p_compact.add_argument(
+        "--dry-run", action="store_true", help="report what would fold; write nothing"
+    )
+    p_compact.add_argument("--json", action="store_true", help="machine-readable stats")
+    p_compact.set_defaults(fn=_cmd_compact)
+
+    p_lineage = sub.add_parser(
+        "lineage", help="project and query the journal's provenance index"
+    )
+    p_lineage.add_argument("journal", help="path to the journal file")
+    p_lineage.add_argument(
+        "--node", default=None, help="print this node's provenance tree"
+    )
+    p_lineage.add_argument(
+        "--depth",
+        type=int,
+        default=None,
+        help="bound the provenance traversal depth (default: unbounded)",
+    )
+    p_lineage.add_argument(
+        "--consumers",
+        action="store_true",
+        help="with --node: also list downstream consumers",
+    )
+    p_lineage.add_argument(
+        "--json", action="store_true", help="full projection as JSON"
+    )
+    p_lineage.set_defaults(fn=_cmd_lineage)
     return parser
 
 

@@ -28,6 +28,7 @@ from .store import (
     FileCacheBackend,
     MemoryLRU,
     ResultCache,
+    TieredCacheBackend,
     atomic_write_bytes,
 )
 
@@ -38,5 +39,6 @@ __all__ = [
     "FileCacheBackend",
     "MemoryLRU",
     "ResultCache",
+    "TieredCacheBackend",
     "atomic_write_bytes",
 ]

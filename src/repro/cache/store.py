@@ -46,6 +46,7 @@ __all__ = [
     "FileCacheBackend",
     "MemoryLRU",
     "ResultCache",
+    "TieredCacheBackend",
     "atomic_write_bytes",
 ]
 
@@ -222,6 +223,10 @@ class FileCacheBackend:
         if self._approx_bytes is not None:
             self._approx_bytes = max(0, self._approx_bytes - size)
 
+    def discard(self, key: CacheKey) -> None:
+        """Remove ``key``'s blob (e.g. its envelope failed to decode)."""
+        self._drop(self.path_for(key))
+
     # -- eviction ------------------------------------------------------------
     def evict(self, prefix: str = "") -> int:
         """Delete every blob whose key id starts with ``prefix``; return count."""
@@ -290,25 +295,144 @@ class FileCacheBackend:
                     pass
 
 
+class TieredCacheBackend:
+    """Local file tier chained to a *shared* remote tier (fleet-wide dedup).
+
+    The remote tier is any filesystem path every host can reach (NFS mount,
+    fuse bucket, ...) holding the same content-addressed blob layout. Reads
+    go local-first; a remote hit is *promoted* — copied into the local tier —
+    so the next read is local. Writes publish to both tiers, remote last and
+    best-effort: the same atomic tmp+rename publish means a crash mid-store
+    leaves either the previous remote blob or none, never a torn frame, and
+    a failed/unreachable remote publish only increments ``remote_errors`` —
+    the run itself never fails because the shared tier is down
+    (docs/journal-lifecycle.md §4).
+
+    Only the local tier carries the byte budget; the shared tier's retention
+    is the fleet operator's policy (``evict`` does propagate, for wholesale
+    invalidation of a bad task version).
+    """
+
+    def __init__(self, local: FileCacheBackend, remote: FileCacheBackend):
+        self.local = local
+        self.remote = remote
+        self.remote_hits = 0  # reads answered by the shared tier
+        self.promotions = 0  # remote hits copied into the local tier
+        self.remote_errors = 0  # failed best-effort remote publishes
+
+    @classmethod
+    def at(
+        cls,
+        local_root: str,
+        remote_root: str,
+        max_bytes: Optional[int] = None,
+        fsync: bool = False,
+    ) -> "TieredCacheBackend":
+        """Build both tiers from their roots (budget applies locally only)."""
+        return cls(
+            FileCacheBackend(local_root, max_bytes=max_bytes, fsync=fsync),
+            FileCacheBackend(remote_root, fsync=fsync),
+        )
+
+    @property
+    def corrupt_drops(self) -> int:
+        """Corrupt frames dropped across both tiers."""
+        return self.local.corrupt_drops + self.remote.corrupt_drops
+
+    def path_for(self, key: CacheKey) -> str:
+        """The *local* blob path for ``key`` (promotion target)."""
+        return self.local.path_for(key)
+
+    def get(self, key: CacheKey) -> Optional[bytes]:
+        """Local tier first; on miss, read through to the shared tier.
+
+        A shared-tier hit is promoted into the local tier so subsequent
+        reads on this host stay local.
+        """
+        body = self.local.get(key)
+        if body is not None:
+            return body
+        body = self.remote.get(key)
+        if body is None:
+            return None
+        self.remote_hits += 1
+        try:
+            self.local.put(key, body)
+            self.promotions += 1
+        except OSError:
+            pass  # a full/broken local disk must not turn a hit into a miss
+        return body
+
+    def put(self, key: CacheKey, body: bytes) -> str:
+        """Publish to the local tier, then best-effort to the shared tier.
+
+        Any remote failure — unreachable mount, mid-publish crash — only
+        increments ``remote_errors``; the local publish already succeeded
+        and the run must never fail because the shared tier is down.
+        """
+        path = self.local.put(key, body)
+        try:
+            self._remote_put(key, body)
+        except Exception:
+            self.remote_errors += 1
+        return path
+
+    def _remote_put(self, key: CacheKey, body: bytes) -> None:
+        # separable so tests can kill the remote publish (fail_remote_store)
+        self.remote.put(key, body)
+
+    def discard(self, key: CacheKey) -> None:
+        """Drop ``key`` from both tiers.
+
+        Both, because a blob whose *envelope* is corrupt would otherwise be
+        re-promoted from the shared tier on the very next read.
+        """
+        self.local.discard(key)
+        self.remote.discard(key)
+
+    def evict(self, prefix: str = "") -> int:
+        """Evict from both tiers; returns the count of *local* blobs removed."""
+        n = self.local.evict(prefix)
+        self.remote.evict(prefix)
+        return n
+
+    def size_bytes(self) -> int:
+        """Local-tier bytes (the budgeted tier)."""
+        return self.local.size_bytes()
+
+    def remote_size_bytes(self) -> int:
+        """Shared-tier bytes (operator-managed, unbudgeted)."""
+        return self.remote.size_bytes()
+
+
 class ResultCache:
     """Two-tier content-addressed result cache: LRU front, file-blob back.
 
     ``root=None`` runs memory-only (useful for tests and single-process
     runs); with a root, entries survive process restarts and are shared by
-    every executor pointed at the same directory. All methods are safe to
-    call from executor worker threads.
+    every executor pointed at the same directory. ``remote_root`` chains the
+    file tier to a shared :class:`TieredCacheBackend` remote so a fleet
+    deduplicates across hosts. All methods are safe to call from executor
+    worker threads.
     """
 
     def __init__(
         self,
         root: Optional[str] = None,
         *,
-        backend: Optional[FileCacheBackend] = None,
+        backend: Optional[Any] = None,
         memory_entries: int = 256,
         max_bytes: Optional[int] = None,
         fsync: bool = False,
+        remote_root: Optional[str] = None,
     ):
-        if backend is None and root is not None:
+        if backend is None and remote_root is not None:
+            if root is None:
+                raise ValueError("remote_root needs a local root to promote into")
+            backend = TieredCacheBackend.at(
+                root, remote_root, max_bytes=max_bytes, fsync=fsync
+            )
+        elif backend is None and root is not None:
             backend = FileCacheBackend(root, max_bytes=max_bytes, fsync=fsync)
         self.backend = backend
         self.memory = MemoryLRU(memory_entries)
@@ -339,7 +463,7 @@ class ResultCache:
                     # frame checksum passed but the envelope didn't decode —
                     # e.g. written by an incompatible future version
                     self.stats["corrupt"] += 1
-                    self.backend._drop(self.backend.path_for(key))
+                    self.backend.discard(key)
                     ent = None
                 if ent is not None:
                     self.memory.put(key, ent)

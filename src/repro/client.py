@@ -42,6 +42,7 @@ from repro.core.durable import Journal
 from repro.core.executor import ClusterExecutor, ExecutionReport, LocalExecutor
 from repro.core.gateway import Gateway
 from repro.core.graph import ContextGraph
+from repro.journal import CompactionStats, LineageIndex, compact_journal
 from repro.workflow import WorkflowRegistry, WorkflowRunner
 from repro.workflow.api import WorkflowResult
 
@@ -79,6 +80,21 @@ class WorkflowHandle:
         """Store meta plus pending-interrupt detail for one id."""
         return self._runner.status(workflow_id)
 
+    def lineage(self, workflow_id: str) -> LineageIndex:
+        """Provenance projection over one workflow id's journal."""
+        with Journal(
+            self._runner.store.journal_path(workflow_id), sync="never"
+        ) as j:
+            return LineageIndex.build(j)
+
+    def compact(
+        self, workflow_id: str, keep_since: Optional[int] = None
+    ) -> CompactionStats:
+        """Compact one workflow id's journal (offline; see compact_journal)."""
+        return compact_journal(
+            self._runner.store.journal_path(workflow_id), keep_since=keep_since
+        )
+
 
 class Client:
     """Unified façade over local, cluster, workflow, and training execution.
@@ -101,6 +117,12 @@ class Client:
     cache:
         ``True`` (default) shares one content-addressed ResultCache across
         every run and workflow under ``base_dir/.cache``.
+    remote_cache:
+        Optional shared filesystem path: chains the local cache to a
+        :class:`~repro.cache.TieredCacheBackend` remote tier so a fleet of
+        clients on different hosts deduplicates work across hosts (reads
+        promote remote hits into the local tier; remote publishes are
+        best-effort). Requires ``cache=True``.
     """
 
     def __init__(
@@ -111,6 +133,7 @@ class Client:
         shards: int = 1,
         workflows: Optional[WorkflowRegistry] = None,
         cache: bool = True,
+        remote_cache: Optional[str] = None,
         journal_sync: str = "always",
         max_workers: int = 8,
         gateway_options: Optional[Mapping[str, Any]] = None,
@@ -123,7 +146,14 @@ class Client:
         self.journal_sync = journal_sync
         self.max_workers = max_workers
         self.workflows = workflows if workflows is not None else WorkflowRegistry()
-        self.cache = ResultCache(os.path.join(base_dir, ".cache")) if cache else None
+        if cache:
+            self.cache: Optional[ResultCache] = ResultCache(
+                os.path.join(base_dir, ".cache"), remote_root=remote_cache
+            )
+        elif remote_cache is not None:
+            raise ValueError("remote_cache requires cache=True")
+        else:
+            self.cache = None
         self._gateway_options = dict(gateway_options or {})
         self._gateway: Optional[Any] = None
         self._owns_gateway = False
@@ -205,6 +235,38 @@ class Client:
                 f"got {type(trainer).__name__}"
             )
         return trainer.train()
+
+    # -- journal lifecycle (docs/journal-lifecycle.md) -----------------------
+    def journal_path(self, run_id: str) -> str:
+        """The durable journal path behind one ``run_id``."""
+        return os.path.join(self.base_dir, "runs", run_id, "journal.wal")
+
+    def lineage(self, run_id: str) -> LineageIndex:
+        """Provenance projection over one run's journal.
+
+        Derived and disposable — rebuilt from the journal (compacted or not)
+        on every call; answers ``provenance``/``consumers``/``produced``
+        queries with bounded traversals. Raises ``FileNotFoundError`` for an
+        unknown ``run_id``.
+        """
+        self._check_open()
+        path = self.journal_path(run_id)
+        if not os.path.exists(path):
+            raise FileNotFoundError(f"no journal for run_id {run_id!r} at {path}")
+        with Journal(path, sync="never") as j:
+            return LineageIndex.build(j)
+
+    def compact(
+        self, run_id: str, keep_since: Optional[int] = None
+    ) -> CompactionStats:
+        """Fold one run's committed journal prefix into a SNAPSHOT record.
+
+        Offline operation: call it between runs, never while the run is
+        executing. ``keep_since`` retains logical seqs >= that value as
+        addressable suffix records (e.g. fork points); ``None`` folds all.
+        """
+        self._check_open()
+        return compact_journal(self.journal_path(run_id), keep_since=keep_since)
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:

@@ -48,6 +48,7 @@ __all__ = [
     "Interrupted",
     "interrupt",
     "KNOWN_KINDS",
+    "SNAPSHOT_VERSION",
     "encode_payload",
     "decode_payload",
     "payload_digest",
@@ -55,6 +56,13 @@ __all__ = [
 ]
 
 _HEADER = struct.Struct("<II")  # (length, crc32)
+
+#: Layout version of the SNAPSHOT record this reader understands
+#: (docs/journal-format.md §2.6). A SNAPSHOT stamped with a HIGHER version
+#: was folded by a newer writer whose state layout this reader cannot
+#: interpret; ``records()`` skips it with a RuntimeWarning instead of
+#: mis-applying a half-understood state bundle.
+SNAPSHOT_VERSION = 1
 
 #: Every record kind this reader version interprets. Kinds outside this set
 #: are *tolerated* (docs/journal-format.md §5): ``records()`` yields them
@@ -78,6 +86,7 @@ KNOWN_KINDS = frozenset(
         "FORK",
         "LINEAGE",
         "GW_HANDOFF",
+        "SNAPSHOT",
     }
 )
 
@@ -257,13 +266,23 @@ class Journal:
         """
         return dict(Counter(rec.kind for rec in self.records()))
 
-    def records(self) -> Iterator[JournalRecord]:
+    def records(self, expand: bool = True) -> Iterator[JournalRecord]:
         """Yield every committed record, in append order.
 
         A checksum-valid frame whose body nonetheless fails to decode (e.g.
         written by an incompatible future version) is skipped with a
         warning, never raised — interpreting readers must stay usable on
         journals that carry record shapes they predate (format §5).
+
+        A ``SNAPSHOT`` record (journal compaction, format §2.6) is yielded
+        and then — with ``expand=True``, the default — *expanded*: the live
+        records it folded stream out after it, exactly as the pre-compaction
+        journal carried them, so every interpreting reader (replay oracle,
+        workflow runner, lineage index) sees an identical history. A
+        snapshot stamped with a layout version NEWER than
+        :data:`SNAPSHOT_VERSION` is skipped whole with a RuntimeWarning —
+        mis-applying a half-understood state bundle would corrupt replay.
+        ``expand=False`` yields the raw physical frames (compaction tooling).
         """
         with open(self.path, "rb") as fh:
             data = fh.read()
@@ -295,11 +314,112 @@ class Journal:
                     stacklevel=2,
                 )
                 continue
+            if rec.kind == "SNAPSHOT":
+                version = int(rec.meta.get("version") or 0)
+                if version > SNAPSHOT_VERSION:
+                    # the version gate (format §2.6): a well-formed SNAPSHOT
+                    # from a newer layout version must NOT be applied — its
+                    # state layout may have changed meaning under this reader
+                    warnings.warn(
+                        f"journal {self.path}: skipping SNAPSHOT of newer "
+                        f"layout version {version} (reader understands "
+                        f"<= {SNAPSHOT_VERSION}) at offset "
+                        f"{off - _HEADER.size - length}; compacted history "
+                        "is unavailable to this reader",
+                        RuntimeWarning,
+                        stacklevel=2,
+                    )
+                    continue
+                yield rec
+                if not expand:
+                    continue
+                for obj in rec.meta.get("records") or ():
+                    try:
+                        sub = JournalRecord.from_obj(obj)
+                    except Exception as exc:
+                        warnings.warn(
+                            f"journal {self.path}: skipping undecodable "
+                            f"snapshot state record ({exc})",
+                            RuntimeWarning,
+                            stacklevel=2,
+                        )
+                        continue
+                    if sub.kind not in KNOWN_KINDS or sub.kind == "SNAPSHOT":
+                        warnings.warn(
+                            f"journal {self.path}: skipping snapshot state "
+                            f"record of unknown kind {sub.kind!r}",
+                            RuntimeWarning,
+                            stacklevel=2,
+                        )
+                        continue
+                    yield sub
+                continue
             yield rec
 
+    # -- compaction bookkeeping (docs/journal-format.md §2.6) ----------------
+    def snapshot(self) -> Optional[JournalRecord]:
+        """The journal's SNAPSHOT record (always the first frame), or None."""
+        for rec in self.records(expand=False):
+            if rec.kind == "SNAPSHOT":
+                return rec
+            return None
+        return None
+
+    def base_seq(self) -> int:
+        """First logical record seq still individually addressable.
+
+        An uncompacted journal starts at 0. A compacted journal's SNAPSHOT
+        folded the original records ``0 .. base_seq-1``; those seqs are no
+        longer addressable (e.g. as a ``fork(at=...)`` point) — only the
+        folded *live state* survives, not per-record identity.
+        """
+        snap = self.snapshot()
+        return int(snap.meta.get("base_seq") or 0) if snap is not None else 0
+
+    def end_seq(self) -> int:
+        """One past the last logical record seq (``base_seq + raw suffix``)."""
+        seq = 0
+        for rec in self.records(expand=False):
+            if rec.kind == "SNAPSHOT":
+                seq = int(rec.meta.get("base_seq") or 0)
+            else:
+                seq += 1
+        return seq
+
+    def indexed_records(
+        self,
+    ) -> Iterator[Tuple[Optional[int], JournalRecord]]:
+        """Yield ``(logical_seq, record)`` pairs, expanding snapshots.
+
+        Records folded into a SNAPSHOT carry ``None`` — their individual
+        seqs were retired by compaction (only live state survives); physical
+        suffix records carry their stable logical seq, which addressing
+        operations (``fork(at=...)``) keep honouring across compactions.
+        """
+        seq = 0
+        for rec in self.records(expand=False):
+            if rec.kind != "SNAPSHOT":
+                yield seq, rec
+                seq += 1
+                continue
+            seq = int(rec.meta.get("base_seq") or 0)
+            for obj in rec.meta.get("records") or ():
+                try:
+                    sub = JournalRecord.from_obj(obj)
+                except Exception:
+                    continue
+                if sub.kind in KNOWN_KINDS and sub.kind != "SNAPSHOT":
+                    yield None, sub
+
     def lineage(self) -> Optional[Dict[str, Any]]:
-        """The lineage header (first record, if it is a ``LINEAGE``), or None."""
+        """The lineage header (first record, if it is a ``LINEAGE``), or None.
+
+        Compaction-transparent: a compacted journal leads with its SNAPSHOT
+        record, whose expansion re-yields the original LINEAGE header first.
+        """
         for rec in self.records():
+            if rec.kind == "SNAPSHOT":
+                continue
             if rec.kind == "LINEAGE":
                 return dict(rec.meta)
             return None
@@ -327,9 +447,13 @@ class ReplayCache:
         self._committed: Dict[Tuple[str, str, str], JournalRecord] = {}
         self._chunks: Dict[Tuple[str, str, str], Dict[int, JournalRecord]] = {}
         self._eos: Dict[Tuple[str, str, str], JournalRecord] = {}
-        self.stats = {"commits": 0, "replayed": 0, "chunks": 0}
+        # ``scanned`` counts the records this oracle had to walk to build
+        # itself — the observable replay cost a compaction is meant to cut
+        # from O(history) to O(live state) (docs/journal-lifecycle.md §1)
+        self.stats = {"commits": 0, "replayed": 0, "chunks": 0, "scanned": 0}
         if journal is not None and os.path.exists(journal.path):
             for rec in journal.records():
+                self.stats["scanned"] += 1
                 if rec.kind == "NODE_COMMIT":
                     key = (rec.node_id, rec.context_digest, rec.input_digest)
                     self._committed[key] = rec

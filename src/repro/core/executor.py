@@ -44,7 +44,7 @@ import time
 from collections import deque
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Tuple
 
 from repro.cache import CacheKey, CachedResult, ResultCache
 from repro.wire import unwrap_digested
@@ -156,6 +156,7 @@ class _BaseExecutor:
         meta: Optional[dict] = None,
         volatile: bool = False,
         expected: Optional[str] = None,
+        deps: Optional[Iterable[str]] = None,
     ) -> None:
         """Journal one NODE_COMMIT and index it for replay.
 
@@ -164,7 +165,12 @@ class _BaseExecutor:
         digest a previous incarnation committed for the same identity), a
         disagreeing re-execution is surfaced as a hard non-determinism error
         before anything downstream can consume the divergent value.
+        ``deps`` (the node's upstream ids) are recorded in ``meta`` for the
+        lineage index (repro.journal.lineage) — provenance annotations the
+        replay oracle itself ignores.
         """
+        if deps:
+            meta = {**(meta or {}), "deps": sorted(set(deps))}
         payload, ref = output, ""
         if self._spill_put is not None and not volatile:
             try:
@@ -235,6 +241,7 @@ class _BaseExecutor:
         key: Optional[CacheKey],
         ctx_digest: str,
         in_digest: str,
+        deps: Optional[Iterable[str]] = None,
     ) -> Optional[CachedResult]:
         """Consult the result cache; a hit journals CACHE_HIT + NODE_COMMIT.
 
@@ -261,7 +268,7 @@ class _BaseExecutor:
         meta: Dict[str, Any] = {"cache": key.id}
         if ent.facts:
             meta["facts"] = dict(ent.facts)
-        self._commit(node_id, ctx_digest, in_digest, ent.value, 0, meta=meta)
+        self._commit(node_id, ctx_digest, in_digest, ent.value, 0, meta=meta, deps=deps)
         return ent
 
     def _cache_store(
@@ -765,11 +772,12 @@ class LocalExecutor(_BaseExecutor):
                 ctx = ctx.with_data(value.facts, origin=nid)
                 value = value.output
             self._commit(
-                nid, ctx_d, in_d, value, 0, meta={"facts": facts} if facts else None
+                nid, ctx_d, in_d, value, 0,
+                meta={"facts": facts} if facts else None, deps=node.deps,
             )
             return value, ctx, "executed"
 
-        log = ChunkLog(self.journal, self.replay, nid, ctx_d, in_d)
+        log = ChunkLog(self.journal, self.replay, nid, ctx_d, in_d, deps=node.deps)
         if not log.eos:
             self._journal_stream_start(nid, kind, ctx_d, in_d, log.next_seq)
         if kind == "source":
@@ -815,7 +823,7 @@ class LocalExecutor(_BaseExecutor):
             else:
                 return hit.value, "replayed"
         key = self._cache_key(node, ctx_d, in_d)
-        ent = self._cache_probe(node.id, key, ctx_d, in_d)
+        ent = self._cache_probe(node.id, key, ctx_d, in_d, deps=node.deps)
         if ent is not None:
             if ent.facts:
                 return WithContext(ent.value, ent.facts), "cached"
@@ -860,7 +868,7 @@ class LocalExecutor(_BaseExecutor):
         facts = dict(value.facts) if isinstance(value, WithContext) else None
         meta = {"facts": facts} if facts else None
         self._commit(node.id, ctx_d, in_d, commit_value, attempt, meta=meta,
-                     volatile=node.volatile, expected=expected)
+                     volatile=node.volatile, expected=expected, deps=node.deps)
         self._cache_store(node.id, key, ctx_d, in_d, commit_value, facts=facts)
         return value, "executed"
 
@@ -889,8 +897,16 @@ class LocalExecutor(_BaseExecutor):
                 outputs[group.id] = hit.value
                 resolved["replayed"].append(group.id)
             return
+        ext_deps = sorted(
+            {
+                d
+                for m in group.members
+                for d in m.deps
+                if member_to_group.get(d, d) != group.id
+            }
+        )
         key = self._cache_key(group, ctx_d, in_d)
-        ent = self._cache_probe(group.id, key, ctx_d, in_d)
+        ent = self._cache_probe(group.id, key, ctx_d, in_d, deps=ext_deps)
         if ent is not None:
             with lock:
                 outputs[group.id] = ent.value
@@ -916,7 +932,8 @@ class LocalExecutor(_BaseExecutor):
             v = m.fn(ctx, **unwrap_digested(inputs))
             member_out[m.id] = v.output if isinstance(v, WithContext) else v
         self._commit(
-            group.id, ctx_d, in_d, member_out, 0, meta={"members": [m.id for m in order]}
+            group.id, ctx_d, in_d, member_out, 0,
+            meta={"members": [m.id for m in order]}, deps=ext_deps,
         )
         self._cache_store(group.id, key, ctx_d, in_d, member_out)
         with lock:
@@ -1171,7 +1188,7 @@ class ClusterExecutor(_BaseExecutor):
                     finish(nid, hit.value, ctx, "replayed")
                     return
             key = self._cache_key(node, ctx_d, in_d)
-            ent = self._cache_probe(nid, key, ctx_d, in_d)
+            ent = self._cache_probe(nid, key, ctx_d, in_d, deps=node.deps)
             if ent is not None:
                 # answered before dispatch: no gateway round-trip, no worker
                 if ent.facts:
@@ -1218,7 +1235,8 @@ class ClusterExecutor(_BaseExecutor):
                     ctx = ctx.with_data(value.facts, origin=nid)
                     value = value.output
                 self._commit(nid, ctx_d, in_d, value, attempt, meta=meta,
-                             volatile=node.volatile, expected=expected)
+                             volatile=node.volatile, expected=expected,
+                             deps=node.deps)
                 self._cache_store(nid, key, ctx_d, in_d, value, facts=facts)
                 finish(nid, value, ctx, "executed")
                 return
@@ -1378,6 +1396,7 @@ class ClusterExecutor(_BaseExecutor):
                         nid, st.ctx_digest, st.input_digest, value,
                         requeues + copies - 1,
                         volatile=st.node.volatile, expected=st.expected,
+                        deps=st.node.deps,
                     )
                     self._cache_store(
                         nid, st.cache_key, st.ctx_digest, st.input_digest, value
@@ -1560,11 +1579,12 @@ class ClusterExecutor(_BaseExecutor):
                 ctx = ctx.with_data(value.facts, origin=nid)
                 value = value.output
             self._commit(
-                nid, ctx_d, in_d, value, 0, meta={"facts": facts} if facts else None
+                nid, ctx_d, in_d, value, 0,
+                meta={"facts": facts} if facts else None, deps=node.deps,
             )
             return value, ctx, "executed"
 
-        log = ChunkLog(self.journal, self.replay, nid, ctx_d, in_d)
+        log = ChunkLog(self.journal, self.replay, nid, ctx_d, in_d, deps=node.deps)
         if not log.eos:
             self._journal_stream_start(nid, kind, ctx_d, in_d, log.next_seq)
         if kind == "source":

@@ -1,0 +1,27 @@
+"""Journal lifecycle management: compaction and lineage projection.
+
+The append-only journal (``repro.core.durable``) is the system's source of
+truth, but a long-lived service needs two more things from it: a way to keep
+replay cost O(live state) instead of O(history) — :func:`compact_journal`,
+which folds a committed prefix into one digest-chained SNAPSHOT record —
+and a way to *query* history — :class:`LineageIndex`, a disposable
+projection answering provenance questions with bounded traversals.
+
+See docs/journal-lifecycle.md.
+"""
+
+from repro.journal.compact import (
+    CompactedHistoryError,
+    CompactionError,
+    CompactionStats,
+    compact_journal,
+)
+from repro.journal.lineage import LineageIndex
+
+__all__ = [
+    "CompactedHistoryError",
+    "CompactionError",
+    "CompactionStats",
+    "LineageIndex",
+    "compact_journal",
+]

@@ -1,0 +1,345 @@
+"""Journal compaction: fold committed history into one SNAPSHOT record.
+
+A long-lived service's write-ahead journal grows without bound — every run
+appends ``RUN_START``/``NODE_START``/``NODE_COMMIT``/… records, streams add
+one ``CHUNK_COMMIT`` per chunk, and replay cost follows *history*, not live
+state. Compaction rewrites the journal as::
+
+    [ SNAPSHOT ] [ retained suffix records ... ]
+
+where the SNAPSHOT (docs/journal-format.md §2.6) holds exactly the **live
+frontier state** of the folded prefix — the records a future reader still
+needs for bit-identical replay:
+
+  - the ``LINEAGE`` header (durable identity of the file),
+  - the last ``NODE_COMMIT`` per ``(node, ξ, inputs)`` replay identity,
+  - every ``CHUNK_COMMIT`` + the last ``STREAM_EOS`` per stream identity
+    (the chunks ARE a stream's durable value),
+  - every ``SUSPEND`` and ``RESUME`` in order (the interrupt history:
+    pending-suspend resolution and fork's default decision point both
+    re-derive from it),
+  - the last ``CKPT`` reference.
+
+Pure history — ``RUN_START``/``RUN_END``, ``NODE_START``, ``NODE_FAIL``,
+``NODE_REQUEUE``, ``CACHE_HIT``/``CACHE_STORE``, ``FORK``, ``GW_HANDOFF``,
+superseded duplicate commits — is dropped, accounted
+for only by the snapshot's digest chain. ``Journal.records()`` transparently
+expands a SNAPSHOT back into its folded records, so every interpreting
+reader (replay oracle, workflow runner, lineage index) sees an identical
+history and replays with **zero re-execution**.
+
+Compaction is an *offline* operation on a quiescent journal: the new file
+is built in a temp sibling, digest-verified against the original (replay
+state must match exactly), and atomically published with ``os.replace`` —
+a crash mid-publish leaves the original journal as the untouched source of
+truth and a stale ``.compact.tmp.*`` file that the next compaction sweeps.
+
+See docs/journal-lifecycle.md for the operational policy.
+"""
+
+from __future__ import annotations
+
+import binascii
+import glob
+import hashlib
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.durable import (
+    SNAPSHOT_VERSION,
+    Journal,
+    JournalRecord,
+    ReplayCache,
+    encode_payload,
+)
+from repro.core.durable import _HEADER  # the (length, crc32) frame header
+
+__all__ = [
+    "CompactedHistoryError",
+    "CompactionError",
+    "CompactionStats",
+    "compact_journal",
+]
+
+#: Record kinds that are pure history: safe to drop at compaction because no
+#: reader derives live state from them (they are replay-ignored annotations
+#: or run-lifecycle markers).
+DROPPABLE_KINDS = frozenset(
+    {
+        "RUN_START",
+        "RUN_END",
+        "NODE_START",
+        "NODE_FAIL",
+        "NODE_REQUEUE",
+        "CACHE_HIT",
+        "CACHE_STORE",
+        "FORK",
+        "GW_HANDOFF",
+    }
+)
+
+
+class CompactionError(RuntimeError):
+    """Typed failure from the compaction pipeline (verification, torn state)."""
+
+
+class CompactedHistoryError(RuntimeError):
+    """An operation addressed a record seq that compaction folded away.
+
+    Raised e.g. by ``WorkflowRunner.fork(at=...)`` when ``at`` is below the
+    journal's ``base_seq``: the folded prefix retains live *state* but not
+    per-record identity, so a branch point inside it no longer exists.
+    """
+
+
+@dataclass
+class CompactionStats:
+    """What one :func:`compact_journal` call did (or would do, dry-run)."""
+
+    path: str
+    before_records: int  # physical records before (snapshot counted as 1)
+    after_records: int  # physical records after (snapshot + suffix)
+    folded: int  # records newly folded into the snapshot this pass
+    state_records: int  # live records the snapshot carries
+    base_seq: int  # first logical seq still individually addressable
+    chain: str  # digest-chain head over every record ever folded
+    bytes_before: int
+    bytes_after: int
+    dry_run: bool = False
+
+    def to_obj(self) -> Dict[str, object]:
+        """Plain-dict form (CLI ``--json`` output)."""
+        return {
+            "path": self.path,
+            "before_records": self.before_records,
+            "after_records": self.after_records,
+            "folded": self.folded,
+            "state_records": self.state_records,
+            "base_seq": self.base_seq,
+            "chain": self.chain,
+            "bytes_before": self.bytes_before,
+            "bytes_after": self.bytes_after,
+            "dry_run": self.dry_run,
+        }
+
+
+@dataclass
+class _LiveState:
+    """Ordered live records extracted from a folded prefix."""
+
+    records: List[JournalRecord] = field(default_factory=list)
+
+
+def _record_digest(rec: JournalRecord) -> str:
+    """Stable digest of one record (its canonical encoded body)."""
+    return hashlib.sha256(encode_payload(rec.to_obj())).hexdigest()[:16]
+
+
+def _chain(chain: str, rec: JournalRecord) -> str:
+    """Advance the fold chain over one record (same shape as chunk chains)."""
+    return hashlib.sha256(f"{chain}:{_record_digest(rec)}".encode()).hexdigest()[:16]
+
+
+def _fold(records: List[JournalRecord]) -> _LiveState:
+    """Reduce ``records`` to the live state a replayer still needs.
+
+    Keeps original relative order for everything retained, so order-dependent
+    readers (``RESUME`` application, pending-``SUSPEND`` resolution) observe
+    the exact history they would have seen uncompacted.
+    """
+    commit_at: Dict[Tuple[str, str, str], int] = {}  # identity -> index in out
+    eos_at: Dict[Tuple[str, str, str], int] = {}
+    ckpt_at: Optional[int] = None
+    lineage_seen = False
+    out: List[Optional[JournalRecord]] = []
+    for rec in records:
+        kind = rec.kind
+        if kind in DROPPABLE_KINDS or kind == "SNAPSHOT":
+            continue
+        if kind == "LINEAGE":
+            if lineage_seen:
+                continue  # only the header names the identity
+            lineage_seen = True
+            out.append(rec)
+        elif kind == "NODE_COMMIT":
+            key = (rec.node_id, rec.context_digest, rec.input_digest)
+            prev = commit_at.get(key)
+            if prev is not None:
+                out[prev] = None  # superseded duplicate (crash-scarred run)
+            commit_at[key] = len(out)
+            out.append(rec)
+        elif kind == "CHUNK_COMMIT":
+            out.append(rec)
+        elif kind == "STREAM_EOS":
+            key = (rec.node_id, rec.context_digest, rec.input_digest)
+            prev = eos_at.get(key)
+            if prev is not None:
+                out[prev] = None
+            eos_at[key] = len(out)
+            out.append(rec)
+        elif kind in ("RESUME", "SUSPEND"):
+            # BOTH kept, answered or not: the SUSPEND/RESUME sequence IS the
+            # interrupt history — pending-suspend resolution and fork's
+            # default decision-point both re-derive from it in order
+            out.append(rec)
+        elif kind == "CKPT":
+            if ckpt_at is not None:
+                out[ckpt_at] = None  # only the latest checkpoint is live
+            ckpt_at = len(out)
+            out.append(rec)
+        else:  # a KNOWN kind with no fold rule: conservatively retain it
+            out.append(rec)
+    return _LiveState(records=[r for r in out if r is not None])
+
+
+def _frame(rec: JournalRecord) -> bytes:
+    """One on-disk journal frame for ``rec`` (format §1)."""
+    body = encode_payload(rec.to_obj())
+    return _HEADER.pack(len(body), binascii.crc32(body)) + body
+
+
+def _publish(tmp_path: str, path: str) -> None:
+    """Atomically install the compacted journal (the crash-safety boundary)."""
+    os.replace(tmp_path, path)
+
+
+def _sweep_stale_tmp(path: str) -> int:
+    """Discard partial snapshots orphaned by a crash mid-publish."""
+    n = 0
+    for stale in glob.glob(glob.escape(path) + ".compact.tmp.*"):
+        try:
+            os.remove(stale)
+            n += 1
+        except OSError:
+            pass
+    return n
+
+
+def _replay_state(journal: Journal) -> Tuple[dict, dict, set, list, Optional[str]]:
+    """Everything replay-relevant a journal encodes, in comparable form."""
+    replay = ReplayCache(journal)
+    commits = {
+        key: (rec.output_digest, rec.ref, _record_digest(rec))
+        for key, rec in replay._committed.items()
+    }
+    chunks = {
+        key: [(_record_digest(r)) for r in replay.stream_chunks(*key)]
+        for key in replay._chunks
+    }
+    eos = set(replay._eos)
+    resumes = []
+    pending = None
+    for rec in journal.records():
+        if rec.kind == "RESUME":
+            resumes.append(_record_digest(rec))
+        elif rec.kind == "SUSPEND":
+            pending = rec.node_id
+        if rec.kind == "RESUME" and pending == rec.node_id:
+            pending = None
+    return commits, chunks, eos, resumes, pending
+
+
+def compact_journal(
+    path: str,
+    keep_since: Optional[int] = None,
+    verify: bool = True,
+    dry_run: bool = False,
+) -> CompactionStats:
+    """Compact the journal at ``path`` in place (offline, quiescent file).
+
+    ``keep_since`` is the retention policy: logical record seqs ``>=
+    keep_since`` are retained as physical suffix records (still addressable,
+    e.g. as ``fork(at=...)`` points); everything below is folded into the
+    SNAPSHOT. ``None`` folds the whole journal. Re-compacting a compacted
+    journal folds the previous snapshot's state together with any newly
+    foldable suffix — a journal never carries more than one SNAPSHOT, always
+    as its first record.
+
+    With ``verify=True`` (default) the candidate file must reproduce the
+    original's full replay state — committed identities and output digests,
+    chunk sequences, EOS markers, RESUME history, pending SUSPEND — before
+    it is published; a mismatch raises :class:`CompactionError` and leaves
+    the original untouched. ``dry_run`` computes stats without writing.
+    """
+    if not os.path.exists(path):
+        raise CompactionError(f"no journal at {path!r}")
+    _sweep_stale_tmp(path)
+    bytes_before = os.path.getsize(path)
+
+    with Journal(path, sync="never") as j:
+        raw = list(j.records(expand=False))
+        base0 = j.base_seq()
+        end = j.end_seq()
+
+    prior = raw[0] if raw and raw[0].kind == "SNAPSHOT" else None
+    chain = str(prior.meta.get("chain", "")) if prior is not None else ""
+    prior_state: List[JournalRecord] = []
+    if prior is not None:
+        prior_state = [
+            JournalRecord.from_obj(o) for o in prior.meta.get("records") or ()
+        ]
+    suffix = raw[1:] if prior is not None else raw
+
+    cut = end if keep_since is None else max(base0, min(int(keep_since), end))
+    fold_suffix = suffix[: cut - base0]
+    kept_suffix = suffix[cut - base0 :]
+    for rec in fold_suffix:
+        chain = _chain(chain, rec)
+
+    state = _fold(prior_state + fold_suffix)
+    snapshot = JournalRecord(
+        kind="SNAPSHOT",
+        wall_time=time.time(),
+        meta={
+            "version": SNAPSHOT_VERSION,
+            "base_seq": cut,
+            "chain": chain,
+            "folded": len(fold_suffix),
+            "records": [r.to_obj() for r in state.records],
+        },
+    )
+
+    stats = CompactionStats(
+        path=path,
+        before_records=len(raw),
+        after_records=1 + len(kept_suffix),
+        folded=len(fold_suffix),
+        state_records=len(state.records),
+        base_seq=cut,
+        chain=chain,
+        bytes_before=bytes_before,
+        bytes_after=0,
+        dry_run=dry_run,
+    )
+    if dry_run:
+        return stats
+
+    tmp = f"{path}.compact.tmp.{os.getpid()}"
+    with open(tmp, "wb") as fh:
+        fh.write(_frame(snapshot))
+        for rec in kept_suffix:
+            fh.write(_frame(rec))
+        fh.flush()
+        os.fsync(fh.fileno())
+
+    if verify:
+        try:
+            with Journal(path, sync="never") as orig_j:
+                want = _replay_state(orig_j)
+            with Journal(tmp, sync="never") as tmp_j:
+                got = _replay_state(tmp_j)
+        except Exception as exc:
+            os.remove(tmp)
+            raise CompactionError(f"snapshot verification crashed: {exc}") from exc
+        if want != got:
+            os.remove(tmp)
+            raise CompactionError(
+                f"snapshot for {path!r} does not reproduce the original "
+                "replay state; original left untouched"
+            )
+
+    _publish(tmp, path)
+    stats.bytes_after = os.path.getsize(path)
+    return stats

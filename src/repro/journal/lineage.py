@@ -1,0 +1,206 @@
+"""Lineage index: a derived, disposable projection over the journal.
+
+The journal is the immutable source of truth; this module projects it into
+a queryable index answering *"which inputs and context digests produced
+this artifact?"* — the Engram dual-store shape (append-only ledger + a
+rebuildable projection for queries). The index is never persisted and never
+authoritative: throw it away and :meth:`LineageIndex.build` it again from
+the journal whenever you like. Because ``Journal.records()`` transparently
+expands SNAPSHOT records, the same build works on compacted journals — the
+provenance answers are identical before and after compaction.
+
+Maintained either way:
+
+  - **batch rebuild** — ``LineageIndex.build(journal)`` scans once;
+  - **incremental** — call :meth:`LineageIndex.apply` on each record as it
+    is appended; projection determinism (rebuilt == incremental) is a
+    tested property (tests/test_lineage.py).
+
+Traversals are bounded: :meth:`LineageIndex.provenance` takes a ``depth``
+limit and is cycle-safe, so a query over an adversarial or enormous graph
+does bounded work.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Set
+
+from repro.core.durable import Journal, JournalRecord
+
+__all__ = ["LineageIndex"]
+
+
+class LineageIndex:
+    """Queryable provenance projection of one journal.
+
+    Tracks, per node id, the latest committed identity — context digest,
+    input digest, output digest, checkpoint ref, declared upstream ``deps``
+    — plus stream chunk/EOS progress, cache-hit counts, union-group
+    membership, and interrupt (SUSPEND/RESUME) history.
+    """
+
+    def __init__(self) -> None:
+        self._header: Optional[Dict[str, Any]] = None
+        self._entries: Dict[str, Dict[str, Any]] = {}
+        self._chunks: Dict[str, int] = {}  # node -> committed chunk count
+        self._eos: Set[str] = set()
+        self._member_of: Dict[str, str] = {}  # member node -> union group
+        self._cache_hits: Dict[str, int] = {}
+        self._produced: Dict[str, List[str]] = {}  # output digest -> nodes
+        self._resumes: List[Dict[str, Any]] = []
+        self._pending_suspend: Optional[str] = None
+        self.applied = 0  # records this projection has absorbed
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, journal: Journal) -> "LineageIndex":
+        """Project a whole journal (compacted or not) in one scan."""
+        idx = cls()
+        for rec in journal.records():
+            idx.apply(rec)
+        return idx
+
+    def apply(self, rec: JournalRecord) -> None:
+        """Absorb one journal record (incremental maintenance).
+
+        Applying every record of a journal in append order yields exactly
+        the state of a from-scratch :meth:`build` — projection determinism.
+        """
+        self.applied += 1
+        kind = rec.kind
+        if kind == "LINEAGE":
+            if self._header is None:
+                self._header = dict(rec.meta)
+        elif kind == "NODE_COMMIT":
+            deps = [str(d) for d in rec.meta.get("deps") or ()]
+            members = [str(m) for m in rec.meta.get("members") or ()]
+            entry = {
+                "node": rec.node_id,
+                "context_digest": rec.context_digest,
+                "input_digest": rec.input_digest,
+                "output_digest": rec.output_digest,
+                "ref": rec.ref,
+                "deps": deps,
+                "members": members,
+                "volatile": bool(rec.meta.get("volatile")),
+                "stream": int(rec.meta.get("stream") or 0),
+            }
+            self._entries[rec.node_id] = entry
+            for m in members:
+                self._member_of[m] = rec.node_id
+            if rec.output_digest:
+                seen = self._produced.setdefault(rec.output_digest, [])
+                if rec.node_id not in seen:
+                    seen.append(rec.node_id)
+        elif kind == "CHUNK_COMMIT":
+            self._chunks[rec.node_id] = self._chunks.get(rec.node_id, 0) + 1
+        elif kind == "STREAM_EOS":
+            self._eos.add(rec.node_id)
+        elif kind == "CACHE_HIT":
+            self._cache_hits[rec.node_id] = self._cache_hits.get(rec.node_id, 0) + 1
+        elif kind == "SUSPEND":
+            self._pending_suspend = rec.node_id
+        elif kind == "RESUME":
+            self._resumes.append(
+                {"node": rec.node_id, "keys": sorted(rec.meta.get("inputs") or {})}
+            )
+            if self._pending_suspend == rec.node_id:
+                self._pending_suspend = None
+        # every other kind (RUN_START/END, NODE_START, FORK, ...) is run
+        # activity, not provenance — ignored by the projection
+
+    # -- queries -------------------------------------------------------------
+    def nodes(self) -> List[str]:
+        """All node ids with a committed entry, sorted."""
+        return sorted(self._entries)
+
+    def entry(self, node_id: str) -> Optional[Dict[str, Any]]:
+        """Latest committed identity for ``node_id`` (member ids resolve
+        to their union group's entry), or None if never committed."""
+        e = self._entries.get(node_id)
+        if e is None and node_id in self._member_of:
+            e = self._entries.get(self._member_of[node_id])
+        return dict(e) if e is not None else None
+
+    def produced(self, output_digest: str) -> List[str]:
+        """Node ids that committed an output with this digest, in order."""
+        return list(self._produced.get(output_digest, ()))
+
+    def consumers(self, node_id: str) -> List[str]:
+        """Nodes whose declared deps include ``node_id``, sorted."""
+        return sorted(
+            n for n, e in self._entries.items() if node_id in e["deps"]
+        )
+
+    def provenance(
+        self, node_id: str, depth: Optional[int] = None
+    ) -> Dict[str, Any]:
+        """Bounded upstream provenance tree for ``node_id``.
+
+        Recurses through declared ``deps`` up to ``depth`` levels
+        (``None`` = unbounded but cycle-safe). Frontier nodes beyond the
+        bound carry ``"truncated": True``; deps with no committed entry
+        carry ``"missing": True``.
+        """
+        return self._provenance(node_id, depth, set())
+
+    def _provenance(
+        self, node_id: str, depth: Optional[int], seen: Set[str]
+    ) -> Dict[str, Any]:
+        entry = self.entry(node_id)
+        if entry is None:
+            return {"node": node_id, "missing": True}
+        group = self._member_of.get(node_id)
+        node: Dict[str, Any] = {
+            "node": node_id,
+            "context_digest": entry["context_digest"],
+            "input_digest": entry["input_digest"],
+            "output_digest": entry["output_digest"],
+        }
+        if group is not None:
+            node["group"] = group
+        if entry["stream"]:
+            node["chunks"] = self._chunks.get(node_id, 0)
+            node["eos"] = node_id in self._eos
+        if self._cache_hits.get(node_id):
+            node["cache_hits"] = self._cache_hits[node_id]
+        resolved = entry["node"]  # group id for members
+        if resolved in seen or node_id in seen:
+            node["cycle"] = True
+            return node
+        if depth is not None and depth <= 0:
+            if entry["deps"]:
+                node["truncated"] = True
+            return node
+        sub_depth = None if depth is None else depth - 1
+        sub_seen = seen | {node_id, resolved}
+        node["deps"] = [
+            self._provenance(d, sub_depth, sub_seen) for d in entry["deps"]
+        ]
+        return node
+
+    def resumes(self) -> List[Dict[str, Any]]:
+        """Interrupt answers applied over the journal's history, in order."""
+        return [dict(r) for r in self._resumes]
+
+    def pending_suspend(self) -> Optional[str]:
+        """Node id of the latest unanswered SUSPEND, if any."""
+        return self._pending_suspend
+
+    def to_obj(self) -> Dict[str, Any]:
+        """Canonical plain-dict form of the full projection state.
+
+        Used by the projection-determinism property test (rebuilt ==
+        incremental) and the CLI ``--json`` output.
+        """
+        return {
+            "header": dict(self._header) if self._header else None,
+            "entries": {n: dict(e) for n, e in sorted(self._entries.items())},
+            "chunks": dict(sorted(self._chunks.items())),
+            "eos": sorted(self._eos),
+            "member_of": dict(sorted(self._member_of.items())),
+            "cache_hits": dict(sorted(self._cache_hits.items())),
+            "produced": {d: list(ns) for d, ns in sorted(self._produced.items())},
+            "resumes": [dict(r) for r in self._resumes],
+            "pending_suspend": self._pending_suspend,
+        }

@@ -138,12 +138,16 @@ class ChunkLog:
     """
 
     def __init__(self, journal: Any, replay: Any, node_id: str,
-                 ctx_digest: str, input_digest: str):
+                 ctx_digest: str, input_digest: str,
+                 deps: Optional[List[str]] = None):
         self.journal = journal
         self.replay = replay
         self.node_id = node_id
         self.ctx_digest = ctx_digest
         self.input_digest = input_digest
+        # upstream node ids, stamped on the summary NODE_COMMIT for the
+        # lineage index (repro.journal.lineage)
+        self.deps = sorted(set(deps)) if deps else []
         self.next_seq, self.chain, self.eos = replay.stream_progress(
             node_id, ctx_digest, input_digest
         )
@@ -196,6 +200,9 @@ class ChunkLog:
             output_digest=self.chain,
             meta={"chunks": self.next_seq, "chain": self.chain},
         )
+        meta: Dict[str, Any] = {"stream": self.next_seq, "chain": self.chain}
+        if self.deps:
+            meta["deps"] = self.deps
         commit = JournalRecord(
             kind="NODE_COMMIT",
             node_id=self.node_id,
@@ -203,7 +210,7 @@ class ChunkLog:
             input_digest=self.input_digest,
             output_digest=self.chain,
             payload=None,
-            meta={"stream": self.next_seq, "chain": self.chain},
+            meta=meta,
         )
         if self.journal is not None:
             self.journal.append(eos)

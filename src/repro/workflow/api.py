@@ -30,6 +30,7 @@ from repro.cache import ResultCache
 from repro.core.durable import Journal, JournalRecord
 from repro.core.executor import ExecutionReport, LocalExecutor
 from repro.core.graph import ContextGraph
+from repro.journal.compact import CompactedHistoryError
 
 from .registry import WorkflowRegistry, WorkflowStore
 
@@ -214,20 +215,27 @@ class WorkflowRunner:
     ) -> WorkflowResult:
         """Branch a child workflow from a committed prefix of the parent.
 
-        ``at`` is a record sequence number in the parent journal: history
-        journaled *before* ``at`` is shared (served from the content-addressed
-        cache — never re-executed); everything at or after ``at`` is masked
-        from the cache so the child re-executes it. ``at=None`` shares the
-        whole committed history. ``inputs`` (with ``node``, or defaulting to
-        the parent's latest suspended node) seed the divergence as Ψ facts,
-        journaled in the child as a ``RESUME`` so child re-runs are durable.
+        ``at`` is a *logical* record sequence number in the parent journal:
+        history journaled *before* ``at`` is shared (served from the
+        content-addressed cache — never re-executed); everything at or after
+        ``at`` is masked from the cache so the child re-executes it.
+        ``at=None`` shares the whole committed history. Logical seqs are
+        stable across journal compaction — suffix records keep their
+        original numbering — but seqs *below* the compacted journal's
+        ``base_seq`` were folded away (only live state survives, not
+        per-record identity), so addressing one raises a typed
+        :class:`~repro.journal.CompactedHistoryError`. ``inputs`` (with
+        ``node``, or defaulting to the parent's latest suspended node) seed
+        the divergence as Ψ facts, journaled in the child as a ``RESUME`` so
+        child re-runs are durable.
         """
         meta = self.store.meta(workflow_id)
         child = fork_id or f"{workflow_id}-fork-{uuid.uuid4().hex[:6]}"
         if self.store.exists(child):
             raise WorkflowError(f"fork target {child!r} already exists")
         with self._journal(workflow_id, None) as parent_j:
-            records = list(parent_j.records())
+            indexed = list(parent_j.indexed_records())
+            records = [rec for _seq, rec in indexed]
             suspend_node, _suspend_name = self._latest_suspend_from(records)
             # default divergence target: the latest interrupt decision point,
             # whether or not the parent already answered it
@@ -237,11 +245,20 @@ class WorkflowRunner:
                     decision_node = rec.node_id
             deny = set()
             if at is not None:
-                if not 0 <= at <= len(records):
-                    raise WorkflowError(
-                        f"fork point at={at} outside journal (0..{len(records)})"
+                base, end = parent_j.base_seq(), parent_j.end_seq()
+                if 0 <= at < base:
+                    raise CompactedHistoryError(
+                        f"fork point at={at} was folded away by compaction "
+                        f"(journal base_seq={base}); compacted history keeps "
+                        "live state, not per-record branch points"
                     )
-                for rec in records[at:]:
+                if not base <= at <= end:
+                    raise WorkflowError(
+                        f"fork point at={at} outside journal ({base}..{end})"
+                    )
+                for seq, rec in indexed:
+                    if seq is None or seq < at:
+                        continue
                     if rec.kind in ("CACHE_STORE", "CACHE_HIT"):
                         key = rec.meta.get("key") or rec.meta.get("cache")
                         if key:
@@ -270,10 +287,11 @@ class WorkflowRunner:
         with self._journal(child, lineage) as j:
             # carry the parent's pre-fork interrupt answers into the child
             # journal, so the child is self-contained for its own re-runs
-            for i, rec in enumerate(records):
+            for seq, rec in indexed:
                 if rec.kind != "RESUME":
                     continue
-                if at is not None and i >= at:
+                # folded records (seq None) predate any addressable seq
+                if at is not None and seq is not None and seq >= at:
                     continue
                 j.append(
                     JournalRecord(kind="RESUME", node_id=rec.node_id, meta=dict(rec.meta))

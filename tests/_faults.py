@@ -16,6 +16,14 @@ test_stream, and test_distributed_train:
   - ``fail-gateway``:  ``fail_gateway(replica, after=N)`` — a (sharded)
     gateway replica dies right after accepting its Nth submission, with
     queued and in-flight work stranded for journal-backed handoff.
+  - ``mid-compact-publish``: ``fail_compact()`` — compaction dies after
+    fully writing the candidate snapshot file but BEFORE the atomic
+    ``os.replace`` publish: the original journal must remain the source of
+    truth and the partial ``.compact.tmp.*`` must be swept, never applied.
+  - ``remote-store``:  ``fail_remote_store(backend)`` — a tiered cache's
+    remote publish dies mid-write, leaving a torn tmp blob on the shared
+    tier: the local tier must still hit and no torn remote blob may ever
+    be visible under its final name.
 
 Worker-level faults go through :meth:`FaultInjector.flaky_worker`, which
 wraps ``repro.core.FlakyWorker`` and auto-releases hung workers on
@@ -41,6 +49,8 @@ KILL_POINTS = (
     "mid-chunk",
     "mid-suspend",
     "fail-gateway",
+    "mid-compact-publish",
+    "remote-store",
 )
 
 
@@ -167,6 +177,60 @@ class FaultInjector:
 
         gateway.submit = dying
         self._restores.append(lambda: setattr(gateway, "submit", orig))
+        return state
+
+    # -- kill point: mid-compact-publish --------------------------------------
+    def fail_compact(self, message="died before snapshot publish"):
+        """Arm journal compaction to die between tmp-write and publish.
+
+        Patches ``repro.journal.compact._publish`` (the ``os.replace``
+        crash-safety boundary) to raise once: the candidate snapshot file is
+        fully written and fsynced, but never installed. The original journal
+        must remain byte-identical, and the next compaction must sweep the
+        orphaned ``.compact.tmp.*`` file. Restored on teardown.
+        """
+        import repro.journal.compact as compact_mod
+
+        orig = compact_mod._publish
+        state = {"fired": False}
+
+        def dying(tmp_path, path):
+            if not state["fired"]:
+                state["fired"] = True
+                raise InjectedFault(message)
+            return orig(tmp_path, path)
+
+        compact_mod._publish = dying
+        self._restores.append(lambda: setattr(compact_mod, "_publish", orig))
+        return state
+
+    # -- kill point: remote-store ---------------------------------------------
+    def fail_remote_store(self, backend, message="died mid remote publish"):
+        """Arm a ``TieredCacheBackend`` to die during its first remote publish.
+
+        Models the worst crash the shared tier can see: a torn partial file
+        is left behind under a tmp name (NEVER the final blob name — the
+        atomic-rename contract), then the process dies. The local tier
+        already holds the blob, so reads keep hitting; other hosts simply
+        miss until a later successful publish. Restored on teardown.
+        """
+        orig = backend._remote_put
+        state = {"fired": False}
+
+        def dying(key, body):
+            if not state["fired"]:
+                state["fired"] = True
+                path = backend.remote.path_for(key)
+                import os
+
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path + ".tmp.fault", "wb") as fh:
+                    fh.write(body[: max(1, len(body) // 2)])  # torn partial
+                raise InjectedFault(message)
+            return orig(key, body)
+
+        backend._remote_put = dying
+        self._restores.append(lambda: setattr(backend, "_remote_put", orig))
         return state
 
     # -- worker-level faults --------------------------------------------------

@@ -17,6 +17,7 @@ import sys
 import time
 
 import pytest
+from _faults import faults  # noqa: F401 — fixture
 
 from repro.cache import CacheKey, FileCacheBackend, MemoryLRU, ResultCache
 from repro.core import (
@@ -477,3 +478,98 @@ def test_warm_outputs_bitwise_equal_cold(tmp_path, executor):
     assert r2.cached == ("arr",)
     np.testing.assert_array_equal(r1.outputs["arr"], r2.outputs["arr"])
     assert r1.outputs["arr"].dtype == r2.outputs["arr"].dtype
+
+
+# --------------------------------------------------------------------------
+# tiered backend: local tier + shared remote tier (docs/journal-lifecycle.md §4)
+# --------------------------------------------------------------------------
+
+
+def _tiered(tmp_path, host="hostA"):
+    from repro.cache import TieredCacheBackend
+
+    return TieredCacheBackend.at(
+        str(tmp_path / host), str(tmp_path / "shared")
+    )
+
+
+def _key(i=0):
+    return CacheKey(str(i % 10) * 16, "i" * 16, "c" * 16)
+
+
+def test_tiered_put_publishes_to_both_tiers_atomically(tmp_path):
+    be = _tiered(tmp_path)
+    be.put(_key(), b"blob-body")
+    assert be.local.get(_key()) == b"blob-body"
+    assert be.remote.get(_key()) == b"blob-body"
+    assert be.remote_errors == 0
+    # atomic publish: no tmp litter under either root
+    for root in (be.local.root, be.remote.root):
+        for _dir, _sub, files in os.walk(root):
+            assert not any(".tmp." in f for f in files), files
+
+
+def test_tiered_remote_hit_promotes_into_local_tier(tmp_path):
+    a = _tiered(tmp_path, "hostA")
+    a.put(_key(), b"published")
+    b = _tiered(tmp_path, "hostB")  # fresh host, same shared tier
+    assert b.local.get(_key()) is None
+    assert b.get(_key()) == b"published"  # read-through
+    assert b.remote_hits == 1 and b.promotions == 1
+    assert b.local.get(_key()) == b"published"  # promoted
+    b.remote.discard(_key())
+    assert b.get(_key()) == b"published"  # now served locally
+    assert b.remote_hits == 1  # no second remote read
+
+
+def test_tiered_discard_and_evict_hit_both_tiers(tmp_path):
+    be = _tiered(tmp_path)
+    be.put(_key(1), b"one")
+    be.put(_key(2), b"two")
+    be.discard(_key(1))  # both tiers: a corrupt blob must not re-promote
+    assert be.local.get(_key(1)) is None and be.remote.get(_key(1)) is None
+    assert be.get(_key(2)) == b"two"
+    assert be.evict() == 1  # local count; remote swept too
+    assert be.remote.get(_key(2)) is None
+
+
+def test_fail_remote_store_never_leaves_torn_final_blob(tmp_path, faults):
+    """Kill point ``remote-store``: the local tier still hits, and the torn
+    partial exists only under a tmp name — never the final blob name."""
+    be = _tiered(tmp_path)
+    faults.fail_remote_store(be)
+    be.put(_key(), b"x" * 64)  # best-effort remote: the put itself succeeds
+    assert be.remote_errors == 1
+    assert be.get(_key()) == b"x" * 64  # local tier is intact
+    final = be.remote.path_for(_key())
+    assert not os.path.exists(final)  # no torn blob under the final name
+    assert os.path.exists(final + ".tmp.fault")  # the crash left only a tmp
+    other = _tiered(tmp_path, "hostB")
+    assert other.get(_key()) is None  # fleet misses; it never sees torn data
+
+    be.put(_key(), b"x" * 64)  # fault fires once; the retry publishes
+    assert be.remote.get(_key()) == b"x" * 64
+    assert other.get(_key()) == b"x" * 64
+
+
+def test_result_cache_remote_root_deduplicates_across_hosts(tmp_path):
+    """End-to-end: host B's cold executor is served by host A's publishes."""
+    shared = str(tmp_path / "shared")
+    CALLS.clear()
+    rep_a = LocalExecutor(
+        cache=ResultCache(str(tmp_path / "hostA"), remote_root=shared)
+    ).run(build_graph())
+    assert len(rep_a.executed) == 3
+    n_cold = len(CALLS)
+
+    cache_b = ResultCache(str(tmp_path / "hostB"), remote_root=shared)
+    rep_b = LocalExecutor(cache=cache_b).run(build_graph())
+    assert rep_b.executed == () and len(rep_b.cached) == 3
+    assert len(CALLS) == n_cold  # zero re-execution on the second host
+    assert rep_b.outputs == rep_a.outputs
+    assert cache_b.backend.remote_hits == cache_b.backend.promotions == 3
+
+
+def test_result_cache_remote_root_requires_local_root():
+    with pytest.raises(ValueError, match="remote_root"):
+        ResultCache(None, remote_root="/tmp/shared")

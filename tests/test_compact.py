@@ -1,0 +1,351 @@
+"""Journal compaction (repro.journal.compact) — the equivalence contract.
+
+Covers docs/journal-lifecycle.md §1 + docs/journal-format.md §2.6:
+  - compacting a batch / stream / suspended-workflow journal preserves
+    replay exactly: re-running afterwards executes ZERO nodes and produces
+    bit-identical outputs and digests;
+  - replay cost after compaction is O(live frontier), not O(history) —
+    asserted via ``ReplayCache.stats["scanned"]``;
+  - ``keep_since`` retains logical seqs as addressable suffix records and
+    ``fork(at=<folded seq>)`` raises typed :class:`CompactedHistoryError`;
+  - a crash between tmp-write and publish (``faults.fail_compact``) leaves
+    the original journal byte-identical and the orphaned ``.compact.tmp.*``
+    is swept by the next pass;
+  - a verification mismatch refuses to publish (CompactionError);
+  - the ``python -m repro compact`` subcommand drives all of the above.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+from _faults import InjectedFault, faults  # noqa: F401 — fixture
+
+from repro.__main__ import main as repro_main
+from repro.core import Context, ContextGraph, Journal, LocalExecutor, interrupt
+from repro.core.durable import ReplayCache
+from repro.journal import (
+    CompactedHistoryError,
+    CompactionError,
+    compact_journal,
+)
+from repro.journal import compact as compact_mod
+from repro.wire import payload_digest
+from repro.workflow import WorkflowRegistry, WorkflowRunner
+
+# module-level task fns: digests must be stable across re-built graphs
+CALLS = {"ship": 0}
+
+
+def base(ctx):
+    return 10
+
+
+def double(ctx, base):
+    return base * 2
+
+
+def combine(ctx, base, double):
+    return base + double
+
+
+def batch_graph():
+    g = ContextGraph(origin=Context.origin({"env": "compact"}), name="batch")
+    g.add("base", base)
+    g.add("double", double, deps=["base"])
+    g.add("combine", combine, deps=["base", "double"])
+    return g
+
+
+def emit(ctx, start=0):
+    return iter(range(start, 6))
+
+
+def square(ctx, src):
+    return src * src
+
+
+def total(ctx, sq):
+    return sum(sq)
+
+
+def stream_graph():
+    g = ContextGraph(name="stream")
+    g.add_stream("src", emit)
+    g.add("sq", square, deps=["src"], stream="map")
+    g.add("total", total, deps=["sq"], stream="reduce")
+    return g
+
+
+def gate(ctx, base):
+    return interrupt(ctx, "approve", payload={"base": base})
+
+
+def ship(ctx, gate, base):
+    CALLS["ship"] += 1
+    return f"shipped x{base}" if gate else "held"
+
+
+REGISTRY = WorkflowRegistry()
+
+
+@REGISTRY.define("order")
+def order_graph(args):
+    g = ContextGraph(name="order")
+    g.add("base", base)
+    g.add("gate", gate, deps=["base"], interrupt="approve")
+    g.add("ship", ship, deps=["gate", "base"])
+    return g
+
+
+def _run(path, graph):
+    with Journal(path, sync="batch") as j:
+        return LocalExecutor(journal=j).run(graph)
+
+
+def _scanned(path):
+    with Journal(path, sync="never") as j:
+        return ReplayCache(j).stats["scanned"]
+
+
+# ---------------------------------------------------------------------------
+# equivalence: batch
+# ---------------------------------------------------------------------------
+
+
+def test_compact_batch_zero_reexecution_bit_identical(tmp_path):
+    path = str(tmp_path / "b.wal")
+    clean = _run(path, batch_graph())
+    clean_digest = payload_digest(clean.outputs)
+
+    stats = compact_journal(path)
+    assert stats.folded > 0 and stats.after_records == 1
+    assert stats.bytes_after < stats.bytes_before
+
+    with Journal(path, sync="never") as j:
+        snap = j.snapshot()
+        assert snap is not None and j.base_seq() == stats.base_seq
+        # expansion contract: interpreting readers see the folded records
+        kinds = j.kinds()
+    assert kinds["NODE_COMMIT"] == 3
+    assert "RUN_START" not in kinds  # pure history is gone
+
+    rep = _run(path, batch_graph())
+    assert rep.executed == () and rep.cached == ()
+    assert len(rep.replayed) == 3
+    assert rep.outputs == clean.outputs
+    assert payload_digest(rep.outputs) == clean_digest
+
+
+def test_recompaction_idempotent_and_chain_stable(tmp_path):
+    path = str(tmp_path / "b.wal")
+    _run(path, batch_graph())
+    first = compact_journal(path)
+    again = compact_journal(path)
+    assert again.folded == 0  # nothing new to fold
+    assert again.chain == first.chain  # the digest chain never rewinds
+    assert again.base_seq == first.base_seq
+    with Journal(path, sync="never") as j:
+        raw = list(j.records(expand=False))
+    assert len(raw) == 1 and raw[0].kind == "SNAPSHOT"  # still exactly one
+
+
+def test_compact_scan_cost_is_live_frontier_not_history(tmp_path):
+    """The point of compaction: replay scans O(live state), not O(runs)."""
+    path = str(tmp_path / "b.wal")
+    for _ in range(5):  # each re-run appends RUN_START/RUN_END history
+        _run(path, batch_graph())
+    before = _scanned(path)
+    stats = compact_journal(path)
+    after = _scanned(path)
+    assert after == stats.state_records + 1  # live records + the SNAPSHOT
+    assert after <= 4  # one commit per node, nothing else
+    assert after < before
+    # and re-running + re-compacting does not grow the frontier
+    _run(path, batch_graph())
+    compact_journal(path)
+    assert _scanned(path) == after
+
+
+# ---------------------------------------------------------------------------
+# equivalence: stream
+# ---------------------------------------------------------------------------
+
+
+def test_compact_stream_preserves_chunks_and_resume(tmp_path):
+    path = str(tmp_path / "s.wal")
+    clean = _run(path, stream_graph())
+    assert clean.outputs["total"] == sum(i * i for i in range(6))
+
+    stats = compact_journal(path)
+    with Journal(path, sync="never") as j:
+        kinds = j.kinds()
+    assert kinds["CHUNK_COMMIT"] == 12  # 6 source + 6 map chunks survive
+    assert kinds["STREAM_EOS"] >= 2
+    assert stats.after_records == 1
+
+    rep = _run(path, stream_graph())
+    assert rep.executed == ()
+    assert rep.outputs == clean.outputs
+    assert payload_digest(rep.outputs) == payload_digest(clean.outputs)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: suspended workflow (interrupt history must survive the fold)
+# ---------------------------------------------------------------------------
+
+
+def test_compact_suspended_workflow_then_resume(tmp_path):
+    CALLS["ship"] = 0
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "wf"), journal_sync="batch")
+    res = runner.run("order", workflow_id="o1")
+    assert res.status == "suspended" and res.interrupt == "approve"
+
+    path = runner.store.journal_path("o1")
+    stats = compact_journal(path)
+    assert stats.after_records == 1
+    # the pending SUSPEND is live state: still detected after the fold
+    assert runner.status("o1")["pending_interrupt"]["interrupt"] == "approve"
+
+    done = runner.resume("o1", inputs={"approve": True})
+    assert done.status == "completed"
+    assert done.outputs["ship"] == "shipped x10"
+    assert CALLS["ship"] == 1  # prefix replayed, not re-executed
+
+
+def test_compact_answered_workflow_keeps_resume_history(tmp_path):
+    CALLS["ship"] = 0
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "wf"), journal_sync="batch")
+    runner.run("order", workflow_id="o2")
+    runner.resume("o2", inputs={"approve": True})
+
+    compact_journal(runner.store.journal_path("o2"))
+    assert runner.status("o2")["pending_interrupt"] is None
+    done = runner.resume("o2")  # idempotent re-resume rides on the RESUME
+    assert done.status == "completed" and CALLS["ship"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fork across a compaction boundary
+# ---------------------------------------------------------------------------
+
+
+def test_fork_below_base_seq_raises_typed_error(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "wf"), journal_sync="batch")
+    runner.run("order", workflow_id="o3")
+    runner.resume("o3", inputs={"approve": True})
+    compact_journal(runner.store.journal_path("o3"))
+
+    with pytest.raises(CompactedHistoryError, match="folded away by compaction"):
+        runner.fork("o3", at=1, inputs={"approve": False})
+    # without at=, the decision point survives the fold: forking still works
+    child = runner.fork("o3", inputs={"approve": False}, fork_id="o3-no")
+    assert child.outputs["ship"] == "held"
+
+
+def test_keep_since_retains_addressable_suffix_seqs(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "wf"), journal_sync="batch")
+    runner.run("order", workflow_id="o4")
+    runner.resume("o4", inputs={"approve": True})
+    path = runner.store.journal_path("o4")
+    with Journal(path, sync="never") as j:
+        end = j.end_seq()
+
+    keep = end - 4
+    stats = compact_journal(path, keep_since=keep)
+    assert stats.base_seq == keep
+    with Journal(path, sync="never") as j:
+        assert j.base_seq() == keep and j.end_seq() == end
+        raw = list(j.records(expand=False))
+    assert raw[0].kind == "SNAPSHOT" and len(raw) == 1 + (end - keep)
+
+    # a retained logical seq is still a legal fork point...
+    child = runner.fork("o4", at=keep, inputs={"approve": False}, fork_id="o4-k")
+    assert child.status in ("completed", "suspended")
+    # ...and one below the cut is not
+    with pytest.raises(CompactedHistoryError):
+        runner.fork("o4", at=keep - 1, inputs={"approve": False})
+
+
+# ---------------------------------------------------------------------------
+# crash safety + verification
+# ---------------------------------------------------------------------------
+
+
+def test_fail_compact_leaves_original_intact_and_sweeps_tmp(tmp_path, faults):
+    path = str(tmp_path / "b.wal")
+    _run(path, batch_graph())
+    with open(path, "rb") as fh:
+        original = fh.read()
+
+    faults.fail_compact()
+    with pytest.raises(InjectedFault):
+        compact_journal(path)
+
+    with open(path, "rb") as fh:
+        assert fh.read() == original  # untouched source of truth
+    orphans = glob.glob(path + ".compact.tmp.*")
+    assert len(orphans) == 1  # fully written candidate, never installed
+
+    stats = compact_journal(path)  # kill point fires once; retry succeeds
+    assert stats.after_records == 1
+    assert glob.glob(path + ".compact.tmp.*") == []  # orphan swept
+    rep = _run(path, batch_graph())
+    assert rep.executed == () and len(rep.replayed) == 3
+
+
+def test_verification_mismatch_refuses_to_publish(tmp_path, monkeypatch):
+    path = str(tmp_path / "b.wal")
+    _run(path, batch_graph())
+    with open(path, "rb") as fh:
+        original = fh.read()
+
+    real_fold = compact_mod._fold
+
+    def lossy_fold(records):  # a buggy fold that drops every commit
+        state = real_fold(records)
+        state.records = [r for r in state.records if r.kind != "NODE_COMMIT"]
+        return state
+
+    monkeypatch.setattr(compact_mod, "_fold", lossy_fold)
+    with pytest.raises(CompactionError, match="does not reproduce"):
+        compact_journal(path)
+    with open(path, "rb") as fh:
+        assert fh.read() == original
+    assert glob.glob(path + ".compact.tmp.*") == []  # candidate removed
+
+
+def test_compact_missing_journal_raises_typed(tmp_path):
+    with pytest.raises(CompactionError, match="no journal"):
+        compact_journal(str(tmp_path / "absent.wal"))
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro compact
+# ---------------------------------------------------------------------------
+
+
+def test_cli_compact_dry_run_then_real(tmp_path, capsys):
+    path = str(tmp_path / "b.wal")
+    _run(path, batch_graph())
+    size_before = os.path.getsize(path)
+
+    assert repro_main(["compact", path, "--dry-run", "--json"]) == 0
+    dry = json.loads(capsys.readouterr().out)
+    assert dry["dry_run"] is True and dry["folded"] > 0
+    assert os.path.getsize(path) == size_before  # dry run wrote nothing
+
+    assert repro_main(["compact", path, "--json"]) == 0
+    real = json.loads(capsys.readouterr().out)
+    assert real["folded"] == dry["folded"]
+    assert real["after_records"] == 1
+    assert os.path.getsize(path) == real["bytes_after"] < size_before
+
+    rep = _run(path, batch_graph())
+    assert rep.executed == ()
+
+
+def test_cli_compact_missing_journal_is_error(tmp_path, capsys):
+    assert repro_main(["compact", str(tmp_path / "nope.wal")]) == 1
+    assert "no journal" in capsys.readouterr().err

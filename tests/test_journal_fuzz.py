@@ -98,6 +98,76 @@ def test_corrupted_journal_replays_consistently_or_fails_typed(
     _check_corruption_roundtrip(seed, mode, knife=seed * 7919 + 13, root=str(tmp_path))
 
 
+# ---------------------------------------------------------------------------
+# compaction-aware corruption property (docs/journal-lifecycle.md §1)
+# ---------------------------------------------------------------------------
+
+
+def _check_compaction_roundtrip(seed, cut_pct, mode, knife, root):
+    """Compaction at ANY prefix + ANY corruption keeps the §1 contract.
+
+    1. Compact a clean journal at a random ``keep_since`` cut — replay must
+       be bit-identical with ZERO re-execution (the equivalence half).
+    2. Corrupt the compacted file — a re-run either completes bit-identical
+       to the clean run or fails typed, exactly like an uncompacted journal
+       (the robustness half: a SNAPSHOT frame is just a frame).
+    """
+    from repro.journal import compact_journal
+
+    clean_path = os.path.join(root, "clean.wal")
+    with Journal(clean_path, sync="batch") as j:
+        clean = LocalExecutor(journal=j).run(_random_graph(seed))
+    clean_digest = payload_digest(clean.outputs)
+
+    with Journal(clean_path, sync="never") as j:
+        end = j.end_seq()
+    keep_since = None if cut_pct >= 100 else end * cut_pct // 100
+    compact_journal(clean_path, keep_since=keep_since)
+
+    with Journal(clean_path, sync="batch") as j:
+        rep = LocalExecutor(journal=j).run(_random_graph(seed))
+    assert rep.executed == ()
+    assert payload_digest(rep.outputs) == clean_digest
+
+    hurt_path = os.path.join(root, "hurt.wal")
+    with open(clean_path, "rb") as src, open(hurt_path, "wb") as dst:
+        dst.write(src.read())
+    _corrupt(hurt_path, mode, random.Random(knife))
+    try:
+        with Journal(hurt_path, sync="batch") as j:
+            rep2 = LocalExecutor(journal=j).run(_random_graph(seed))
+    except RuntimeError:
+        return  # typed failure is acceptable under corruption
+    assert payload_digest(rep2.outputs) == clean_digest
+    assert rep2.outputs == clean.outputs
+
+
+@pytest.mark.parametrize("mode", CORRUPTION_MODES)
+@pytest.mark.parametrize("seed", range(6))
+def test_compacted_journal_corruption_replays_consistently_or_fails_typed(
+    tmp_path, seed, mode
+):
+    _check_compaction_roundtrip(
+        seed,
+        cut_pct=(seed * 37) % 101,  # fold points across the whole range
+        mode=mode,
+        knife=seed * 6007 + 29,
+        root=str(tmp_path),
+    )
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    cut_pct=st.integers(min_value=0, max_value=100),
+    mode=st.sampled_from(CORRUPTION_MODES),
+    knife=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_compacted_journal_survives_corruption(seed, cut_pct, mode, knife):
+    with tempfile.TemporaryDirectory() as root:
+        _check_compaction_roundtrip(seed, cut_pct, mode, knife, root)
+
+
 @given(
     seed=st.integers(min_value=0, max_value=10_000),
     mode=st.sampled_from(CORRUPTION_MODES),
@@ -153,6 +223,47 @@ def test_unknown_record_kind_skipped_with_warning(tmp_path):
             rep = LocalExecutor(journal=j2).run(_two_node_graph())
     assert rep.executed == ()
     assert rep.outputs == {"a": 5, "b": 7}
+
+
+def test_newer_snapshot_layout_version_skipped_with_warning(tmp_path):
+    """A well-formed SNAPSHOT stamped with a layout version this reader does
+    not understand is skipped WHOLE (never partially interpreted), with a
+    RuntimeWarning — the version gate of docs/journal-format.md §2.6."""
+    from repro.core.durable import SNAPSHOT_VERSION
+
+    path = str(tmp_path / "snapver.wal")
+    foreign_commit = JournalRecord(
+        kind="NODE_COMMIT", node_id="inner", output_digest="d" * 16
+    )
+    snap = JournalRecord(
+        kind="SNAPSHOT",
+        meta={
+            "version": SNAPSHOT_VERSION + 1,
+            "base_seq": 5,
+            "chain": "f" * 16,
+            "records": [foreign_commit.to_obj()],
+        },
+    )
+    _append_raw_frame(path, encode_payload(snap.to_obj()))
+    with Journal(path, sync="batch") as j:
+        j.append(JournalRecord(kind="RUN_START"))
+
+    j = Journal(path, sync="never")
+    with pytest.warns(RuntimeWarning, match="skipping SNAPSHOT of newer"):
+        recs = list(j.records())
+    # skipped whole: neither the SNAPSHOT nor its folded records leak out,
+    # and the records after it still stream normally
+    assert [r.kind for r in recs] == ["RUN_START"]
+    assert all(r.node_id != "inner" for r in recs)
+
+    # an interpreting reader must not replay state it cannot verify
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        with Journal(path, sync="batch") as j2:
+            rep = LocalExecutor(journal=j2).run(_two_node_graph())
+    assert set(rep.executed) == {"a", "b"}  # nothing came from the snapshot
 
 
 def test_undecodable_record_body_skipped_with_warning(tmp_path):

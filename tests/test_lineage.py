@@ -1,0 +1,223 @@
+"""Lineage index (repro.journal.lineage) — projection determinism + queries.
+
+The index is a derived, disposable projection of the journal
+(docs/journal-lifecycle.md): the acceptance properties are
+
+  - **determinism** — a from-scratch ``LineageIndex.build`` equals an
+    incrementally-maintained index (one ``apply`` per appended record),
+    for any seeded random DAG (and any hypothesis-generated one);
+  - **compaction transparency** — provenance answers are identical before
+    and after ``compact_journal`` (SNAPSHOT expansion feeds the same
+    records to the projection);
+  - **bounded traversal** — ``provenance(depth=...)`` truncates instead of
+    recursing, and is cycle-safe against adversarial dep metadata;
+  - the ``python -m repro lineage`` subcommand exposes the queries.
+"""
+
+import json
+import random
+
+import pytest
+from _propcheck import HAS_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.__main__ import main as repro_main
+from repro.core import Context, ContextGraph, Journal, LocalExecutor, interrupt
+from repro.core.durable import JournalRecord
+from repro.journal import LineageIndex, compact_journal
+from repro.workflow import WorkflowRegistry, WorkflowRunner
+
+
+def salted(ctx, **kw):
+    return ctx.get("salt", 0) + sum(v for v in kw.values() if isinstance(v, int))
+
+
+def _random_graph(seed):
+    """Seeded random DAG (same family as tests/test_journal_fuzz.py)."""
+    rng = random.Random(seed)
+    g = ContextGraph(origin=Context.origin({"seed": seed}), name=f"lin-{seed}")
+    for i in range(rng.randint(3, 9)):
+        deps = [f"n{j}" for j in range(i) if rng.random() < 0.4]
+        g.add(f"n{i}", salted, deps=deps, data={"salt": rng.randint(1, 99)})
+    return g
+
+
+def _journal_for(root, seed, runs=1):
+    path = f"{root}/lin-{seed}.wal"
+    for _ in range(runs):
+        with Journal(path, sync="batch") as j:
+            LocalExecutor(journal=j).run(_random_graph(seed))
+    return path
+
+
+def _check_rebuild_equals_incremental(seed, root):
+    """The core determinism property, shared with the hypothesis variant."""
+    path = _journal_for(root, seed)
+    incremental = LineageIndex()
+    with Journal(path, sync="never") as j:
+        for rec in j.records():
+            incremental.apply(rec)
+        rebuilt = LineageIndex.build(j)
+    assert rebuilt.to_obj() == incremental.to_obj()
+    assert rebuilt.applied == incremental.applied
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_rebuilt_index_equals_incremental(tmp_path, seed):
+    _check_rebuild_equals_incremental(seed, str(tmp_path))
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_property_rebuilt_index_equals_incremental(seed):
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as root:
+        _check_rebuild_equals_incremental(seed, root)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_projection_identical_before_and_after_compaction(tmp_path, seed):
+    """Compaction folds history but must not change a provenance answer."""
+    path = _journal_for(str(tmp_path), seed, runs=3)
+    with Journal(path, sync="never") as j:
+        before = LineageIndex.build(j)
+    compact_journal(path)
+    with Journal(path, sync="never") as j:
+        after = LineageIndex.build(j)
+    assert before.to_obj() == after.to_obj()
+    for n in before.nodes():
+        assert before.provenance(n) == after.provenance(n)
+        assert before.consumers(n) == after.consumers(n)
+
+
+# ---------------------------------------------------------------------------
+# query semantics on a known graph
+# ---------------------------------------------------------------------------
+
+
+def _diamond(tmp_path):
+    g = ContextGraph(origin=Context.origin({"salt": 1}), name="d")
+    g.add("a", salted, data={"salt": 3})
+    g.add("b", salted, deps=["a"], data={"salt": 5})
+    g.add("c", salted, deps=["a"], data={"salt": 7})
+    g.add("d", salted, deps=["b", "c"], data={"salt": 9})
+    path = str(tmp_path / "d.wal")
+    with Journal(path, sync="batch") as j:
+        rep = LocalExecutor(journal=j).run(g)
+    return path, rep
+
+
+def test_provenance_tree_and_consumers(tmp_path):
+    path, rep = _diamond(tmp_path)
+    with Journal(path, sync="never") as j:
+        idx = LineageIndex.build(j)
+    assert idx.nodes() == ["a", "b", "c", "d"]
+    assert idx.consumers("a") == ["b", "c"]
+    assert idx.consumers("d") == []
+
+    tree = idx.provenance("d")
+    assert {n["node"] for n in tree["deps"]} == {"b", "c"}
+    for mid in tree["deps"]:
+        assert [n["node"] for n in mid["deps"]] == ["a"]
+        assert mid["deps"][0]["deps"] == []  # roots terminate
+
+    # which nodes produced this digest?
+    d_entry = idx.entry("d")
+    assert idx.produced(d_entry["output_digest"]) == ["d"]
+    assert d_entry["deps"] == ["b", "c"]
+
+
+def test_provenance_depth_bound_truncates(tmp_path):
+    path, _ = _diamond(tmp_path)
+    with Journal(path, sync="never") as j:
+        idx = LineageIndex.build(j)
+    top = idx.provenance("d", depth=0)
+    assert top["truncated"] is True and "deps" not in top
+    one = idx.provenance("d", depth=1)
+    assert all(n["truncated"] for n in one["deps"])
+    assert all("deps" not in n for n in one["deps"])
+    full = idx.provenance("d", depth=5)
+    assert "truncated" not in full
+
+
+def test_provenance_missing_dep_and_cycle_are_bounded():
+    """Adversarial metadata (dangling dep, dep cycle) must not recurse."""
+    idx = LineageIndex()
+    idx.apply(
+        JournalRecord(
+            kind="NODE_COMMIT", node_id="x", output_digest="dx",
+            meta={"deps": ["ghost", "y"]},
+        )
+    )
+    idx.apply(
+        JournalRecord(
+            kind="NODE_COMMIT", node_id="y", output_digest="dy",
+            meta={"deps": ["x"]},  # x <-> y cycle
+        )
+    )
+    tree = idx.provenance("x")  # unbounded depth must still terminate
+    by_node = {n["node"]: n for n in tree["deps"]}
+    assert by_node["ghost"] == {"node": "ghost", "missing": True}
+    assert by_node["y"]["deps"][0]["cycle"] is True
+
+
+# ---------------------------------------------------------------------------
+# interrupt history
+# ---------------------------------------------------------------------------
+
+REGISTRY = WorkflowRegistry()
+
+
+def _gate(ctx):
+    return interrupt(ctx, "go")
+
+
+@REGISTRY.define("flow")
+def _flow(args):
+    g = ContextGraph(name="flow")
+    g.add("gate", _gate, interrupt="go")
+    g.add("out", salted, deps=["gate"], data={"salt": 2})
+    return g
+
+
+def test_suspend_resume_history_survives_compaction(tmp_path):
+    runner = WorkflowRunner(REGISTRY, str(tmp_path / "wf"), journal_sync="batch")
+    runner.run("flow", workflow_id="f1")
+    path = runner.store.journal_path("f1")
+
+    with Journal(path, sync="never") as j:
+        idx = LineageIndex.build(j)
+    assert idx.pending_suspend() == "gate"
+
+    runner.resume("f1", inputs={"go": True})
+    compact_journal(path)
+    with Journal(path, sync="never") as j:
+        idx = LineageIndex.build(j)
+    assert idx.pending_suspend() is None  # answered
+    assert idx.resumes() == [{"node": "gate", "keys": ["go"]}]
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro lineage
+# ---------------------------------------------------------------------------
+
+
+def test_cli_lineage_table_and_tree(tmp_path, capsys):
+    path, _ = _diamond(tmp_path)
+    assert repro_main(["lineage", path]) == 0
+    table = capsys.readouterr().out
+    assert table.count("deps=") == 4 and "deps=b,c" in table
+
+    assert repro_main(["lineage", path, "--node", "d", "--depth", "1"]) == 0
+    tree = json.loads(capsys.readouterr().out)
+    assert tree["node"] == "d"
+    assert all(n["truncated"] for n in tree["deps"])
+
+    assert repro_main(["lineage", path, "--node", "a", "--consumers"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["consumers"] == ["b", "c"]
+
+
+def test_cli_lineage_missing_journal_is_error(tmp_path, capsys):
+    assert repro_main(["lineage", str(tmp_path / "nope.wal")]) == 1
+    assert "no journal" in capsys.readouterr().err
