@@ -1,0 +1,194 @@
+"""Observability overhead benchmark: tracing must be (near) free when off.
+
+Two legs over one fixed workload (K diamond graphs of named registry tasks
+on an in-proc cluster, journaled — the cluster_bench dataflow shape):
+
+  - ``disabled``: the tracer stays off. The per-call-site cost is a single
+    ``tracer.enabled`` attribute read; a micro-leg times that guard
+    directly and asserts it stays in the nanosecond-noise regime.
+  - ``enabled``: tracing on with a RingSink. Every committed node emits
+    its node/rpc/task spans; the run wall-clock must stay within the
+    overhead budget of the disabled leg (<5 % at full size; the tiny
+    ``--smoke`` workload is dominated by scheduling noise, so the ratio
+    assert is relaxed there to a crash-and-sanity check).
+
+Both legs take best-of-``--repeat`` wall clocks on fresh journals (a stale
+journal would replay, not execute, and measure nothing).
+
+Run:   PYTHONPATH=src python -m benchmarks.obs_bench
+       PYTHONPATH=src python -m benchmarks.obs_bench --smoke --json out.json
+
+Prints CSV-ish lines like benchmarks/run.py; ``--json`` additionally
+writes a machine-readable result blob (consumed by the CI bench-smoke
+artifact step).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core import (
+    ClusterExecutor,
+    ContextGraph,
+    Gateway,
+    InProcWorker,
+    Journal,
+    TaskRegistry,
+)
+from repro.obs.sinks import RingSink
+from repro.obs.trace import get_tracer
+
+#: Enabled-tracing overhead budget vs the disabled leg, full-size workload.
+OVERHEAD_BUDGET = 0.05
+
+#: The disabled guard must stay under this many seconds per call site —
+#: generous (hundreds of ns of slack) so CI-host jitter never flakes it,
+#: while still catching any accidental work on the disabled path.
+GUARD_BUDGET_S = 2e-6
+
+
+def build_registry(task_s: float) -> TaskRegistry:
+    """The bench task: a tiny sleep plus integer fold (cluster_bench's shape)."""
+    reg = TaskRegistry()
+
+    @reg.task("work")
+    def work(ctx, **kw):
+        time.sleep(task_s)
+        return sum(v for v in kw.values() if isinstance(v, int)) + 1
+
+    return reg
+
+
+def build_diamonds(k: int) -> ContextGraph:
+    """K independent src -> (left, right) -> join diamonds."""
+    g = ContextGraph(name="obs-diamonds")
+    for i in range(k):
+        g.add(f"src{i}", "work")
+        g.add(f"left{i}", "work", deps=[f"src{i}"])
+        g.add(f"right{i}", "work", deps=[f"src{i}"])
+        g.add(f"join{i}", "work", deps=[f"left{i}", f"right{i}"])
+    return g
+
+
+def run_once(args: argparse.Namespace, k: int, task_s: float, journal_path: str) -> float:
+    """One full cluster run on a fresh journal; returns the wall seconds."""
+    if os.path.exists(journal_path):
+        os.remove(journal_path)
+    reg = build_registry(task_s)
+    workers = [InProcWorker(f"w{i}", reg) for i in range(args.workers)]
+    with Gateway(workers) as gw:
+        with Journal(journal_path, sync="batch") as j:
+            ex = ClusterExecutor(gw, journal=j, speculative=False)
+            t0 = time.perf_counter()
+            rep = ex.run(build_diamonds(k))
+            wall = time.perf_counter() - t0
+    for i in range(k):
+        assert rep.outputs[f"join{i}"] == 5, f"join{i}: {rep.outputs[f'join{i}']}"
+    return wall
+
+
+def bench_guard(iters: int) -> float:
+    """Seconds per disabled-tracer guard (attribute read + branch)."""
+    tracer = get_tracer()
+    assert not tracer.enabled
+    t0 = time.perf_counter()
+    hits = 0
+    for _ in range(iters):
+        if tracer.enabled:  # the entire disabled-mode call-site cost
+            hits += 1
+    per_call = (time.perf_counter() - t0) / iters
+    assert hits == 0
+    return per_call
+
+
+def bench(args: argparse.Namespace) -> dict:
+    """Run both legs and return the result blob (asserting the budgets)."""
+    k = 3 if args.smoke else args.diamonds
+    task_s = 0.002 if args.smoke else args.task_s
+    n_nodes = 4 * k
+    tracer = get_tracer()
+
+    from repro.wire import payload_digest
+
+    payload_digest({"warmup": 0})  # pull in numpy etc. outside the timed region
+
+    journal_path = os.path.join(args.out, "obs_bench.wal")
+    disabled_walls, enabled_walls = [], []
+    span_count = 0
+    for _ in range(args.repeat):
+        disabled_walls.append(run_once(args, k, task_s, journal_path))
+    for _ in range(args.repeat):
+        ring = RingSink()
+        with tracer.attached(ring):
+            enabled_walls.append(run_once(args, k, task_s, journal_path))
+        node_spans = [sp for sp in ring.spans() if sp["kind"] == "node"]
+        span_count = len(node_spans)
+        assert span_count == n_nodes, f"{span_count} node spans for {n_nodes} nodes"
+        assert len({sp["trace"] for sp in ring.spans()}) == 1, "trace not coherent"
+    os.remove(journal_path)
+
+    disabled_s, enabled_s = min(disabled_walls), min(enabled_walls)
+    overhead = enabled_s / disabled_s - 1.0 if disabled_s else 0.0
+    guard_s = bench_guard(10_000 if args.smoke else 1_000_000)
+    assert guard_s < GUARD_BUDGET_S, (
+        f"disabled guard {guard_s * 1e9:.0f}ns/call exceeds budget "
+        f"{GUARD_BUDGET_S * 1e9:.0f}ns — the off path is doing work"
+    )
+    if not args.smoke:
+        assert overhead < OVERHEAD_BUDGET, (
+            f"enabled tracing costs {overhead:.1%} (> {OVERHEAD_BUDGET:.0%}) "
+            f"over the disabled leg"
+        )
+
+    result = {
+        "diamonds": k,
+        "nodes": n_nodes,
+        "workers": args.workers,
+        "task_s": task_s,
+        "repeat": args.repeat,
+        "disabled_wall_s": round(disabled_s, 4),
+        "enabled_wall_s": round(enabled_s, 4),
+        "enabled_overhead_frac": round(overhead, 4),
+        "overhead_budget_frac": OVERHEAD_BUDGET,
+        "guard_ns_per_call": round(guard_s * 1e9, 2),
+        "node_spans": span_count,
+        "spans_ok": True,
+        "smoke": bool(args.smoke),
+    }
+    print(f"disabled_wall_s,{disabled_s * 1e3:.1f}ms")
+    print(f"enabled_wall_s,{enabled_s * 1e3:.1f}ms")
+    print(f"enabled_overhead,{overhead:+.1%}")
+    print(f"guard_ns_per_call,{guard_s * 1e9:.1f}ns")
+    return result
+
+
+def main() -> None:
+    """CLI entry point."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--diamonds", type=int, default=12)
+    ap.add_argument("--task-s", type=float, default=0.01)
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument(
+        "--repeat",
+        type=int,
+        default=3,
+        help="take the best-of-N of each leg's wall clock",
+    )
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes, assert-no-crash")
+    ap.add_argument("--json", type=str, default="", help="write the result blob to this path")
+    ap.add_argument("--out", type=str, default=".", help="directory for the run journal")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    result = bench(args)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(result, fh, indent=2, sort_keys=True)
+        print(f"json,{args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ __version__ = "0.3.0"
 
 _SUBMODULES = ("core", "wire", "checkpoint", "data", "serve", "models",
                "kernels", "train", "configs", "launch", "optim", "sharding",
-               "cache", "stream", "workflow")
+               "cache", "stream", "workflow", "obs")
 
 #: lazily-resolved first-class exports: attr -> (module, attr)
 _EXPORTS = {

@@ -26,6 +26,18 @@ journal *path* — a run's ``runs/<id>/journal.wal`` or a workflow store's
 ``compact`` folds committed history into one digest-chained SNAPSHOT record
 (``--keep-since N`` retains logical seqs >= N as addressable suffix
 records); ``lineage`` projects and queries the provenance index.
+
+The ``trace`` subcommand (docs/observability.md) reconstructs a run's
+per-node timeline and critical path from its journal — compacted or not —
+optionally merged with the ``spans.jsonl`` a traced run wrote next to it::
+
+    python -m repro trace ./state/runs/etl
+    python -m repro trace ./state/runs/etl --chrome etl.trace.json
+    python -m repro trace ./state/runs/etl/journal.wal --json
+
+A run *directory* implies ``journal.wal`` inside it and auto-discovers
+``spans.jsonl``; ``--chrome PATH`` additionally writes a Chrome-trace /
+Perfetto file (``chrome://tracing``, https://ui.perfetto.dev).
 """
 
 from __future__ import annotations
@@ -221,6 +233,40 @@ def _cmd_lineage(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_trace(args: argparse.Namespace) -> int:
+    import os
+
+    from repro.obs.sinks import read_spans
+    from repro.obs.timeline import Timeline
+
+    journal = args.target
+    spans_path = args.spans
+    if os.path.isdir(journal):
+        if spans_path is None:
+            candidate = os.path.join(journal, "spans.jsonl")
+            spans_path = candidate if os.path.exists(candidate) else None
+        journal = os.path.join(journal, "journal.wal")
+    if not os.path.exists(journal):
+        print(f"error: no journal at {journal!r}", file=sys.stderr)
+        return 1
+    spans = list(read_spans(spans_path)) if spans_path else None
+    tl = Timeline.from_journal(journal, spans=spans)
+    if args.chrome:
+        # Prefer the real span log (run/rpc/task lanes); synthesize from the
+        # journal-derived timeline when the run was never live-traced.
+        from repro.obs.sinks import chrome_trace
+
+        obj = chrome_trace(spans) if spans else tl.to_chrome()
+        with open(args.chrome, "w", encoding="utf-8") as fh:
+            json.dump(obj, fh)
+        print(f"wrote chrome trace: {args.chrome}", file=sys.stderr)
+    if args.json:
+        print(json.dumps(tl.to_obj(), indent=2, sort_keys=True))
+    else:
+        print(tl.render_text())
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The ``python -m repro`` argument parser (exposed for tests)."""
     parser = argparse.ArgumentParser(prog="repro", description=__doc__)
@@ -299,6 +345,27 @@ def build_parser() -> argparse.ArgumentParser:
         "--json", action="store_true", help="full projection as JSON"
     )
     p_lineage.set_defaults(fn=_cmd_lineage)
+
+    p_trace = sub.add_parser(
+        "trace", help="reconstruct a run's per-node timeline and critical path"
+    )
+    p_trace.add_argument(
+        "target", help="run directory (runs/<id>) or journal file path"
+    )
+    p_trace.add_argument(
+        "--spans",
+        default=None,
+        metavar="PATH",
+        help="span log to merge (default: spans.jsonl beside a run directory)",
+    )
+    p_trace.add_argument(
+        "--chrome",
+        default=None,
+        metavar="PATH",
+        help="also write a Chrome-trace/Perfetto JSON file",
+    )
+    p_trace.add_argument("--json", action="store_true", help="timeline as JSON")
+    p_trace.set_defaults(fn=_cmd_trace)
     return parser
 
 

@@ -43,6 +43,10 @@ from repro.core.executor import ClusterExecutor, ExecutionReport, LocalExecutor
 from repro.core.gateway import Gateway
 from repro.core.graph import ContextGraph
 from repro.journal import CompactionStats, LineageIndex, compact_journal
+from repro.obs.metrics import MetricsRegistry, cache_collector, gateway_collector
+from repro.obs.metrics import metrics as _global_metrics
+from repro.obs.sinks import JsonlSink
+from repro.obs.trace import get_tracer
 from repro.workflow import WorkflowRegistry, WorkflowRunner
 from repro.workflow.api import WorkflowResult
 
@@ -123,6 +127,12 @@ class Client:
         clients on different hosts deduplicates work across hosts (reads
         promote remote hits into the local tier; remote publishes are
         best-effort). Requires ``cache=True``.
+    trace:
+        ``True`` enables distributed tracing for every :meth:`run` /
+        :meth:`stream`, writing a span log to ``runs/<run_id>/spans.jsonl``
+        (the input ``python -m repro trace`` merges with the journal).
+        ``None`` (default) defers to the ``REPRO_TRACE`` environment
+        variable (``1``/``true``/``on`` enable).
     """
 
     def __init__(
@@ -134,6 +144,7 @@ class Client:
         workflows: Optional[WorkflowRegistry] = None,
         cache: bool = True,
         remote_cache: Optional[str] = None,
+        trace: Optional[bool] = None,
         journal_sync: str = "always",
         max_workers: int = 8,
         gateway_options: Optional[Mapping[str, Any]] = None,
@@ -146,10 +157,15 @@ class Client:
         self.journal_sync = journal_sync
         self.max_workers = max_workers
         self.workflows = workflows if workflows is not None else WorkflowRegistry()
+        if trace is None:
+            trace = os.environ.get("REPRO_TRACE", "").lower() in ("1", "true", "on")
+        self.trace = bool(trace)
+        self._collectors: List[str] = []
         if cache:
             self.cache: Optional[ResultCache] = ResultCache(
                 os.path.join(base_dir, ".cache"), remote_root=remote_cache
             )
+            self._bind_collector("cache", cache_collector(self.cache))
         elif remote_cache is not None:
             raise ValueError("remote_cache requires cache=True")
         else:
@@ -194,7 +210,12 @@ class Client:
             os.path.join(run_dir, "journal.wal"), sync=self.journal_sync
         ) as journal:
             ex = self._executor(journal)
-            return ex.run(graph, run_meta=dict(run_meta) if run_meta else None)
+            meta = dict(run_meta) if run_meta else None
+            if not self.trace:
+                return ex.run(graph, run_meta=meta)
+            sink = JsonlSink(os.path.join(run_dir, "spans.jsonl"))
+            with sink, get_tracer().attached(sink):
+                return ex.run(graph, run_meta=meta)
 
     def stream(
         self,
@@ -268,10 +289,23 @@ class Client:
         self._check_open()
         return compact_journal(self.journal_path(run_id), keep_since=keep_since)
 
+    def metrics(self) -> MetricsRegistry:
+        """The process-global metrics registry with this client's collectors.
+
+        The cache collector is bound at construction; the gateway collector
+        on first gateway use. ``metrics().snapshot()`` /
+        ``metrics().to_prometheus()`` then report identical shapes under
+        both ``REPRO_RUNTIME`` control planes.
+        """
+        return _global_metrics()
+
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
         """Stop the client-owned gateway (idempotent; prebuilt ones are not)."""
         self._closed = True
+        for name in self._collectors:
+            _global_metrics().unregister_collector(name)
+        self._collectors.clear()
         if self._owns_gateway and self._gateway is not None:
             self._gateway.stop()
             self._gateway = None
@@ -288,6 +322,12 @@ class Client:
         if self._closed:
             raise RuntimeError("Client is closed")
 
+    def _bind_collector(self, kind: str, fn: Any) -> None:
+        """Register ``fn`` under a name unique to this client instance."""
+        name = f"client{id(self)}.{kind}"
+        _global_metrics().register_collector(name, fn)
+        self._collectors.append(name)
+
     def gateway(self) -> Optional[Any]:
         """The live gateway (started on first use); None for local clients."""
         if self._gateway is None and self._workers is not None:
@@ -301,6 +341,8 @@ class Client:
                 self._gateway = Gateway(self._workers, **self._gateway_options)
             self._gateway.start()
             self._owns_gateway = True
+            if hasattr(self._gateway, "stats"):
+                self._bind_collector("gateway", gateway_collector(self._gateway))
         return self._gateway
 
     def _executor(self, journal: Journal) -> Any:

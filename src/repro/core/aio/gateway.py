@@ -30,6 +30,7 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, Optional
 
+from repro.obs.trace import get_tracer
 from repro.wire import PayloadDecodeError
 
 from ..gateway import AllocationError, Gateway, TaskRequest, WorkerHandle
@@ -207,14 +208,19 @@ class AsyncGateway(Gateway):
             task.add_done_callback(lambda _t: self._rpc_sem.release())
 
     async def _run_on_async(self, handle: WorkerHandle, req: TaskRequest) -> None:
+        span = self._rpc_span(handle, req)  # same span contract as _run_on
         t0 = time.monotonic()  # interval math must survive wall-clock steps
         try:
             result = await self._invoke(handle, req)
         except asyncio.CancelledError:
             raise
         except (ConnectionError, TimeoutError, PayloadDecodeError) as exc:
+            if span is not None:
+                get_tracer().end(span, status="error", attrs={"error": type(exc).__name__})
             self._on_invoke_error(handle, req, exc)
             return
+        if span is not None:
+            get_tracer().end(span, status=str(result.get("status", "ok")))
         self._on_result(handle, req, result, time.monotonic() - t0)
 
     async def _invoke(self, handle: WorkerHandle, req: TaskRequest) -> Dict[str, Any]:

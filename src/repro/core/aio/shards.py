@@ -32,6 +32,7 @@ import zlib
 from concurrent.futures import Future, InvalidStateError
 from typing import Any, Callable, Dict, List, Mapping, Optional
 
+from repro.obs.trace import get_tracer
 from repro.wire import payload_digest
 
 from ..context import Context, EMPTY_CONTEXT
@@ -285,6 +286,16 @@ class ShardedGateway:
                 return 0  # already handed off (monitor/test race)
             self._alive.discard(dead_idx)
             orphans = list(self._pending.pop(dead_idx, {}).values())
+        tracer = get_tracer()
+        span = (
+            tracer.start_span(
+                f"handoff:{self.replicas[dead_idx].name}",
+                kind="handoff",
+                attrs={"from": self.replicas[dead_idx].name, "reason": reason},
+            )
+            if tracer.enabled
+            else None
+        )
         replica = self.replicas[dead_idx]
         if not replica.crashed:
             replica.stop()  # administrative removal: same adoption path
@@ -330,6 +341,8 @@ class ShardedGateway:
                 )
             )
             self.journal.flush()
+        if span is not None:
+            tracer.end(span, attrs={"recovered": recovered, "resubmitted": resubmitted})
         return recovered + resubmitted
 
     # -- run-level control (suspension) --------------------------------------

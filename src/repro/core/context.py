@@ -29,7 +29,21 @@ from typing import Any, Iterable, Iterator, Mapping, Optional, Tuple
 
 from repro.wire import DIGEST_HEX_LEN, canonical_bytes, canonical_digest, from_canonical
 
-__all__ = ["ContextEntry", "Context", "EMPTY_CONTEXT", "canonical_digest"]
+__all__ = [
+    "ContextEntry",
+    "Context",
+    "EMPTY_CONTEXT",
+    "OBS_KEY_PREFIX",
+    "canonical_digest",
+]
+
+#: Reserved key namespace for observability facts (trace identity etc.).
+#: Facts under this prefix are *transport-only*: they ride the wire context
+#: but are excluded from :meth:`Context.digest`, so tracing never perturbs
+#: replay identity or cache keys. Injectors must stamp them with lamport 0
+#: so ``max_lamport()`` — and hence every later real fact's lamport — is
+#: unchanged between traced and untraced runs.
+OBS_KEY_PREFIX = "obs."
 
 
 @dataclass(frozen=True, order=True)
@@ -160,11 +174,15 @@ class Context:
         Combines the memoized per-entry digests in sorted order, so after a
         union only the 16-hex-char entry digests are hashed — no value is
         re-serialized (the context-union hot path; see benchmarks/wire_bench.py
-        and docs/journal-format.md §4 for the exact algorithm).
+        and docs/journal-format.md §4 for the exact algorithm). Facts under
+        :data:`OBS_KEY_PREFIX` are transport-only metadata and are excluded,
+        so replay identity is independent of tracing.
         """
         if self._digest is None:
             h = hashlib.sha256()
-            for d in sorted(e.digest for e in self._entries):
+            for d in sorted(
+                e.digest for e in self._entries if not e.key.startswith(OBS_KEY_PREFIX)
+            ):
                 h.update(d.encode())
                 h.update(b"\n")
             self._digest = h.hexdigest()[:DIGEST_HEX_LEN]

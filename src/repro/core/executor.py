@@ -47,6 +47,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Tuple
 
 from repro.cache import CacheKey, CachedResult, ResultCache
+from repro.obs.trace import get_tracer, inject_trace
 from repro.wire import unwrap_digested
 from repro.stream import (
     ChannelClosed,
@@ -486,7 +487,13 @@ class LocalExecutor(_BaseExecutor):
         with the pending frontier, and the report comes back with
         ``suspended=True`` instead of an exception.
         """
-        t0 = time.time()
+        t0 = time.monotonic()  # wall_s is a duration: clock steps must not skew it
+        tracer = get_tracer()
+        run_span = (
+            tracer.start_span(f"run:{graph.name}", kind="run", attrs={"graph": graph.name})
+            if tracer.enabled
+            else None
+        )
         levels, exec_nodes, member_to_group = graph.schedule()
         splan = plan_streams(exec_nodes)
         outputs: Dict[str, Any] = {}
@@ -569,6 +576,7 @@ class LocalExecutor(_BaseExecutor):
                     satisfy_stream_edges,
                     cancel,
                     lock,
+                    parent=run_span,
                 )
                 with lock:
                     outputs[nid] = value
@@ -586,7 +594,7 @@ class LocalExecutor(_BaseExecutor):
                 self._run_union(node, ctx, outputs, member_to_group, resolved, lock)
             else:
                 inputs = _inject_inputs(node, outputs, member_to_group)
-                value, status = self._run_atomic(node, ctx, inputs)
+                value, status = self._run_atomic(node, ctx, inputs, parent=run_span)
                 with lock:
                     if isinstance(value, WithContext):
                         ctx = ctx.with_data(value.facts, origin=node.id)
@@ -641,6 +649,8 @@ class LocalExecutor(_BaseExecutor):
             cancel.set()
             for handle in list(stream_handles.values()):
                 handle.close(error=exc)
+            if run_span is not None:
+                tracer.end(run_span, status="error")
             raise
         finally:
             if self.journal is not None:
@@ -650,13 +660,15 @@ class LocalExecutor(_BaseExecutor):
             frontier = tuple(sorted(n for n in exec_nodes if n not in outputs))
             self._journal_suspend(suspend, frontier, exec_nodes)
             first_nid = next(iter(suspend))
+            if run_span is not None:
+                tracer.end(run_span, status="interrupt")
             return ExecutionReport(
                 outputs=outputs,
                 contexts=out_ctx,
                 replayed=tuple(resolved["replayed"]),
                 executed=tuple(resolved["executed"]),
                 cached=tuple(resolved["cached"]),
-                wall_s=time.time() - t0,
+                wall_s=time.monotonic() - t0,
                 suspended=True,
                 interrupt=suspend[first_nid].name,
                 interrupt_node=first_nid,
@@ -665,13 +677,22 @@ class LocalExecutor(_BaseExecutor):
         if self.journal is not None:
             self.journal.append(JournalRecord(kind="RUN_END", node_id=graph.name))
             self.journal.flush()
+        if run_span is not None:
+            tracer.end(
+                run_span,
+                attrs={
+                    "executed": len(resolved["executed"]),
+                    "replayed": len(resolved["replayed"]),
+                    "cached": len(resolved["cached"]),
+                },
+            )
         return ExecutionReport(
             outputs=outputs,
             contexts=out_ctx,
             replayed=tuple(resolved["replayed"]),
             executed=tuple(resolved["executed"]),
             cached=tuple(resolved["cached"]),
-            wall_s=time.time() - t0,
+            wall_s=time.monotonic() - t0,
         )
 
     # -- stream stages --------------------------------------------------------
@@ -727,8 +748,54 @@ class LocalExecutor(_BaseExecutor):
         satisfy_stream_edges: Callable[[str], None],
         cancel: threading.Event,
         lock: threading.Lock,
+        parent: Optional[Any] = None,
     ) -> Tuple[Any, Context, str]:
-        """One stream stage, start to commit. Returns (value, ctx, status)."""
+        """One stream stage, start to commit. Returns (value, ctx, status).
+
+        The stage span wraps :meth:`_run_stream_node_inner`; a stage that
+        resolves entirely by replay discards its span (zero emission).
+        """
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._run_stream_node_inner(
+                node, splan, ctx, outputs, out_ctx, member_to_group,
+                stream_identity, stream_handles, satisfy_stream_edges, cancel, lock,
+            )
+        span = tracer.start_span(
+            node.id,
+            parent=parent,
+            kind="stream",
+            attrs={"node": node.id, "ctx": ctx.digest()},
+        )
+        try:
+            value, out, status = self._run_stream_node_inner(
+                node, splan, ctx, outputs, out_ctx, member_to_group,
+                stream_identity, stream_handles, satisfy_stream_edges, cancel, lock,
+            )
+        except BaseException:
+            tracer.end(span, status="error")
+            raise
+        if status == "replayed":
+            tracer.discard(span)
+        else:
+            tracer.end(span, attrs={"status": status})
+        return value, out, status
+
+    def _run_stream_node_inner(
+        self,
+        node: Node,
+        splan: StreamPlan,
+        ctx: Context,
+        outputs: Mapping[str, Any],
+        out_ctx: Dict[str, Context],
+        member_to_group: Mapping[str, str],
+        stream_identity: Dict[str, Tuple[str, str]],
+        stream_handles: Dict[str, StreamHandle],
+        satisfy_stream_edges: Callable[[str], None],
+        cancel: threading.Event,
+        lock: threading.Lock,
+    ) -> Tuple[Any, Context, str]:
+        """The uninstrumented stream-stage body (see ``_run_stream_node``)."""
         nid = node.id
         kind = splan.kinds[nid]
         fn_inputs, digest_inputs, stream_kwarg, sdep = self._stream_stage_inputs(
@@ -807,8 +874,14 @@ class LocalExecutor(_BaseExecutor):
         node: Node,
         ctx: Context,
         inputs: Mapping[str, Any],
+        parent: Optional[Any] = None,
     ) -> Tuple[Any, str]:
-        """Resolve one node; returns (value, "replayed"|"cached"|"executed")."""
+        """Resolve one node; returns (value, "replayed"|"cached"|"executed").
+
+        ``parent`` is the enclosing run span (or None): the node span opens
+        only AFTER the replay and cache probes miss, so resolved-for-free
+        nodes emit zero spans.
+        """
         ctx_d = ctx.digest()
         in_d = payload_digest(inputs)
         hit = self._lookup(node.id, ctx_d, in_d)
@@ -830,6 +903,17 @@ class LocalExecutor(_BaseExecutor):
             return ent.value, "cached"
         if node.fn is None:
             raise ValueError(f"node {node.id!r} has no callable")
+        tracer = get_tracer()
+        span = (
+            tracer.start_span(
+                node.id,
+                parent=parent,
+                kind="node",
+                attrs={"node": node.id, "ctx": ctx_d, "in": in_d},
+            )
+            if tracer.enabled
+            else None
+        )
         fn_inputs = unwrap_digested(dict(inputs))
         retry_limit = node.retry_limit(self.retry.max_attempts - 1)
         attempt = 0
@@ -848,6 +932,8 @@ class LocalExecutor(_BaseExecutor):
                 value = node.fn(ctx, **fn_inputs)
                 break
             except Interrupted:
+                if span is not None:
+                    tracer.end(span, status="interrupt")
                 raise  # suspension request, not a failure: no retry, no NODE_FAIL
             except Exception:
                 attempt += 1
@@ -862,6 +948,8 @@ class LocalExecutor(_BaseExecutor):
                                 attempt=attempt,
                             )
                         )
+                    if span is not None:
+                        tracer.end(span, status="error", attrs={"attempts": attempt})
                     raise
                 time.sleep(self.retry.delay(attempt))
         commit_value = value.output if isinstance(value, WithContext) else value
@@ -870,6 +958,8 @@ class LocalExecutor(_BaseExecutor):
         self._commit(node.id, ctx_d, in_d, commit_value, attempt, meta=meta,
                      volatile=node.volatile, expected=expected, deps=node.deps)
         self._cache_store(node.id, key, ctx_d, in_d, commit_value, facts=facts)
+        if span is not None:
+            tracer.end(span, attrs={"attempts": attempt + 1})
         return value, "executed"
 
     def _run_union(
@@ -1021,7 +1111,13 @@ class ClusterExecutor(_BaseExecutor):
         frontier), in-flight work commits, SUSPEND records are journaled, and
         the gateway books the run as suspended.
         """
-        t0 = time.time()
+        t0 = time.monotonic()  # wall_s is a duration: clock steps must not skew it
+        tracer = get_tracer()
+        run_span = (
+            tracer.start_span(f"run:{graph.name}", kind="run", attrs={"graph": graph.name})
+            if tracer.enabled
+            else None
+        )
         _levels, exec_nodes, member_to_group = graph.schedule()  # validates DAG
         splan = plan_streams(exec_nodes)
         gdeps, deps_left, children = self._readiness(exec_nodes, member_to_group)
@@ -1040,6 +1136,7 @@ class ClusterExecutor(_BaseExecutor):
         cv = threading.Condition()
         completions: deque = deque()  # (nid, Future) pairs, fed by callbacks
         inflight: Dict[str, _Inflight] = {}
+        node_spans: Dict[str, Any] = {}  # open node spans, keyed like inflight
         stream_handles: Dict[str, StreamHandle] = {}
         stream_identity: Dict[str, Tuple[str, str]] = {}
         stream_running = [0]  # stages alive (stall detection must see them)
@@ -1142,6 +1239,7 @@ class ClusterExecutor(_BaseExecutor):
                     cancel,
                     cv,
                     run_token,
+                    parent=run_span,
                 )
                 fut.set_result(result)
             except BaseException as exc:
@@ -1204,6 +1302,18 @@ class ClusterExecutor(_BaseExecutor):
                         input_digest=in_d,
                     )
                 )
+            # the node span opens only after both probes missed — replayed
+            # and cached nodes emit zero spans, keeping span↔NODE_COMMIT 1:1
+            span = (
+                tracer.start_span(
+                    nid,
+                    parent=run_span,
+                    kind="node",
+                    attrs={"node": nid, "ctx": ctx_d, "in": in_d, "run": run_token},
+                )
+                if tracer.enabled
+                else None
+            )
             if callable(node.fn):
                 fn_inputs = unwrap_digested(dict(inputs))
                 attempt = 0
@@ -1212,6 +1322,8 @@ class ClusterExecutor(_BaseExecutor):
                         value = node.fn(ctx, **fn_inputs)
                         break
                     except Interrupted as exc:
+                        if span is not None:
+                            tracer.end(span, status="interrupt")
                         request_suspend(nid, exc)
                         return
                     except Exception:
@@ -1228,6 +1340,8 @@ class ClusterExecutor(_BaseExecutor):
                                     )
                                 )
                                 self.journal.flush()
+                            if span is not None:
+                                tracer.end(span, status="error", attrs={"attempts": attempt})
                             raise
                 facts = dict(value.facts) if isinstance(value, WithContext) else None
                 meta = {"facts": facts} if facts else None
@@ -1238,6 +1352,8 @@ class ClusterExecutor(_BaseExecutor):
                              volatile=node.volatile, expected=expected,
                              deps=node.deps)
                 self._cache_store(nid, key, ctx_d, in_d, value, facts=facts)
+                if span is not None:
+                    tracer.end(span, attrs={"attempts": attempt + 1})
                 finish(nid, value, ctx, "executed")
                 return
             # register BEFORE submit: a requeue can fire the instant the
@@ -1246,10 +1362,15 @@ class ClusterExecutor(_BaseExecutor):
                            expected=expected)
             with cv:
                 inflight[nid] = st
+                if span is not None:
+                    node_spans[nid] = span
             self.straggler.started(str(node.fn), nid)
             fut = self.gateway.submit(
                 str(node.fn),
-                ctx,
+                # the wire context carries the node span's identity as a
+                # transient obs.* fact; st.ctx (and every commit/output
+                # path) keeps the clean, digest-identical original
+                inject_trace(ctx, span) if span is not None else ctx,
                 inputs,
                 affinity_key=str(node.resources.get("affinity", "")),
                 meta={"node": nid, "run": run_token},
@@ -1276,9 +1397,12 @@ class ClusterExecutor(_BaseExecutor):
                     name, nid, st.copies, self.max_copies
                 ):
                     continue
+                with cv:
+                    spec_span = node_spans.get(nid)
                 dup = self.gateway.submit(
                     name,
-                    st.ctx,
+                    # a speculative copy belongs to the same node span
+                    inject_trace(st.ctx, spec_span) if spec_span is not None else st.ctx,
                     dict(st.inputs),
                     meta={"node": nid, "run": run_token, "speculative": True},
                 )
@@ -1353,6 +1477,9 @@ class ClusterExecutor(_BaseExecutor):
                         # run; any other copies of this node become stale
                         with cv:
                             inflight.pop(nid, None)
+                            span = node_spans.pop(nid, None)
+                        if span is not None:
+                            tracer.end(span, status="interrupt")
                         self.straggler.finished(str(st.node.fn), nid)
                         request_suspend(nid, exc)
                         continue
@@ -1364,6 +1491,11 @@ class ClusterExecutor(_BaseExecutor):
                             st.futures.remove(fut)
                             if not st.futures:
                                 inflight.pop(nid, None)
+                                # redispatch opens a fresh span; drop this one
+                                # unemitted so the node still maps to one span
+                                span = node_spans.pop(nid, None)
+                                if span is not None:
+                                    tracer.discard(span)
                                 self.straggler.finished(str(st.node.fn), nid)
                         continue
                     except Exception:
@@ -1374,6 +1506,9 @@ class ClusterExecutor(_BaseExecutor):
                             continue  # a speculative copy may still win
                         with cv:
                             del inflight[nid]
+                            span = node_spans.pop(nid, None)
+                        if span is not None:
+                            tracer.end(span, status="error", attrs={"attempts": st.attempts})
                         self.straggler.finished(str(st.node.fn), nid)
                         if self.journal is not None:
                             self.journal.append(
@@ -1391,6 +1526,7 @@ class ClusterExecutor(_BaseExecutor):
                         copies = st.copies
                         requeues = st.attempts
                         del inflight[nid]
+                        span = node_spans.pop(nid, None)
                     self.straggler.finished(str(st.node.fn), nid)
                     self._commit(
                         nid, st.ctx_digest, st.input_digest, value,
@@ -1401,6 +1537,10 @@ class ClusterExecutor(_BaseExecutor):
                     self._cache_store(
                         nid, st.cache_key, st.ctx_digest, st.input_digest, value
                     )
+                    if span is not None:
+                        tracer.end(
+                            span, attrs={"copies": copies, "requeues": requeues}
+                        )
                     finish(nid, value, st.ctx, "executed")
             if suspend:
                 frontier = tuple(sorted(n for n in exec_nodes if n not in outputs))
@@ -1414,25 +1554,39 @@ class ClusterExecutor(_BaseExecutor):
                 handle.close(error=exc)
             if self.journal is not None:
                 self.journal.flush()
+            if run_span is not None:
+                tracer.end(run_span, status="error")
             raise
         finally:
             if self.gateway.on_requeue is on_requeue:  # don't clobber a later client
                 self.gateway.on_requeue = prev_requeue
             with cv:
                 inflight.clear()  # keep a dead chained handler's closure cheap
+                node_spans.clear()
         if suspend:
             first_nid = next(iter(suspend))
+            if run_span is not None:
+                tracer.end(run_span, status="interrupt")
             return ExecutionReport(
                 outputs=outputs,
                 contexts=out_ctx,
                 replayed=tuple(replayed),
                 executed=tuple(executed),
                 cached=tuple(cached),
-                wall_s=time.time() - t0,
+                wall_s=time.monotonic() - t0,
                 suspended=True,
                 interrupt=suspend[first_nid].name,
                 interrupt_node=first_nid,
                 frontier=tuple(sorted(n for n in exec_nodes if n not in outputs)),
+            )
+        if run_span is not None:
+            tracer.end(
+                run_span,
+                attrs={
+                    "executed": len(executed),
+                    "replayed": len(replayed),
+                    "cached": len(cached),
+                },
             )
         return ExecutionReport(
             outputs=outputs,
@@ -1440,7 +1594,7 @@ class ClusterExecutor(_BaseExecutor):
             replayed=tuple(replayed),
             executed=tuple(executed),
             cached=tuple(cached),
-            wall_s=time.time() - t0,
+            wall_s=time.monotonic() - t0,
         )
 
     # -- stream stages over the gateway ---------------------------------------
@@ -1525,8 +1679,57 @@ class ClusterExecutor(_BaseExecutor):
         cancel: threading.Event,
         cv: threading.Condition,
         run_token: str,
+        parent: Optional[Any] = None,
     ) -> Tuple[Any, Context, str]:
-        """One gateway-side stream stage. Returns (value, ctx, status)."""
+        """One gateway-side stream stage. Returns (value, ctx, status).
+
+        The stage span wraps the uninstrumented body; a stage resolved
+        entirely by replay discards its span (zero emission).
+        """
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._run_cluster_stream_node_inner(
+                node, splan, ctx, outputs, out_ctx, member_to_group,
+                stream_identity, stream_handles, satisfy_stream_edges,
+                cancel, cv, run_token,
+            )
+        span = tracer.start_span(
+            node.id,
+            parent=parent,
+            kind="stream",
+            attrs={"node": node.id, "ctx": ctx.digest(), "run": run_token},
+        )
+        try:
+            value, out, status = self._run_cluster_stream_node_inner(
+                node, splan, ctx, outputs, out_ctx, member_to_group,
+                stream_identity, stream_handles, satisfy_stream_edges,
+                cancel, cv, run_token,
+            )
+        except BaseException:
+            tracer.end(span, status="error")
+            raise
+        if status == "replayed":
+            tracer.discard(span)
+        else:
+            tracer.end(span, attrs={"status": status})
+        return value, out, status
+
+    def _run_cluster_stream_node_inner(
+        self,
+        node: Node,
+        splan: StreamPlan,
+        ctx: Context,
+        outputs: Mapping[str, Any],
+        out_ctx: Dict[str, Context],
+        member_to_group: Mapping[str, str],
+        stream_identity: Dict[str, Tuple[str, str]],
+        stream_handles: Dict[str, StreamHandle],
+        satisfy_stream_edges: Callable[[str], None],
+        cancel: threading.Event,
+        cv: threading.Condition,
+        run_token: str,
+    ) -> Tuple[Any, Context, str]:
+        """The uninstrumented stage body (see ``_run_cluster_stream_node``)."""
         nid = node.id
         kind = splan.kinds[nid]
         fn_inputs, digest_inputs, stream_kwarg, sdep = self._stream_stage_inputs(

@@ -53,7 +53,7 @@ class LivenessDetector:
 
     def check(self, worker: str) -> Verdict:
         hb = self._hb(worker)
-        now = time.time()
+        now = time.monotonic()
         if hb is None:
             # allow a grace window before declaring system death
             last = self._last_ok.get(worker, 0.0)
@@ -103,13 +103,13 @@ class StragglerWatch:
 
     def started(self, task_name: str, token: Any) -> None:
         with self._lock:
-            self._running[(task_name, token)] = time.time()
+            self._running[(task_name, token)] = time.monotonic()
 
     def finished(self, task_name: str, token: Any) -> None:
         with self._lock:
             t0 = self._running.pop((task_name, token), None)
             if t0 is not None:
-                self._done.setdefault(task_name, []).append(time.time() - t0)
+                self._done.setdefault(task_name, []).append(time.monotonic() - t0)
                 # bound memory: keep the trailing window
                 if len(self._done[task_name]) > 256:
                     self._done[task_name] = self._done[task_name][-128:]
@@ -138,11 +138,11 @@ class StragglerWatch:
             t0 = self._running.get((task_name, token))
             if t0 is None:
                 return False
-            return time.time() - t0 > self.threshold * statistics.median(xs)
+            return time.monotonic() - t0 > self.threshold * statistics.median(xs)
 
     def stragglers(self) -> List[tuple]:
         """[(task_name, token, elapsed, median), ...] currently suspect."""
-        now = time.time()
+        now = time.monotonic()
         out = []
         with self._lock:
             for (name, token), t0 in self._running.items():

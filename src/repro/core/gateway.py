@@ -25,6 +25,7 @@ from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.obs.trace import extract_trace, get_tracer
 from repro.wire import PayloadDecodeError, unwrap_digested
 
 from .context import Context, EMPTY_CONTEXT
@@ -475,16 +476,45 @@ class Gateway:
             else:
                 self._resubmit(req, f"{reason}: evicted from {handle.name}")
 
+    def _rpc_span(self, handle: WorkerHandle, req: TaskRequest):
+        """Open the gateway→worker rpc span for ``req``, or None when off.
+
+        Parent identity is read from the obs fact riding ``req.ctx`` — the
+        same context that crosses the wire — so the span chain survives
+        resubmission, speculation copies, and sharded-gateway handoffs.
+        """
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return None
+        parent = extract_trace(req.ctx)
+        return tracer.start_span(
+            f"rpc:{req.task_name}",
+            trace_id=parent[0] if parent else "",
+            parent_id=parent[1] if parent else "",
+            kind="rpc",
+            attrs={
+                "worker": handle.name,
+                "task": req.task_name,
+                "node": str(req.meta.get("node", "")),
+                "attempt": req.attempts,
+            },
+        )
+
     def _run_on(self, handle: WorkerHandle, req: TaskRequest) -> None:
         with self._track_lock:
             handle.inflight += 1
             handle.inflight_reqs[id(req)] = req
+        span = self._rpc_span(handle, req)
         t0 = time.monotonic()  # interval math must survive wall-clock steps
         try:
             result = handle.worker.run_task(req.task_name, req.ctx, req.inputs)
         except (ConnectionError, TimeoutError, PayloadDecodeError) as exc:
+            if span is not None:
+                get_tracer().end(span, status="error", attrs={"error": type(exc).__name__})
             self._on_invoke_error(handle, req, exc)
             return
+        if span is not None:
+            get_tracer().end(span, status=str(result.get("status", "ok")))
         self._on_result(handle, req, result, time.monotonic() - t0)
 
     def _on_invoke_error(

@@ -43,6 +43,8 @@ from repro.wire import (
     unwrap_digested,
 )
 
+from repro.obs.trace import extract_trace, get_tracer
+
 from .context import Context
 from .durable import Interrupted, payload_digest
 from .heartbeat import HeartbeatServer
@@ -102,6 +104,43 @@ class _WorkerState:
 
 
 def _execute(
+    registry: TaskRegistry,
+    middleware: List[Middleware],
+    state: _WorkerState,
+    task_name: str,
+    ctx: Context,
+    inputs: Mapping[str, Any],
+    fail_injector: Optional[Callable[[str], None]] = None,
+) -> Dict[str, Any]:
+    # the one worker-side execution contract, shared by every transport
+    # (in-proc, threaded HTTP, asyncio) — which is also why the task span
+    # is opened here and nowhere transport-specific. Parent identity rides
+    # the submitted context as an obs.* fact (see repro.obs.trace).
+    tracer = get_tracer()
+    if not tracer.enabled:
+        return _execute_inner(
+            registry, middleware, state, task_name, ctx, inputs, fail_injector
+        )
+    parent = extract_trace(ctx)
+    span = tracer.start_span(
+        f"task:{task_name}",
+        trace_id=parent[0] if parent else "",
+        parent_id=parent[1] if parent else "",
+        kind="task",
+        attrs={"task": task_name},
+    )
+    result = _execute_inner(
+        registry, middleware, state, task_name, ctx, inputs, fail_injector
+    )
+    tracer.end(
+        span,
+        status=str(result.get("status", "error")),
+        attrs={"wall_s": result.get("wall_s", 0.0)},
+    )
+    return result
+
+
+def _execute_inner(
     registry: TaskRegistry,
     middleware: List[Middleware],
     state: _WorkerState,

@@ -172,7 +172,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         opt_cfg = AdamWConfig(**defaults["opt"])
     rules = ShardingRules(cfg, mesh, options)
     model = build(cfg)
-    t0 = time.time()
+    t0 = time.monotonic()
 
     captured: Dict[str, Any] = {}
 
@@ -236,9 +236,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                  out_shardings=(None, cache_sh),
                                  donate_argnums=(1,))
                 lowered = jitted.lower(params_sds, cache_sds, batch_sds)
-            t_lower = time.time() - t0
+            t_lower = time.monotonic() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.monotonic() - t0 - t_lower
         finally:
             rules.uninstall()
 

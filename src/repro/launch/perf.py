@@ -137,7 +137,7 @@ def run_cell(arch: str, shape: str, only: Optional[str] = None) -> Dict:
         return rec
 
     print(f"=== hillclimb {arch} × {shape} ===")
-    t0 = time.time()
+    t0 = time.monotonic()
     baseline = measure("baseline", cfg, options, opt)
     log: List[Dict[str, Any]] = [{"iter": "baseline",
                                   "terms_s": baseline["terms_s"],
@@ -180,7 +180,7 @@ def run_cell(arch: str, shape: str, only: Optional[str] = None) -> Dict:
         "final": cur_rec["terms_s"],
         "baseline_fraction": baseline["roofline_fraction"],
         "final_fraction": cur_rec["roofline_fraction"],
-        "wall_s": time.time() - t0,
+        "wall_s": time.monotonic() - t0,
         "log": log,
     }
     with open(os.path.join(PERF_DIR, f"{arch}__{shape}.json"), "w") as fh:

@@ -72,7 +72,7 @@ def main() -> None:
         rng = np.random.default_rng(0)
         with Gateway(clients,
                      allocation=("context_affinity", "least_loaded")) as gw:
-            t0 = time.time()
+            t0 = time.monotonic()
             futs = [gw.submit("generate",
                               Context.origin({"session": f"s{i}"}),
                               {"prompt": rng.integers(
@@ -82,7 +82,7 @@ def main() -> None:
                               affinity_key=f"s{i % 2}")
                     for i in range(args.requests)]
             outs = [f.result(timeout=600) for f in futs]
-            wall = time.time() - t0
+            wall = time.monotonic() - t0
         tok = sum(len(o["tokens"]) for o in outs)
         print(f"{args.requests} requests / {tok} tokens in {wall:.2f}s "
               f"({tok/wall:.1f} tok/s); alloc {gw.mean_alloc_us():.1f}µs")

@@ -1,0 +1,158 @@
+"""Span sinks and trace exporters.
+
+Sinks receive finished spans as plain dicts (``Span.to_obj()``):
+
+- :class:`RingSink` — bounded in-memory ring, the default harness for
+  tests and interactive inspection.
+- :class:`JsonlSink` — one JSON object per line, conventionally written
+  to ``runs/<id>/spans.jsonl`` next to the run's journal so the trace CLI
+  finds it.
+
+Exporters turn span dicts into the Chrome-trace/Perfetto JSON format
+(``chrome://tracing`` / https://ui.perfetto.dev): each span becomes one
+complete ``"ph": "X"`` event, grouped into threads by worker (falling
+back to span kind), with human-readable thread-name metadata events.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import threading
+from typing import Any, Dict, Iterable, List, Optional
+
+
+class RingSink:
+    """Keep the last ``capacity`` spans in memory."""
+
+    def __init__(self, capacity: int = 4096):
+        self._ring: collections.deque = collections.deque(maxlen=capacity)
+        self._lock = threading.Lock()
+
+    def emit(self, span: Dict[str, Any]) -> None:
+        """Record one finished span."""
+        with self._lock:
+            self._ring.append(span)
+
+    def spans(self) -> List[Dict[str, Any]]:
+        """Snapshot of retained spans, oldest first."""
+        with self._lock:
+            return list(self._ring)
+
+    def clear(self) -> None:
+        """Drop every retained span."""
+        with self._lock:
+            self._ring.clear()
+
+
+class JsonlSink:
+    """Append spans to a JSONL file (one object per line, sorted keys)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._fh: Optional[Any] = None
+
+    def emit(self, span: Dict[str, Any]) -> None:
+        """Write one span as a JSON line (opens the file lazily)."""
+        line = json.dumps(span, sort_keys=True)
+        with self._lock:
+            if self._fh is None:
+                parent = os.path.dirname(self.path)
+                if parent:
+                    os.makedirs(parent, exist_ok=True)
+                self._fh = open(self.path, "a", encoding="utf-8")
+            self._fh.write(line + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        """Flush and close the underlying file."""
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __enter__(self) -> "JsonlSink":
+        """Support ``with JsonlSink(...) as sink``."""
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        """Close on scope exit."""
+        self.close()
+
+
+def read_spans(path: str) -> List[Dict[str, Any]]:
+    """Load a spans.jsonl file; blank/torn trailing lines are skipped."""
+    out: List[Dict[str, Any]] = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except ValueError:
+                continue  # torn tail from a crashed writer — best effort
+    return out
+
+
+def chrome_trace(spans: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
+    """Render spans as a Chrome-trace (Perfetto-loadable) JSON object.
+
+    Spans are grouped into threads by their ``worker`` attribute (falling
+    back to span kind); timestamps are wall-clock microseconds so events
+    from different hosts line up on one absolute axis.
+    """
+    events: List[Dict[str, Any]] = []
+    tids: Dict[str, int] = {}
+    for sp in spans:
+        attrs = sp.get("attrs") or {}
+        lane = str(attrs.get("worker") or sp.get("kind") or "main")
+        if lane not in tids:
+            tids[lane] = len(tids) + 1
+            events.append(
+                {
+                    "ph": "M",
+                    "name": "thread_name",
+                    "pid": 1,
+                    "tid": tids[lane],
+                    "args": {"name": lane},
+                }
+            )
+        events.append(
+            {
+                "ph": "X",
+                "name": sp.get("name", "?"),
+                "cat": sp.get("kind", "internal"),
+                "pid": 1,
+                "tid": tids[lane],
+                "ts": float(sp.get("ts", 0.0)) * 1e6,
+                "dur": float(sp.get("dur", 0.0)) * 1e6,
+                "args": {
+                    "trace": sp.get("trace", ""),
+                    "span": sp.get("span", ""),
+                    "parent": sp.get("parent", ""),
+                    "status": sp.get("status", ""),
+                    **attrs,
+                },
+            }
+        )
+    events.insert(
+        0,
+        {"ph": "M", "name": "process_name", "pid": 1, "tid": 0, "args": {"name": "repro"}},
+    )
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, spans: Iterable[Dict[str, Any]]) -> str:
+    """Write :func:`chrome_trace` output to ``path``; returns the path."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(chrome_trace(spans), fh)
+    return path
+
+
+__all__ = ["JsonlSink", "RingSink", "chrome_trace", "read_spans", "write_chrome_trace"]

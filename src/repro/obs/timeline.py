@@ -1,0 +1,266 @@
+"""Run-timeline reconstruction: journal + span log → per-node view.
+
+The journal alone is enough to rebuild a run's timeline post-hoc — every
+NODE_COMMIT carries its dependency list in ``meta["deps"]`` and a wall
+timestamp, and uncompacted journals additionally carry NODE_START records
+giving each node a start edge. Compacted journals fold NODE_START away
+(it is pure history); those nodes degrade to zero-duration commit events,
+which keeps the ordering and dependency structure exact even when
+durations are unknown.
+
+When a ``spans.jsonl`` from a live-traced run is available, node spans
+(matched by replay identity ``(node, ξ-digest, input-digest)``) override
+the journal-derived start/duration with monotonic-clock-accurate values
+and attach the executing worker.
+
+The critical path is the longest chain through the dependency DAG by node
+duration — the chain an infinitely wide cluster could not run any faster.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.obs.sinks import chrome_trace
+
+if TYPE_CHECKING:  # repro.core imports are deferred to call time: this
+    # module is reachable from repro.core's own import graph (stream
+    # runtime → obs.metrics → obs package) and must not close the cycle
+    from repro.core.durable import JournalRecord
+
+
+@dataclass
+class NodeTiming:
+    """One node's reconstructed execution window."""
+
+    node: str
+    start: float = 0.0  # wall clock; 0.0 when unknown
+    end: float = 0.0
+    dur_s: float = 0.0
+    attempts: int = 0
+    chunks: int = 0  # CHUNK_COMMITs (stream nodes)
+    status: str = "committed"  # committed | replayed | failed
+    worker: str = ""  # from span log, when available
+    deps: Tuple[str, ...] = ()
+    source: str = "journal"  # journal | spans
+
+    def to_obj(self) -> Dict[str, Any]:
+        """JSON-serializable form."""
+        return {
+            "node": self.node,
+            "start": self.start,
+            "end": self.end,
+            "dur_s": self.dur_s,
+            "attempts": self.attempts,
+            "chunks": self.chunks,
+            "status": self.status,
+            "worker": self.worker,
+            "deps": list(self.deps),
+            "source": self.source,
+        }
+
+
+@dataclass
+class Timeline:
+    """A run's per-node timings, dependency edges, and critical path."""
+
+    nodes: Dict[str, NodeTiming] = field(default_factory=dict)
+    run_start: float = 0.0
+    run_end: float = 0.0
+    cache_hits: int = 0
+    requeues: int = 0
+    handoffs: int = 0
+
+    # -- construction -------------------------------------------------------
+    @staticmethod
+    def from_journal(
+        journal_path: str, spans: Optional[Iterable[Dict[str, Any]]] = None
+    ) -> "Timeline":
+        """Build a timeline from a journal file, optionally merging spans.
+
+        Works on compacted journals: ``Journal.records()`` transparently
+        expands SNAPSHOT records, and nodes whose NODE_START was folded
+        away fall back to zero-duration commit events.
+        """
+        from repro.core.durable import Journal
+
+        with Journal(journal_path, sync="never") as j:
+            records = list(j.records())
+        return Timeline.from_records(records, spans=spans)
+
+    @staticmethod
+    def from_records(
+        records: "List[JournalRecord]", spans: Optional[Iterable[Dict[str, Any]]] = None
+    ) -> "Timeline":
+        """Build a timeline from already-loaded journal records."""
+        tl = Timeline()
+        starts: Dict[str, float] = {}
+        for rec in records:
+            if rec.kind == "RUN_START":
+                tl.run_start = tl.run_start or rec.wall_time
+            elif rec.kind == "RUN_END":
+                tl.run_end = rec.wall_time
+            elif rec.kind == "NODE_START":
+                starts.setdefault(rec.node_id, rec.wall_time)
+            elif rec.kind == "NODE_COMMIT":
+                start = starts.get(rec.node_id, 0.0)
+                nt = tl.nodes.get(rec.node_id) or NodeTiming(node=rec.node_id)
+                nt.start = start or rec.wall_time
+                nt.end = rec.wall_time
+                nt.dur_s = max(0.0, rec.wall_time - start) if start else 0.0
+                nt.attempts = max(nt.attempts, rec.attempt + 1)
+                nt.status = "committed"
+                nt.deps = tuple(rec.meta.get("deps") or ())
+                tl.nodes[rec.node_id] = nt
+            elif rec.kind == "NODE_FAIL":
+                nt = tl.nodes.get(rec.node_id) or NodeTiming(node=rec.node_id)
+                nt.attempts = max(nt.attempts, rec.attempt + 1)
+                if nt.status != "committed":
+                    nt.status = "failed"
+                tl.nodes[rec.node_id] = nt
+            elif rec.kind == "CHUNK_COMMIT":
+                nt = tl.nodes.get(rec.node_id) or NodeTiming(node=rec.node_id)
+                nt.chunks += 1
+                tl.nodes[rec.node_id] = nt
+            elif rec.kind == "CACHE_HIT":
+                tl.cache_hits += 1
+            elif rec.kind == "NODE_REQUEUE":
+                tl.requeues += 1
+            elif rec.kind == "GW_HANDOFF":
+                tl.handoffs += 1
+        if spans:
+            tl._merge_spans(spans)
+        return tl
+
+    def _merge_spans(self, spans: Iterable[Dict[str, Any]]) -> None:
+        """Overlay node spans' precise timings and worker attribution."""
+        by_node: Dict[str, Dict[str, Any]] = {}
+        workers: Dict[str, str] = {}
+        for sp in spans:
+            attrs = sp.get("attrs") or {}
+            node = str(attrs.get("node") or "")
+            if not node:
+                continue
+            if sp.get("kind") == "node":
+                by_node[node] = sp
+            elif sp.get("kind") == "rpc" and attrs.get("worker"):
+                workers[node] = str(attrs["worker"])
+        for node, sp in by_node.items():
+            nt = self.nodes.get(node)
+            if nt is None:
+                continue
+            nt.start = float(sp.get("ts", nt.start))
+            nt.dur_s = float(sp.get("dur", nt.dur_s))
+            nt.end = nt.start + nt.dur_s
+            nt.source = "spans"
+        for node, worker in workers.items():
+            if node in self.nodes:
+                self.nodes[node].worker = worker
+
+    # -- analysis -----------------------------------------------------------
+    def critical_path(self) -> Tuple[List[str], float]:
+        """Longest duration-weighted dependency chain: ``(nodes, seconds)``.
+
+        Duration ties (e.g. a compacted journal where every node degraded
+        to zero duration) fall back to hop count, so the structural chain
+        survives even without timings. Edges to dependencies missing from
+        the timeline (e.g. satisfied entirely by replay in a later
+        incarnation) are skipped.
+        """
+        memo: Dict[str, Tuple[float, List[str]]] = {}
+
+        def best(node: str) -> Tuple[float, List[str]]:
+            if node in memo:
+                return memo[node]
+            nt = self.nodes[node]
+            memo[node] = (nt.dur_s, [node])  # provisional: breaks dep cycles
+            top: Tuple[float, List[str]] = (0.0, [])
+            for dep in nt.deps:
+                if dep in self.nodes:
+                    cand = best(dep)
+                    if (cand[0], len(cand[1])) > (top[0], len(top[1])):
+                        top = cand
+            memo[node] = (nt.dur_s + top[0], top[1] + [node])
+            return memo[node]
+
+        winner: Tuple[float, List[str]] = (0.0, [])
+        for node in self.nodes:
+            cand = best(node)
+            if (cand[0], len(cand[1])) > (winner[0], len(winner[1])):
+                winner = cand
+        return winner[1], winner[0]
+
+    # -- export -------------------------------------------------------------
+    def to_obj(self) -> Dict[str, Any]:
+        """JSON-serializable form (nodes sorted by start time)."""
+        path, path_s = self.critical_path()
+        ordered = sorted(self.nodes.values(), key=lambda n: (n.start, n.node))
+        return {
+            "run_start": self.run_start,
+            "run_end": self.run_end,
+            "wall_s": max(0.0, self.run_end - self.run_start) if self.run_end else 0.0,
+            "cache_hits": self.cache_hits,
+            "requeues": self.requeues,
+            "handoffs": self.handoffs,
+            "nodes": [n.to_obj() for n in ordered],
+            "critical_path": path,
+            "critical_path_s": path_s,
+        }
+
+    def to_chrome(self) -> Dict[str, Any]:
+        """Chrome-trace object synthesized from the timeline itself.
+
+        Usable even when the run was never live-traced — every committed
+        node becomes one complete event on its worker's (or the journal's)
+        lane.
+        """
+        spans = [
+            {
+                "name": nt.node,
+                "kind": "node",
+                "ts": nt.start,
+                "dur": nt.dur_s,
+                "status": nt.status,
+                "attrs": {"worker": nt.worker or "journal", "attempts": nt.attempts},
+            }
+            for nt in self.nodes.values()
+        ]
+        return chrome_trace(spans)
+
+    def render_text(self) -> str:
+        """Human-readable table + critical-path summary for the CLI."""
+        obj = self.to_obj()
+        lines: List[str] = []
+        base = self.run_start or min(
+            (n.start for n in self.nodes.values() if n.start), default=0.0
+        )
+        width = max((len(n) for n in self.nodes), default=4)
+        header = f"{'node':<{width}}  {'start+s':>8}  {'dur_s':>8}  att  chunks  worker  status"
+        lines.append(header)
+        for n in obj["nodes"]:
+            rel = (n["start"] - base) if n["start"] else 0.0
+            lines.append(
+                f"{n['node']:<{width}}  {rel:>8.3f}  {n['dur_s']:>8.3f}  "
+                f"{n['attempts']:>3}  {n['chunks']:>6}  {n['worker'] or '-':<6}  {n['status']}"
+            )
+        path = obj["critical_path"]
+        if path:
+            lines.append(
+                f"critical path: {' -> '.join(path)} "
+                f"({obj['critical_path_s']:.3f}s of {obj['wall_s']:.3f}s wall)"
+            )
+        if self.cache_hits or self.requeues or self.handoffs:
+            lines.append(
+                f"cache_hits={self.cache_hits} requeues={self.requeues} "
+                f"handoffs={self.handoffs}"
+            )
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        """The timeline as a stable JSON document."""
+        return json.dumps(self.to_obj(), sort_keys=True)
+
+
+__all__ = ["NodeTiming", "Timeline"]

@@ -38,7 +38,7 @@ class Request:
     rid: str
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int
-    submitted_at: float = field(default_factory=time.time)
+    submitted_at: float = field(default_factory=time.monotonic)
 
     def digest(self) -> str:
         return payload_digest({"p": self.prompt,
@@ -144,7 +144,7 @@ class ContinuousBatcher:
                 req = self._queue.get_nowait()
             except queue.Empty:
                 return
-            t0 = time.time()
+            t0 = time.monotonic()
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, fresh = self.model.prefill(self.params, {"tokens": toks},
                                                pad_to=self.max_len)
@@ -159,7 +159,7 @@ class ContinuousBatcher:
             slot.prompt_len = len(req.prompt)
             slot.queued_s = t0 - req.submitted_at
             slot.t_admit = t0
-            slot.t_prefill_done = time.time()
+            slot.t_prefill_done = time.monotonic()
             ch = self._streams.get(req.rid)
             if ch is not None:
                 ch.put(0, first)  # first token streams out at prefill time
@@ -183,7 +183,7 @@ class ContinuousBatcher:
                 (self.eos_id is not None and t == self.eos_id) or \
                 slot.prompt_len + slot.produced + 1 >= self.max_len
             if done:
-                now = time.time()
+                now = time.monotonic()
                 self._done[slot.rid] = Generation(
                     rid=slot.rid, tokens=list(slot.tokens),
                     prompt_len=slot.prompt_len, queued_s=slot.queued_s,

@@ -30,6 +30,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
+from repro.obs.metrics import metrics
 from repro.wire import DIGEST_HEX_LEN, payload_digest
 
 from .channel import Channel, StreamHandle
@@ -151,6 +152,11 @@ class ChunkLog:
         self.next_seq, self.chain, self.eos = replay.stream_progress(
             node_id, ctx_digest, input_digest
         )
+        # instruments are resolved once here, then bumped lock-cheap per
+        # chunk — commit_chunk is the hot path
+        reg = metrics()
+        self._metric_chunks = reg.counter("repro_stream_chunks_committed_total")
+        self._metric_eos = reg.counter("repro_stream_eos_total")
 
     def replayed_values(self) -> List[Any]:
         """Payloads of the committed chunk prefix (seq 0..next_seq-1)."""
@@ -181,6 +187,7 @@ class ChunkLog:
             self.journal.append(rec)
         self.replay.record_chunk(rec)
         self.next_seq = seq + 1
+        self._metric_chunks.inc()
         return seq
 
     def commit_eos(self) -> None:
@@ -218,6 +225,7 @@ class ChunkLog:
         self.replay.record_eos(eos)
         self.replay.record(commit)
         self.eos = True
+        self._metric_eos.inc()
 
 
 # ---------------------------------------------------------------------------

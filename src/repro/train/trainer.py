@@ -38,6 +38,7 @@ from repro.configs.base import ModelConfig
 from repro.core import (Context, ContextGraph, HeartbeatServer, Journal,
                         JournalRecord, LocalExecutor, StragglerWatch,
                         WithContext)
+from repro.obs.metrics import metrics as obs_metrics
 from repro.wire import canonical_digest, payload_digest
 from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource
 from repro.models import build
@@ -274,7 +275,13 @@ class Trainer:
         yield LocalExecutor(max_workers=4, journal=self.journal)
 
     def _collect_metrics(self, report) -> None:
-        """Pull this round's step metrics out of a report, in step order."""
+        """Pull this round's step metrics out of a report, in step order.
+
+        Besides the local ``metrics_log`` (summary.json), each round also
+        feeds the process-global :mod:`repro.obs.metrics` registry so
+        trainer progress shows up in the same snapshot as gateway/cache
+        stats.
+        """
         metrics = [report.outputs[n] for n in report.outputs
                    if n.startswith(self.step_node_prefix)]
         for m in sorted(metrics, key=lambda m: m["step"]):
@@ -283,12 +290,20 @@ class Trainer:
                 print(f"step {m['step']:5d} loss {m['loss']:.4f} "
                       f"gnorm {m['grad_norm']:.3f} "
                       f"lr {m['lr']:.2e}", flush=True)
+        if metrics:
+            reg = obs_metrics()
+            reg.counter("repro_train_steps_total").inc(len(metrics))
+            last = max(metrics, key=lambda m: m["step"])
+            reg.gauge("repro_train_step").set(float(last["step"]))
+            reg.gauge("repro_train_loss").set(float(last["loss"]))
+            reg.gauge("repro_train_grad_norm").set(float(last["grad_norm"]))
+            reg.gauge("repro_train_lr").set(float(last["lr"]))
 
     # -- main loop ----------------------------------------------------------------
     def train(self) -> Dict[str, Any]:
         if self.heartbeat:
             self.heartbeat.start()
-        t0 = time.time()
+        t0 = time.monotonic()  # wall_s is a duration: clock steps must not skew it
         # replay digests from previous incarnations (determinism check) +
         # incarnation nonce (see _round_graph docstring)
         replay_digests, incarnation = self._scan_journal()
@@ -312,7 +327,7 @@ class Trainer:
             self.journal.flush()
             if self.heartbeat:
                 self.heartbeat.stop()
-        wall = time.time() - t0
+        wall = time.monotonic() - t0
         out = {"steps": self.tc.num_steps - start, "wall_s": wall,
                "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log
                else None,

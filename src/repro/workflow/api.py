@@ -31,6 +31,7 @@ from repro.core.durable import Journal, JournalRecord
 from repro.core.executor import ExecutionReport, LocalExecutor
 from repro.core.graph import ContextGraph
 from repro.journal.compact import CompactedHistoryError
+from repro.obs.trace import get_tracer
 
 from .registry import WorkflowRegistry, WorkflowStore
 
@@ -134,7 +135,10 @@ class WorkflowRunner:
         graph = self._graph(workflow, args)
         with self._journal(wid, {"workflow_id": wid, "workflow": workflow}) as j:
             self._apply_resumes(graph, j)
-            report = self._execute(graph, j, self.cache, wid)
+            with get_tracer().span(
+                f"workflow:{wid}", kind="workflow", attrs={"workflow": workflow}
+            ):
+                report = self._execute(graph, j, self.cache, wid)
         return self._finish(wid, report)
 
     def resume(
@@ -202,7 +206,12 @@ class WorkflowRunner:
                         f"{pending.meta.get('deadline')}; escalation required"
                     )
             self._apply_resumes(graph, j)
-            report = self._execute(graph, j, self.cache, workflow_id)
+            with get_tracer().span(
+                f"workflow:{workflow_id}",
+                kind="workflow",
+                attrs={"workflow": str(meta["workflow"]), "resume": True},
+            ):
+                report = self._execute(graph, j, self.cache, workflow_id)
         return self._finish(workflow_id, report)
 
     def fork(

@@ -1,0 +1,116 @@
+"""``python -m repro trace``: run-timeline reconstruction from the CLI.
+
+Contract:
+  - a run *directory* implies ``journal.wal`` and auto-discovers the
+    ``spans.jsonl`` a traced run wrote next to it,
+  - the default output is the human timeline table; ``--json`` emits the
+    structured timeline; ``--chrome PATH`` writes a Chrome-trace file
+    whose complete events correlate 1:1 with journal NODE_COMMITs,
+  - the tool stays post-hoc: it works on a *compacted* journal (structure
+    and critical path survive; durations degrade to zero),
+  - unknown paths exit non-zero with a diagnostic on stderr.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import repro
+from repro.core import ContextGraph, Journal
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _cli(args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run(
+        [sys.executable, "-m", "repro", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=cwd,
+        timeout=120,
+    )
+
+
+def _diamond():
+    g = ContextGraph(name="dia")
+    g.add("a", lambda ctx: 1)
+    g.add("b", lambda ctx, a: a + 1, deps=["a"])
+    g.add("c", lambda ctx, a: a + 2, deps=["a"])
+    g.add("d", lambda ctx, b, c: b + c, deps=["b", "c"])
+    return g
+
+
+@pytest.fixture
+def traced_run(tmp_path):
+    """A completed, traced client run: journal + spans.jsonl on disk."""
+    base = str(tmp_path / "state")
+    with repro.Client(base, trace=True) as client:
+        rep = client.run(_diamond())
+    assert set(rep.executed) == {"a", "b", "c", "d"}
+    run_dir = os.path.join(base, "runs", "dia")
+    assert os.path.exists(os.path.join(run_dir, "spans.jsonl"))
+    return run_dir
+
+
+def test_trace_cli_renders_timeline_from_run_dir(traced_run):
+    proc = _cli(["trace", traced_run])
+    assert proc.returncode == 0, proc.stderr
+    for node in ("a", "b", "c", "d"):
+        assert node in proc.stdout
+    assert "critical path" in proc.stdout
+
+
+def test_trace_cli_json_merges_span_timings(traced_run):
+    proc = _cli(["trace", traced_run, "--json"])
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert {n["node"] for n in doc["nodes"]} == {"a", "b", "c", "d"}
+    # spans.jsonl was auto-discovered: timings come from the span log
+    assert all(n["source"] == "spans" for n in doc["nodes"])
+    assert doc["critical_path"][0] == "a" and doc["critical_path"][-1] == "d"
+    by_node = {n["node"]: n for n in doc["nodes"]}
+    assert by_node["d"]["deps"] == ["b", "c"]
+
+
+def test_trace_cli_chrome_export_correlates_with_commits(traced_run, tmp_path):
+    out = str(tmp_path / "trace.json")
+    proc = _cli(["trace", traced_run, "--chrome", out])
+    assert proc.returncode == 0, proc.stderr
+    with Journal(os.path.join(traced_run, "journal.wal"), sync="never") as j:
+        commits = dict(j.kinds())["NODE_COMMIT"]
+    doc = json.load(open(out))
+    node_events = [
+        e for e in doc["traceEvents"] if e.get("ph") == "X" and e.get("cat") == "node"
+    ]
+    assert len(node_events) == commits == 4  # 1:1 with journal NODE_COMMITs
+    assert {e["args"]["node"] for e in node_events} == {"a", "b", "c", "d"}
+    assert len({e["args"]["trace"] for e in node_events}) == 1
+
+
+def test_trace_cli_posthoc_on_compacted_journal(traced_run):
+    journal = os.path.join(traced_run, "journal.wal")
+    proc = _cli(["compact", journal])
+    assert proc.returncode == 0, proc.stderr
+    # journal path (not run dir): no span merge — pure post-hoc reconstruction
+    proc = _cli(["trace", journal, "--json"])
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert {n["node"] for n in doc["nodes"]} == {"a", "b", "c", "d"}
+    assert all(n["source"] == "journal" for n in doc["nodes"])
+    assert doc["critical_path"]  # structure survives compaction
+    # run dir still merges the surviving span log over the compacted journal
+    proc = _cli(["trace", traced_run, "--json"])
+    doc = json.loads(proc.stdout)
+    assert all(n["source"] == "spans" for n in doc["nodes"])
+
+
+def test_trace_cli_missing_journal_exits_nonzero(tmp_path):
+    proc = _cli(["trace", str(tmp_path / "nope")])
+    assert proc.returncode == 1
+    assert "no journal" in proc.stderr
