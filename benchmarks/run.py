@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 import statistics
-import sys
 import time
 from typing import Callable, List, Tuple
 
@@ -132,7 +131,7 @@ def bench_journal_overhead(quick: bool) -> None:
 
     base = timeit(lambda: run("off"), 3)
     for sync in ("never", "batch", "always"):
-        us = timeit(lambda: run(sync), 3)
+        us = timeit(lambda s=sync: run(s), 3)
         record(f"journal_overhead_{sync}", (us - base) / n,
                f"per-node delta vs no-journal ({base/n:.1f}us baseline)")
 

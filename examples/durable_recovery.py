@@ -17,7 +17,6 @@ import os
 import shutil
 import tempfile
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.optim.adamw import AdamWConfig

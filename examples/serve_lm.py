@@ -25,7 +25,6 @@ from repro.models import build
 
 def make_worker_registry(cfg, params, model, max_new: int) -> TaskRegistry:
     reg = TaskRegistry()
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, pad_to=0))
     decode = jax.jit(model.decode_step)
 
     @reg.task("generate")

@@ -38,6 +38,14 @@ optionally merged with the ``spans.jsonl`` a traced run wrote next to it::
 A run *directory* implies ``journal.wal`` inside it and auto-discovers
 ``spans.jsonl``; ``--chrome PATH`` additionally writes a Chrome-trace /
 Perfetto file (``chrome://tracing``, https://ui.perfetto.dev).
+
+The ``lint`` subcommand (docs/static-analysis.md) runs the static-analysis
+suite — replay-safety of task functions and framework invariants — over a
+tree, honouring the committed ``.repro-lint-baseline.json``::
+
+    python -m repro lint src/ tests/ benchmarks/
+    python -m repro lint src/ --select RS --json
+    python -m repro lint --explain RS101
 """
 
 from __future__ import annotations
@@ -73,6 +81,7 @@ def _pending(store: WorkflowStore, workflow_id: str) -> Optional[Dict[str, Any]]
     if deadline is not None:
         info["deadline"] = float(deadline)
         info["on_timeout"] = str(rec.meta.get("on_timeout", ""))
+        # wall-clock: deadline is a journaled absolute wall time
         info["expired"] = time.time() >= float(deadline)
     return info
 
@@ -93,6 +102,7 @@ def _describe_pending(pending: Optional[Dict[str, Any]]) -> str:
     desc = f"{pending['interrupt']}@{pending['node']}"
     if "deadline" in pending:
         state = "EXPIRED" if pending["expired"] else "pending"
+        # wall-clock: deadline is a journaled absolute wall time
         remain = pending["deadline"] - time.time()
         desc += f" ({state}, t{remain:+.0f}s, on_timeout={pending['on_timeout']})"
     return desc
@@ -146,11 +156,11 @@ def _load_registry(spec: str) -> Any:
     try:
         module = importlib.import_module(module_name)
     except ImportError as exc:
-        raise SystemExit(f"cannot import registry module {module_name!r}: {exc}")
+        raise SystemExit(f"cannot import registry module {module_name!r}: {exc}") from None
     try:
         return getattr(module, attr)
     except AttributeError:
-        raise SystemExit(f"module {module_name!r} has no attribute {attr!r}")
+        raise SystemExit(f"module {module_name!r} has no attribute {attr!r}") from None
 
 
 def _cmd_resume(args: argparse.Namespace) -> int:
@@ -366,6 +376,10 @@ def build_parser() -> argparse.ArgumentParser:
     )
     p_trace.add_argument("--json", action="store_true", help="timeline as JSON")
     p_trace.set_defaults(fn=_cmd_trace)
+
+    from repro.analysis.cli import add_lint_parser  # pure stdlib, cheap
+
+    add_lint_parser(sub)
     return parser
 
 

@@ -140,6 +140,8 @@ class FileCacheBackend:
         Age-gated so a concurrent writer's in-flight tmp file is left alone;
         anything older than ``max_age_s`` is a leak no rename will ever claim.
         """
+        # mtimes are wall-based, so the age gate must compare like with
+        # wall-clock: 'now' shares os.path.getmtime()'s epoch
         now = time.time()
         for dirpath, _dirnames, filenames in os.walk(self.root):
             for name in filenames:

@@ -33,7 +33,6 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-import jax
 
 from repro.cache.store import atomic_write_bytes
 from repro.wire import JsonCodec, compress, decompress
@@ -143,7 +142,7 @@ class CheckpointStore:
             "digest_kind": "content",  # keys+dtypes+shapes+tensor bytes
             "num_hosts": self.num_hosts,
             "written_by": self.host_index,
-            "time": time.time(),
+            "time": time.time(),  # record timestamp
             "entries": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
                         for k, v in flat.items()},
             "meta": extra_meta or {},

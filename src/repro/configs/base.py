@@ -6,9 +6,8 @@ architecture), selected by ``--arch <id>`` via the REGISTRY. Reduced
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, Tuple
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "REGISTRY", "register",
            "get_config", "list_archs", "smoke_variant"]
@@ -156,7 +155,7 @@ def register(name: str):
 
 
 def get_config(name: str) -> ModelConfig:
-    import repro.configs  # trigger registration of all arch modules
+    import repro.configs  # noqa: F401 (registers all arch modules)
 
     if name not in REGISTRY:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
@@ -164,7 +163,7 @@ def get_config(name: str) -> ModelConfig:
 
 
 def list_archs() -> Tuple[str, ...]:
-    import repro.configs
+    import repro.configs  # noqa: F401 (registers all arch modules)
 
     return tuple(sorted(REGISTRY))
 

@@ -10,7 +10,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .base import ModelConfig, ShapeConfig, SHAPES
+from .base import ModelConfig, ShapeConfig
 
 __all__ = ["input_specs", "cell_applicability", "ALL_CELLS"]
 

@@ -437,7 +437,7 @@ class AsyncWorkerClient:
                 asyncio.open_connection(self._host, self._port), timeout=self.timeout
             )
         except Exception as exc:
-            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}") from exc
         try:
             writer.write(
                 (
@@ -452,7 +452,7 @@ class AsyncWorkerClient:
             )
         except Exception as exc:
             await _close_writer(writer)
-            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}") from exc
         if headers.get("content-type", "") == STREAM_CONTENT_TYPE:
             # incremental chunk stream: hand back a live frame iterator over
             # the open connection; the bridge closes it when the stream ends
@@ -469,7 +469,7 @@ class AsyncWorkerClient:
             else:
                 raw = await asyncio.wait_for(reader.read(-1), timeout=self.timeout)
         except Exception as exc:
-            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}") from exc
         finally:
             await _close_writer(writer)
         # a transport that answered but with undecodable bytes is a TYPED

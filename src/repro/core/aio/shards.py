@@ -330,7 +330,7 @@ class ShardedGateway:
                 JournalRecord(
                     kind="GW_HANDOFF",
                     node_id="",
-                    wall_time=time.time(),
+                    wall_time=time.time(),  # record timestamp
                     meta={
                         "from": self.replicas[dead_idx].name,
                         "to": [self.replicas[i].name for i in survivors],

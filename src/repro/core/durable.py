@@ -48,6 +48,7 @@ __all__ = [
     "Interrupted",
     "interrupt",
     "KNOWN_KINDS",
+    "REPLAY_IGNORED_KINDS",
     "SNAPSHOT_VERSION",
     "encode_payload",
     "decode_payload",
@@ -80,6 +81,30 @@ KNOWN_KINDS = frozenset(
         "CACHE_STORE",
         "NODE_FAIL",
         "RUN_END",
+        "CKPT",
+        "SUSPEND",
+        "RESUME",
+        "FORK",
+        "LINEAGE",
+        "GW_HANDOFF",
+        "SNAPSHOT",
+    }
+)
+
+#: Kinds :class:`ReplayCache` deliberately does NOT index: they carry run
+#: activity or annotations, never replayable output state. Kept in sync
+#: with the scan in ``ReplayCache.__init__`` — ``python -m repro lint``
+#: (INV101) diffs ``handled ∪ ignored`` against ``KNOWN_KINDS``, so adding
+#: a kind without classifying it here or handling it there fails the gate.
+REPLAY_IGNORED_KINDS = frozenset(
+    {
+        "RUN_START",
+        "RUN_END",
+        "NODE_START",
+        "NODE_FAIL",
+        "NODE_REQUEUE",
+        "CACHE_HIT",
+        "CACHE_STORE",
         "CKPT",
         "SUSPEND",
         "RESUME",
@@ -234,7 +259,7 @@ class Journal:
 
     # -- append ----------------------------------------------------------------
     def append(self, rec: JournalRecord) -> None:
-        rec.wall_time = rec.wall_time or time.time()
+        rec.wall_time = rec.wall_time or time.time()  # record timestamp
         body = encode_payload(rec.to_obj())
         frame = _HEADER.pack(len(body), binascii.crc32(body)) + body
         with self._lock:

@@ -62,7 +62,7 @@ from repro.stream import (
     stream_input_marker,
 )
 
-from .context import Context, EMPTY_CONTEXT
+from .context import Context
 from .durable import (
     Interrupted,
     Journal,
@@ -402,6 +402,8 @@ class _BaseExecutor:
             timeout_s = getattr(node, "interrupt_timeout_s", None)
             if timeout_s is not None:
                 meta["timeout_s"] = float(timeout_s)
+                # an absolute wall deadline survives process restarts;
+                # record timestamp: journaled for cross-process expiry
                 meta["deadline"] = time.time() + float(timeout_s)
                 policy = getattr(node, "interrupt_on_timeout", "") or "escalate"
                 if policy == "default":

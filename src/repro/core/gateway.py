@@ -83,7 +83,7 @@ class WorkerHandle:
     live: bool = True  # heartbeat verdict (system level)
     app_live: bool = True  # application verdict
     telemetry: Optional[Dict[str, Any]] = None
-    last_seen: float = 0.0
+    last_seen: float = 0.0  # monotonic stamp of the last successful probe
     inflight: int = 0
     completed: int = 0
     ewma_latency_s: float = 0.0  # straggler detection input (monotonic deltas)
@@ -356,7 +356,7 @@ class Gateway:
         with self._track_lock:
             self.suspended_runs[run_token] = {
                 "interrupt": interrupt,
-                "since": time.time(),
+                "since": time.time(),  # record timestamp
             }
 
     # -- internals ------------------------------------------------------------
@@ -624,7 +624,9 @@ class Gateway:
         with self._track_lock:  # transition must be atomic vs _run_on's
             was_live, h.live = h.live, tel is not None
         h.telemetry = tel
-        h.last_seen = time.time() if tel else h.last_seen
+        # monotonic, not wall: last_seen feeds liveness-age math and must
+        # not jump under NTP steps (clock policy, docs/static-analysis.md)
+        h.last_seen = time.monotonic() if tel else h.last_seen
         h.hb_misses = 0 if tel is not None else h.hb_misses + 1
         if tel is not None:
             reported = getattr(h.worker, "app_alive", None)
@@ -703,7 +705,10 @@ class Gateway:
                     "hb_misses": h.hb_misses,
                     "ewma_latency_s": h.ewma_latency_s,
                     "probe_latency_s": float(tel.get("probe_latency_s", 0.0)),
-                    "last_seen": h.last_seen,
+                    # age, not a wall timestamp: last_seen is monotonic
+                    "last_seen_age_s": (
+                        max(0.0, time.monotonic() - h.last_seen) if h.last_seen else -1.0
+                    ),
                     "held_contexts": len(h.held_contexts),
                 }
         with self._track_lock:

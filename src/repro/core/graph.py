@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import hashlib
 import itertools
+import os
+import warnings
 from dataclasses import dataclass, field
 from types import CodeType, ModuleType
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
@@ -345,9 +347,20 @@ class ContextGraph:
         interrupt_timeout_s: Optional[float] = None,
         interrupt_default: Any = _UNSET,
         interrupt_on_timeout: str = "",
+        check: Optional[str] = None,
     ) -> Node:
         if id in self.nodes:
             raise ValueError(f"duplicate node id {id!r}")
+        # registration-time replay-safety lint (docs/static-analysis.md §2):
+        # ``check`` overrides the REPRO_LINT env default per node
+        check_mode = check if check is not None else os.environ.get("REPRO_LINT", "off")
+        if check_mode not in ("off", "warn", "error"):
+            raise ValueError(
+                f"node {id!r}: check must be 'off', 'warn', or 'error', "
+                f"not {check_mode!r}"
+            )
+        if check_mode != "off" and callable(fn):
+            self._lint_task(id, fn, check_mode)
         if stream not in STREAM_KINDS:
             raise ValueError(f"node {id!r}: stream must be one of {STREAM_KINDS}")
         if volatile and stream:
@@ -408,6 +421,33 @@ class ContextGraph:
         )
         self.nodes[id] = node
         return node
+
+    def _lint_task(self, id: str, fn: Callable[..., Any], mode: str) -> None:
+        """Run the replay-safety checker on ``fn`` at registration time.
+
+        ``mode="warn"`` emits one :class:`~repro.analysis.ReplayUnsafeWarning`
+        per finding; ``mode="error"`` raises
+        :class:`~repro.analysis.ReplayUnsafeError` carrying the findings.
+        Lazy import: the analysis package is pure stdlib but optional at
+        runtime — graph construction must not require it unless asked to.
+        """
+        from repro.analysis import ReplayUnsafeError, ReplayUnsafeWarning, check_callable
+
+        findings = check_callable(fn, name=f"{id}:{getattr(fn, '__name__', 'fn')}")
+        if not findings:
+            return
+        summary = "; ".join(f.render() for f in findings)
+        if mode == "error":
+            raise ReplayUnsafeError(
+                f"node {id!r}: task function failed the replay-safety check "
+                f"({len(findings)} finding(s)): {summary}",
+                findings,
+            )
+        warnings.warn(
+            f"node {id!r}: replay-safety finding(s): {summary}",
+            ReplayUnsafeWarning,
+            stacklevel=3,
+        )
 
     def add_stream(self, id: str, fn: Optional[Callable[..., Any]] = None, **kw) -> Node:
         """Declare a stream *producer*: ``fn(ctx, *, start=0, **inputs)`` is a

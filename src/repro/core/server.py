@@ -531,7 +531,7 @@ class WorkerClient:
         try:
             resp = urllib.request.urlopen(req, timeout=self.timeout)
         except Exception as exc:
-            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}") from exc
         if resp.headers.get("Content-Type", "") == STREAM_CONTENT_TYPE:
             # incremental chunk stream: hand back a live frame iterator —
             # the response stays open and is closed when the stream ends
@@ -539,7 +539,7 @@ class WorkerClient:
         try:
             raw = resp.read()
         except Exception as exc:
-            raise TimeoutError(f"worker {self.name} application not responding: {exc}")
+            raise TimeoutError(f"worker {self.name} application not responding: {exc}") from exc
         finally:
             resp.close()
         # a transport that answered but with undecodable bytes is a TYPED

@@ -291,7 +291,7 @@ def compact_journal(
     state = _fold(prior_state + fold_suffix)
     snapshot = JournalRecord(
         kind="SNAPSHOT",
-        wall_time=time.time(),
+        wall_time=time.time(),  # record timestamp
         meta={
             "version": SNAPSHOT_VERSION,
             "base_seq": cut,

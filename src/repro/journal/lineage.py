@@ -27,7 +27,26 @@ from typing import Any, Dict, List, Optional, Set
 
 from repro.core.durable import Journal, JournalRecord
 
-__all__ = ["LineageIndex"]
+__all__ = ["LINEAGE_IGNORED_KINDS", "LineageIndex"]
+
+#: Kinds the projection deliberately ignores: run activity, not provenance.
+#: Kept in sync with the dispatch in :meth:`LineageIndex.apply` — ``python
+#: -m repro lint`` (INV101) diffs ``handled ∪ ignored`` against
+#: ``KNOWN_KINDS``, so a new kind must be classified here or handled there.
+LINEAGE_IGNORED_KINDS = frozenset(
+    {
+        "RUN_START",
+        "RUN_END",
+        "NODE_START",
+        "NODE_FAIL",
+        "NODE_REQUEUE",
+        "CACHE_STORE",
+        "CKPT",
+        "FORK",
+        "GW_HANDOFF",
+        "SNAPSHOT",
+    }
+)
 
 
 class LineageIndex:

@@ -10,7 +10,6 @@ call site from the default backend (or forced via ``impl=``):
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -8,7 +8,6 @@ full S×S score materialization never happens.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -13,7 +13,7 @@ is bandwidth-bound by design. Layout:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ TPU adaptation of the (inherently sequential) WKV scan:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

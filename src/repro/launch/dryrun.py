@@ -31,7 +31,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import (SHAPES, cell_applicability, get_config, input_specs,
@@ -251,8 +250,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                    + mem.get("temp_size_in_bytes", 0))
     rec = {
         "arch": arch, "shape": shape_name, "status": "ok",
-        "multi_pod": multi_pod, "mesh": dict(zip(mesh.axis_names,
-                                                 np.array(mesh.devices.shape).tolist())),
+        "multi_pod": multi_pod,
+        "mesh": dict(zip(mesh.axis_names,
+                         np.array(mesh.devices.shape).tolist(), strict=True)),
         "devices": n_dev,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": mem, "cost": cost, "collectives": coll,

@@ -5,7 +5,6 @@ jax device state (the dry-run must set XLA_FLAGS before first init).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 

@@ -35,7 +35,6 @@ import sys
 import traceback
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
 
 from repro.configs import SHAPES, cell_applicability, get_config, list_archs
 from repro.launch.dryrun import (RESULTS_DIR, arch_run_defaults, lower_cell,
@@ -57,7 +56,7 @@ def probe_cfg(cfg, seg_repeats: List[int], enc_layers: Optional[int] = None):
     segments = derive_segments(layer_pattern(cfg))
     assert len(seg_repeats) == len(segments)
     pattern: List[str] = []
-    for (unit, _), r in zip(segments, seg_repeats):
+    for (unit, _), r in zip(segments, seg_repeats, strict=True):
         pattern.extend(list(unit) * r)
     kw: Dict[str, Any] = dict(block_pattern=tuple(pattern),
                               num_layers=len(pattern))
@@ -102,7 +101,7 @@ def fit_linear(samples: List[Tuple[List[int], Dict[str, float]]],
         c0 = ones_costs.get(key, 0.0)
         slopes = [samples[j + 1][1].get(key, 0.0) - c0 for j in range(k)]
         base = c0 - sum(slopes)
-        total = base + sum(s * t for s, t in zip(slopes, targets))
+        total = base + sum(s * t for s, t in zip(slopes, targets, strict=True))
         # tiny cells can fit negative slopes (XLA optimizes the 2-deep probe
         # differently than the 1-deep one); clamp to the measured floor —
         # the fit is only meaningful when cost actually scales with depth.

@@ -8,7 +8,6 @@ point; in this container it runs the reduced config on CPU.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 from repro.configs import SHAPES, get_config, list_archs, smoke_variant
 from repro.optim.adamw import AdamWConfig

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from .layers import ParamStore, dense, norm_param, apply_norm, shard_activation
+from .layers import ParamStore, dense, shard_activation
 
 __all__ = ["init_rwkv_layer", "rwkv_time_mix", "rwkv_channel_mix",
            "init_rwkv_state"]

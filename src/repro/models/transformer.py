@@ -19,7 +19,6 @@ cache). Every apply returns (h, new_cache_or_None, aux_loss).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -265,7 +264,7 @@ def init_stack(store: ParamStore, cfg, pattern: Sequence[str], prefix: str = "se
             # init `repeats` copies and stack along axis 0
             copies = []
             axes_ref = None
-            for r in range(repeats):
+            for _ in range(repeats):
                 tmp = ParamStore(seg.next_rng(), seg.dtype)
                 init_layer(tmp, cfg, kind)
                 copies.append(tmp.params)
@@ -287,7 +286,8 @@ def init_stack_cache(cfg, segments, batch: int, seq_len: int, dtype,
         for uj, kind in enumerate(unit):
             one = init_layer_cache(cfg, kind, batch, seq_len, dtype, src_len)
             seg_cache[f"u{uj}"] = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (repeats,) + x.shape).copy(), one)
+                lambda x, r=repeats: jnp.broadcast_to(x, (r,) + x.shape).copy(),
+                one)
         cache[f"{prefix}{si}"] = seg_cache
     return cache
 
@@ -307,11 +307,11 @@ def run_stack(h: jax.Array, params: Dict[str, Any], cfg, segments, *,
         seg_params = params[f"{prefix}{si}"]
         seg_cache = cache.get(f"{prefix}{si}") if cache is not None else None
 
-        def unit_body(carry, xs):
+        def unit_body(carry, xs, _unit=unit):
             h_c, aux_c = carry
             up, uc = xs
             out_caches = {}
-            for uj, kind in enumerate(unit):
+            for uj, kind in enumerate(_unit):
                 h_c, c_new, a = apply_layer(
                     h_c, up[f"u{uj}"], cfg, kind, positions=positions,
                     mode=mode, cache=None if uc is None else uc[f"u{uj}"],
@@ -335,9 +335,9 @@ def run_stack(h: jax.Array, params: Dict[str, Any], cfg, segments, *,
             for r in range(repeats):
                 (h, total_aux), c_out = body(
                     (h, total_aux),
-                    (jax.tree.map(lambda x: x[r], seg_params),
+                    (jax.tree.map(lambda x, i=r: x[i], seg_params),
                      None if seg_cache is None else
-                     jax.tree.map(lambda x: x[r], seg_cache)))
+                     jax.tree.map(lambda x, i=r: x[i], seg_cache)))
                 outs.append(c_out)
             if new_cache is not None and outs and outs[0] is not None:
                 new_cache[f"{prefix}{si}"] = jax.tree.map(

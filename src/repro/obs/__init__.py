@@ -63,5 +63,5 @@ def __getattr__(name):
     try:
         module = _EXPORTS[name]
     except KeyError:
-        raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+        raise AttributeError(f"module 'repro.obs' has no attribute {name!r}") from None
     return getattr(importlib.import_module(f"repro.obs.{module}"), name)

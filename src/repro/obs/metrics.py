@@ -26,7 +26,7 @@ import json
 import threading
 import time
 from contextlib import contextmanager
-from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Tuple
 
 #: Default histogram bucket upper bounds, in seconds (latency-oriented).
 DEFAULT_BUCKETS: Tuple[float, ...] = (
@@ -140,7 +140,7 @@ class Histogram:
             total, s = self._count, self._sum
         cum: Dict[str, int] = {}
         acc = 0
-        for ub, c in zip(self.buckets, counts):
+        for ub, c in zip(self.buckets, counts, strict=False):  # counts has a +Inf slot
             acc += c
             cum[repr(ub)] = acc
         cum["+Inf"] = total

@@ -30,6 +30,23 @@ if TYPE_CHECKING:  # repro.core imports are deferred to call time: this
     # runtime → obs.metrics → obs package) and must not close the cycle
     from repro.core.durable import JournalRecord
 
+#: Kinds the timeline deliberately ignores: no time geometry to extract.
+#: Kept in sync with the dispatch in :meth:`Timeline.from_records` —
+#: ``python -m repro lint`` (INV101) diffs ``handled ∪ ignored`` against
+#: ``KNOWN_KINDS``, so a new kind must be classified here or handled there.
+TIMELINE_IGNORED_KINDS = frozenset(
+    {
+        "CACHE_STORE",
+        "CKPT",
+        "SUSPEND",
+        "RESUME",
+        "FORK",
+        "LINEAGE",
+        "STREAM_EOS",
+        "SNAPSHOT",
+    }
+)
+
 
 @dataclass
 class NodeTiming:
@@ -263,4 +280,4 @@ class Timeline:
         return json.dumps(self.to_obj(), sort_keys=True)
 
 
-__all__ = ["NodeTiming", "Timeline"]
+__all__ = ["NodeTiming", "TIMELINE_IGNORED_KINDS", "Timeline"]

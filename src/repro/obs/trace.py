@@ -158,7 +158,7 @@ class Tracer:
             span_id=_new_id(),
             parent_id=parent_id,
             kind=kind,
-            start_wall=time.time(),
+            start_wall=time.time(),  # record timestamp
             attrs=dict(attrs or {}),
             _t0=time.monotonic(),
         )

@@ -7,9 +7,8 @@ rounding-free simple cast — documented trade-off for the 671B config).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +92,8 @@ def adamw_update(params, grads, state, cfg: AdamWConfig
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(state["m"])
     flat_v = treedef.flatten_up_to(state["v"])
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
     new_params = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])

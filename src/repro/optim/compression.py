@@ -18,7 +18,7 @@ under jit/pjit and GSPMD reduces the compressed leaves directly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,7 @@ class GradCompressor:
 
         flat_g, treedef = jax.tree.flatten(grads)
         flat_e = treedef.flatten_up_to(err_state)
-        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        out = [one(g, e) for g, e in zip(flat_g, flat_e, strict=True)]
         return (treedef.unflatten([o[0] for o in out]),
                 treedef.unflatten([o[1] for o in out]))
 

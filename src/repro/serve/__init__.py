@@ -1,3 +1,5 @@
 """Serving engine: continuous batching over model replicas."""
+
 from .batcher import ContinuousBatcher, Generation, Request
+
 __all__ = ["ContinuousBatcher", "Generation", "Request"]

@@ -15,13 +15,14 @@ Components:
 The batcher is model-agnostic: it takes (prefill_fn, decode_fn, init_cache)
 from models.build(), so every assigned decoder arch can serve through it.
 """
+
 from __future__ import annotations
 
 import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +37,12 @@ __all__ = ["Request", "Generation", "ContinuousBatcher"]
 @dataclass
 class Request:
     rid: str
-    prompt: np.ndarray                  # (S,) int32
+    prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
     submitted_at: float = field(default_factory=time.monotonic)
 
     def digest(self) -> str:
-        return payload_digest({"p": self.prompt,
-                               "n": self.max_new_tokens})
+        return payload_digest({"p": self.prompt, "n": self.max_new_tokens})
 
 
 @dataclass
@@ -82,8 +82,9 @@ class ContinuousBatcher:
     one fixed-shape jitted step.
     """
 
-    def __init__(self, model, params, *, slots: int = 4, max_len: int = 128,
-                 eos_id: Optional[int] = None):
+    def __init__(
+        self, model, params, *, slots: int = 4, max_len: int = 128, eos_id: Optional[int] = None
+    ):
         self.model = model
         self.params = params
         self.n_slots = slots
@@ -123,8 +124,7 @@ class ContinuousBatcher:
 
     def run_until_drained(self, max_steps: int = 100_000) -> Dict[str, Generation]:
         """Drive the loop until queue + slots are empty (batch-mode serving)."""
-        while (not self._queue.empty() or self._any_active()) \
-                and self.steps < max_steps:
+        while (not self._queue.empty() or self._any_active()) and self.steps < max_steps:
             self.step()
         return dict(self._done)
 
@@ -146,8 +146,7 @@ class ContinuousBatcher:
                 return
             t0 = time.monotonic()
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, fresh = self.model.prefill(self.params, {"tokens": toks},
-                                               pad_to=self.max_len)
+            logits, fresh = self.model.prefill(self.params, {"tokens": toks}, pad_to=self.max_len)
             self.cache = _splice_cache(self.cache, fresh, i)
             first = int(jnp.argmax(logits, axis=-1)[0])
             self._next_token[i] = first
@@ -170,8 +169,7 @@ class ContinuousBatcher:
         if not self._any_active():
             return
         tok = jnp.asarray(self._next_token)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          {"token": tok})
+        logits, self.cache = self._decode(self.params, self.cache, {"token": tok})
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.steps += 1
         for i, slot in enumerate(self._slots):
@@ -179,16 +177,21 @@ class ContinuousBatcher:
                 continue
             self.slot_steps_busy += 1
             t = int(nxt[i])
-            done = slot.produced >= slot.budget or \
-                (self.eos_id is not None and t == self.eos_id) or \
-                slot.prompt_len + slot.produced + 1 >= self.max_len
+            done = (
+                slot.produced >= slot.budget
+                or (self.eos_id is not None and t == self.eos_id)
+                or slot.prompt_len + slot.produced + 1 >= self.max_len
+            )
             if done:
                 now = time.monotonic()
                 self._done[slot.rid] = Generation(
-                    rid=slot.rid, tokens=list(slot.tokens),
-                    prompt_len=slot.prompt_len, queued_s=slot.queued_s,
+                    rid=slot.rid,
+                    tokens=list(slot.tokens),
+                    prompt_len=slot.prompt_len,
+                    queued_s=slot.queued_s,
                     prefill_s=slot.t_prefill_done - slot.t_admit,
-                    decode_s=now - slot.t_prefill_done)
+                    decode_s=now - slot.t_prefill_done,
+                )
                 ch = self._streams.pop(slot.rid, None)
                 if ch is not None:
                     ch.close()  # EOS: the consumer's iteration ends
@@ -231,7 +234,7 @@ def _splice_cache(batched, fresh, slot: int):
 
 
 def _batch_axis(bs: Tuple[int, ...], fs: Tuple[int, ...]) -> int:
-    for i, (a, b) in enumerate(zip(bs, fs)):
+    for i, (a, b) in enumerate(zip(bs, fs, strict=False)):
         if a != b and b == 1:
             return i
     raise ValueError(f"no batch axis between {bs} and {fs}")

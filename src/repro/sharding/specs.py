@@ -18,11 +18,10 @@ Activation constraint kinds (shard_activation call sites in models/):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingOptions", "ShardingRules"]
@@ -42,10 +41,10 @@ class ShardingOptions:
 
 
 class ShardingRules:
-    def __init__(self, cfg, mesh: Mesh, options: ShardingOptions = ShardingOptions()):
+    def __init__(self, cfg, mesh: Mesh, options: "ShardingOptions | None" = None):
         self.cfg = cfg
         self.mesh = mesh
-        self.opt = options
+        self.opt = options if options is not None else ShardingOptions()
         names = mesh.axis_names
         self.dp_axes: Tuple[str, ...] = tuple(a for a in ("pod", "data")
                                               if a in names)
@@ -95,7 +94,8 @@ class ShardingRules:
         even tiling for input shardings). Partial drops keep the divisible
         prefix of a composite axis tuple."""
         out = []
-        for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        padded = tuple(spec) + (None,) * (len(shape) - len(spec))
+        for dim, ax in zip(shape, padded, strict=True):
             if ax is None:
                 out.append(None)
                 continue

@@ -250,7 +250,9 @@ class DistributedTrainer(Trainer):
                 )
                 grad_ids.append(gid)
 
-            def reduce_(ctx, _ids=tuple(grad_ids), **deps):
+            shard_order = tuple(grad_ids)
+
+            def reduce_(ctx, _ids=shard_order, **deps):
                 shards = [deps[i] for i in _ids]  # fixed shard order
                 grads = _mean_pytrees([sh["grads"] for sh in shards])
                 loss = float(sum(sh["loss"] for sh in shards) / len(shards))

@@ -3,18 +3,17 @@
 ``make_train_step``: fwd + bwd + clip + AdamW, donating params/opt state.
 ``make_prefill_step`` / ``make_decode_step``: the serving pair.
 """
+
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import Model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 
-__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
-           "make_opt_init"]
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step", "make_opt_init"]
 
 
 def make_opt_init(model: Model, opt_cfg: AdamWConfig):
@@ -25,12 +24,9 @@ def make_opt_init(model: Model, opt_cfg: AdamWConfig):
 
 
 def make_train_step(model: Model, opt_cfg: AdamWConfig):
-    def train_step(params, opt_state, batch
-                   ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
-        (loss, metrics), grads = jax.value_and_grad(
-            model.loss_fn, has_aux=True)(params, batch)
-        new_params, new_state, opt_metrics = adamw_update(
-            params, grads, opt_state, opt_cfg)
+    def train_step(params, opt_state, batch) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+        new_params, new_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
         metrics = dict(metrics)
         metrics.update(opt_metrics)
         return new_params, new_state, metrics

@@ -20,6 +20,7 @@ Fault tolerance beyond restart: heartbeat server (system/application error
 split for external monitors), straggler watch on host-side tasks, elastic
 re-mesh on device-count change at recovery time.
 """
+
 from __future__ import annotations
 
 import contextlib
@@ -27,7 +28,7 @@ import json
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from typing import Any, Dict, Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +36,19 @@ import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 from repro.configs.base import ModelConfig
-from repro.core import (Context, ContextGraph, HeartbeatServer, Journal,
-                        JournalRecord, LocalExecutor, StragglerWatch,
-                        WithContext)
+from repro.core import (
+    Context,
+    ContextGraph,
+    HeartbeatServer,
+    Journal,
+    JournalRecord,
+    LocalExecutor,
+    StragglerWatch,
+    WithContext,
+)
 from repro.obs.metrics import metrics as obs_metrics
 from repro.wire import canonical_digest, payload_digest
-from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource
+from repro.data.pipeline import DataConfig, TokenSource
 from repro.models import build
 from repro.optim.adamw import AdamWConfig
 from repro.sharding.specs import ShardingOptions, ShardingRules
@@ -58,7 +66,7 @@ class TrainConfig:
     seed: int = 0
     global_batch: int = 8
     seq_len: int = 256
-    journal_sync: str = "batch"         # always (paper-strict) | batch | never
+    journal_sync: str = "batch"  # always (paper-strict) | batch | never
     async_checkpoint: bool = True
     heartbeat: bool = True
     mesh_model_axis: int = 1
@@ -76,27 +84,26 @@ class Trainer:
         os.makedirs(tc.run_dir, exist_ok=True)
         self.model = build(cfg)
         self.store = CheckpointStore(os.path.join(tc.run_dir, "ckpt"))
-        self.journal = Journal(os.path.join(tc.run_dir, "journal.wal"),
-                               sync=tc.journal_sync)
-        self.heartbeat = HeartbeatServer(extra={"worker": "trainer"}) \
-            if tc.heartbeat else None
+        self.journal = Journal(os.path.join(tc.run_dir, "journal.wal"), sync=tc.journal_sync)
+        self.heartbeat = HeartbeatServer(extra={"worker": "trainer"}) if tc.heartbeat else None
         self.stragglers = StragglerWatch()
-        self.data_cfg = DataConfig(vocab_size=cfg.vocab_size,
-                                   seq_len=tc.seq_len,
-                                   global_batch=tc.global_batch, seed=tc.seed)
+        self.data_cfg = DataConfig(
+            vocab_size=cfg.vocab_size,
+            seq_len=tc.seq_len,
+            global_batch=tc.global_batch,
+            seed=tc.seed,
+        )
         self.source = TokenSource(self.data_cfg)
         # elastic mesh: data axis = current device count / model axis
         n = len(jax.devices())
         model_ax = min(tc.mesh_model_axis, n)
-        self.mesh = jax.make_mesh((max(1, n // model_ax), model_ax),
-                                  ("data", "model"))
+        self.mesh = jax.make_mesh((max(1, n // model_ax), model_ax), ("data", "model"))
         self.rules = ShardingRules(cfg, self.mesh, ShardingOptions())
         # The fresh-execution step donates params/opt buffers (in-place
         # update memory profile). The VERIFY twin does not: a replayed step
         # must be able to fail its digest check and leave the restored state
         # untouched — donation would have already consumed it.
-        self._train_step = jax.jit(make_train_step(self.model, tc.opt),
-                                   donate_argnums=(0, 1))
+        self._train_step = jax.jit(make_train_step(self.model, tc.opt), donate_argnums=(0, 1))
         self._train_step_verify = jax.jit(make_train_step(self.model, tc.opt))
         # steps whose device buffers were donated this incarnation: a second
         # execution would read freed buffers, so it is refused outright
@@ -105,15 +112,18 @@ class Trainer:
 
     # -- run identity --------------------------------------------------------
     def run_context(self) -> Context:
-        mesh_desc = {a: int(s) for a, s in zip(self.mesh.axis_names,
-                                               self.mesh.devices.shape)}
-        return Context.origin({
-            "run_id": canonical_digest({"cfg": self.cfg.name,
-                                        "seed": self.tc.seed}),
-            "config_digest": canonical_digest(repr(self.cfg)),
-            "mesh": mesh_desc,
-            "data_seed": self.tc.seed,
-        }, origin="trainer")
+        mesh_desc = {
+            a: int(s) for a, s in zip(self.mesh.axis_names, self.mesh.devices.shape, strict=True)
+        }
+        return Context.origin(
+            {
+                "run_id": canonical_digest({"cfg": self.cfg.name, "seed": self.tc.seed}),
+                "config_digest": canonical_digest(repr(self.cfg)),
+                "mesh": mesh_desc,
+                "data_seed": self.tc.seed,
+            },
+            origin="trainer",
+        )
 
     # -- recovery ------------------------------------------------------------
     def recover(self) -> Tuple[int, Any, Any]:
@@ -133,8 +143,7 @@ class Trainer:
         if tag is not None:
             man = self.store.manifest(tag)
             start = int(man["meta"]["next_step"])
-            like_p = jax.eval_shape(lambda r: self.model.init(r)[0],
-                                    jax.random.key(self.tc.seed))
+            like_p = jax.eval_shape(lambda r: self.model.init(r)[0], jax.random.key(self.tc.seed))
             like_p = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), like_p)
             params = self.store.resolve(f"{tag}@{man['digest']}", like_p)
             params = jax.tree.map(jnp.asarray, params)
@@ -142,8 +151,7 @@ class Trainer:
 
             like_o = adamw_init(params, self.tc.opt)
             man_o = self.store.manifest(tag + "-opt")
-            opt_state = self.store.resolve(f"{tag}-opt@{man_o['digest']}",
-                                           like_o)
+            opt_state = self.store.resolve(f"{tag}-opt@{man_o['digest']}", like_o)
             opt_state = jax.tree.map(jnp.asarray, opt_state)
             return start, params, opt_state
         params, _ = self.model.init(jax.random.key(self.tc.seed))
@@ -153,9 +161,14 @@ class Trainer:
         return 0, params, opt_state
 
     # -- one durable round (K steps + checkpoint) ------------------------------
-    def _round_graph(self, start: int, end: int, state: Dict[str, Any],
-                     replay_digests: Dict[int, str],
-                     incarnation: int = 0) -> ContextGraph:
+    def _round_graph(
+        self,
+        start: int,
+        end: int,
+        state: Dict[str, Any],
+        replay_digests: Dict[int, str],
+        incarnation: int = 0,
+    ) -> ContextGraph:
         """Step nodes are STATEFUL (they advance params held by reference),
         so they must never be replay-SKIPPED across process incarnations —
         the state side effect would be lost. Their Ψ therefore carries the
@@ -189,7 +202,8 @@ class Trainer:
                     raise RuntimeError(
                         f"step {_s} already donated its input buffers; "
                         "re-executing it is unsafe (restore a snapshot and "
-                        "build a fresh round graph instead)")
+                        "build a fresh round graph instead)"
+                    )
                 if want is None:
                     # fresh execution: donation is safe — nothing can demand
                     # the pre-step state after this commit
@@ -199,8 +213,7 @@ class Trainer:
                     # replay-verification: run the NON-donating twin so a
                     # digest mismatch leaves the restored state intact
                     step_fn = self._train_step_verify
-                new_params, new_opt, metrics = step_fn(
-                    state["params"], state["opt"], jbatch)
+                new_params, new_opt, metrics = step_fn(state["params"], state["opt"], jbatch)
                 out = {k: float(v) for k, v in metrics.items()}
                 out["step"] = _s
                 out["data_digest"] = meta["digest"]
@@ -208,42 +221,48 @@ class Trainer:
                 if want is not None and want != got:
                     raise RuntimeError(
                         f"non-deterministic replay at step {_s}: "
-                        f"journal={want} recomputed={got}")
+                        f"journal={want} recomputed={got}"
+                    )
                 # verified (or fresh): only now does the mutation commit
                 state["params"], state["opt"] = new_params, new_opt
                 return out
 
             deps = [fetch_id] + ([prev] if prev else [])
-            g.add(step_id, run_step, deps=deps,
-                  data={"incarnation": incarnation}, retries=0)
+            g.add(step_id, run_step, deps=deps, data={"incarnation": incarnation}, retries=0)
             prev = step_id
 
         self._add_checkpoint_node(g, state, prev, end)
         return g
 
-    def _add_checkpoint_node(self, g: ContextGraph, state: Dict[str, Any],
-                             prev: str, end: int) -> None:
+    def _add_checkpoint_node(
+        self, g: ContextGraph, state: Dict[str, Any], prev: str, end: int
+    ) -> None:
         """Append the round-closing checkpoint node (snapshot + CKPT record).
 
         The params save is synchronous; the ``-opt`` companion may be async
         (off the critical path). Recovery tolerates a torn pair — see
         :meth:`recover` and docs/training.md §5.
         """
+
         def checkpoint(ctx, **deps):
             last = deps[prev]
             next_step = last["step"] + 1
             tag = f"step{next_step:08d}"
-            ref_p = self.store.save(tag, jax.device_get(state["params"]),
-                                    {"next_step": next_step},
-                                    async_=False)
-            ref_o = self.store.save(tag + "-opt", jax.device_get(state["opt"]),
-                                    {"next_step": next_step},
-                                    async_=self.tc.async_checkpoint)
-            self.journal.append(JournalRecord(
-                kind="CKPT", node_id=tag, ref=f"{ref_p};{ref_o}",
-                meta={"next_step": next_step}))
-            return WithContext({"ref": ref_p, "next_step": next_step},
-                               {"last_ckpt": ref_p})
+            ref_p = self.store.save(
+                tag, jax.device_get(state["params"]), {"next_step": next_step}, async_=False
+            )
+            ref_o = self.store.save(
+                tag + "-opt",
+                jax.device_get(state["opt"]),
+                {"next_step": next_step},
+                async_=self.tc.async_checkpoint,
+            )
+            self.journal.append(
+                JournalRecord(
+                    kind="CKPT", node_id=tag, ref=f"{ref_p};{ref_o}", meta={"next_step": next_step}
+                )
+            )
+            return WithContext({"ref": ref_p, "next_step": next_step}, {"last_ckpt": ref_p})
 
         g.add(f"ckpt@{end}", checkpoint, deps=[prev])
 
@@ -265,8 +284,7 @@ class Trainer:
                     incarnation += 1
                 if rec.kind == "NODE_COMMIT" and rec.node_id.startswith(prefix):
                     if isinstance(rec.payload, dict) and "step" in rec.payload:
-                        replay_digests[int(rec.payload["step"])] = \
-                            rec.output_digest
+                        replay_digests[int(rec.payload["step"])] = rec.output_digest
         return replay_digests, incarnation
 
     @contextlib.contextmanager
@@ -282,14 +300,18 @@ class Trainer:
         trainer progress shows up in the same snapshot as gateway/cache
         stats.
         """
-        metrics = [report.outputs[n] for n in report.outputs
-                   if n.startswith(self.step_node_prefix)]
-        for m in sorted(metrics, key=lambda m: m["step"]):
+        metrics = [
+            report.outputs[n] for n in report.outputs if n.startswith(self.step_node_prefix)
+        ]
+        for m in sorted(metrics, key=lambda r: r["step"]):
             self.metrics_log.append(m)
             if m["step"] % self.tc.log_every == 0:
-                print(f"step {m['step']:5d} loss {m['loss']:.4f} "
-                      f"gnorm {m['grad_norm']:.3f} "
-                      f"lr {m['lr']:.2e}", flush=True)
+                print(
+                    f"step {m['step']:5d} loss {m['loss']:.4f} "
+                    f"gnorm {m['grad_norm']:.3f} "
+                    f"lr {m['lr']:.2e}",
+                    flush=True,
+                )
         if metrics:
             reg = obs_metrics()
             reg.counter("repro_train_steps_total").inc(len(metrics))
@@ -316,8 +338,7 @@ class Trainer:
                 s = start
                 while s < self.tc.num_steps:
                     e = min(s + self.tc.checkpoint_every, self.tc.num_steps)
-                    graph = self._round_graph(s, e, state, replay_digests,
-                                              incarnation=incarnation)
+                    graph = self._round_graph(s, e, state, replay_digests, incarnation=incarnation)
                     report = executor.run(graph)
                     self._collect_metrics(report)
                     s = e
@@ -328,10 +349,12 @@ class Trainer:
             if self.heartbeat:
                 self.heartbeat.stop()
         wall = time.monotonic() - t0
-        out = {"steps": self.tc.num_steps - start, "wall_s": wall,
-               "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log
-               else None,
-               "steps_per_s": (self.tc.num_steps - start) / max(wall, 1e-9)}
+        out = {
+            "steps": self.tc.num_steps - start,
+            "wall_s": wall,
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "steps_per_s": (self.tc.num_steps - start) / max(wall, 1e-9),
+        }
         with open(os.path.join(self.tc.run_dir, "summary.json"), "w") as fh:
             json.dump({**out, "log": self.metrics_log}, fh, indent=1)
         return out

@@ -16,6 +16,7 @@ Backend selection: ``REPRO_WIRE_CODEC`` env var (``json`` | ``msgpack`` |
 ``orjson``) wins, else orjson when importable, else stdlib json. Override at
 runtime with :func:`set_default_codec`.
 """
+
 from __future__ import annotations
 
 import json as _json
@@ -26,19 +27,42 @@ from .base import Codec, DIGEST_HEX_LEN, normalize, stdlib_canonical
 from .compress import compress, decompress, zstd_available
 from .json_codec import JsonCodec
 from .msgpack_codec import MsgpackCodec
-from .payload import (Digested, PayloadDecodeError, decode_payload,
-                      encode_frame, encode_payload, payload_digest,
-                      read_frames, unwrap_digested)
+from .payload import (
+    Digested,
+    PayloadDecodeError,
+    decode_payload,
+    encode_frame,
+    encode_payload,
+    payload_digest,
+    read_frames,
+    unwrap_digested,
+)
 
 __all__ = [
-    "Codec", "JsonCodec", "MsgpackCodec", "DIGEST_HEX_LEN",
-    "normalize", "stdlib_canonical",
-    "available_codecs", "get_codec", "default_codec", "set_default_codec",
-    "canonical_bytes", "canonical_digest", "from_canonical",
-    "PayloadDecodeError", "Digested", "unwrap_digested",
-    "encode_payload", "decode_payload", "payload_digest",
-    "encode_frame", "read_frames",
-    "compress", "decompress", "zstd_available",
+    "Codec",
+    "JsonCodec",
+    "MsgpackCodec",
+    "DIGEST_HEX_LEN",
+    "normalize",
+    "stdlib_canonical",
+    "available_codecs",
+    "get_codec",
+    "default_codec",
+    "set_default_codec",
+    "canonical_bytes",
+    "canonical_digest",
+    "from_canonical",
+    "PayloadDecodeError",
+    "Digested",
+    "unwrap_digested",
+    "encode_payload",
+    "decode_payload",
+    "payload_digest",
+    "encode_frame",
+    "read_frames",
+    "compress",
+    "decompress",
+    "zstd_available",
 ]
 
 ENV_VAR = "REPRO_WIRE_CODEC"
@@ -103,6 +127,7 @@ def set_default_codec(name: Optional[str]) -> Codec:
 
 
 # -- canonical form (backend-stable: same bytes whatever the codec) ----------
+
 
 def canonical_bytes(value: Any) -> bytes:
     """Backend-stable hashing bytes of ``value`` (identical under any codec)."""

@@ -26,6 +26,7 @@ Normalization rules (applied before canonical encoding):
   - str / int / float / bool / None pass through
 Anything else raises ``TypeError``.
 """
+
 from __future__ import annotations
 
 import hashlib
@@ -52,7 +53,8 @@ def normalize(value: Any) -> Any:
                 # collide on one digest — reject, as the seed encoder did
                 raise TypeError(
                     f"mapping keys must be str for canonical encoding, "
-                    f"got {type(k).__name__!r}")
+                    f"got {type(k).__name__!r}"
+                )
         return {k: normalize(value[k]) for k in sorted(value)}
     if isinstance(value, (list, tuple)):
         return [normalize(v) for v in value]
@@ -69,8 +71,9 @@ def normalize(value: Any) -> Any:
 
 def stdlib_canonical(tree: Any) -> bytes:
     """Canonical JSON bytes of an already-normalized tree (stdlib encoder)."""
-    return json.dumps(tree, ensure_ascii=False, allow_nan=False,
-                      separators=(",", ":")).encode("utf-8")
+    return json.dumps(tree, ensure_ascii=False, allow_nan=False, separators=(",", ":")).encode(
+        "utf-8"
+    )
 
 
 class Codec(ABC):

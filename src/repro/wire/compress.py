@@ -15,6 +15,7 @@ that *requires* zstd fails with an actionable error instead of a crash.
 Legacy untagged zstd frames from seed journals (magic ``0x28 B5 2F FD``) are
 detected and decompressed when zstd is available.
 """
+
 from __future__ import annotations
 
 import zlib
@@ -59,13 +60,15 @@ def decompress(frame: bytes) -> bytes:
         if _zstd is None:
             raise ImportError(
                 "frame is zstd-compressed but 'zstandard' is not installed; "
-                "pip install zstandard (the repro[compression] extra)")
+                "pip install zstandard (the repro[compression] extra)"
+            )
         return _zstd.ZstdDecompressor().decompress(body)
     if tag == _ZSTD_MAGIC_BYTE:  # legacy seed-era frame: untagged raw zstd
         if _zstd is None:
             raise ImportError(
                 "frame looks like a legacy untagged zstd frame but "
                 "'zstandard' is not installed; pip install zstandard "
-                "(the repro[compression] extra) to read it")
+                "(the repro[compression] extra) to read it"
+            )
         return _zstd.ZstdDecompressor().decompress(frame)
     raise ValueError(f"unknown compression tag 0x{tag:02x}")

@@ -4,6 +4,7 @@ Transport encoding IS the canonical form (sorted keys, compact, UTF-8), so
 ``encode(x) == canonical_bytes(x)`` here. ``pretty=True`` produces the
 indented human-readable variant used for on-disk manifests.
 """
+
 from __future__ import annotations
 
 import json
@@ -23,8 +24,7 @@ class JsonCodec(Codec):
         """Canonical JSON bytes; ``pretty=True`` indents for manifests."""
         tree = normalize(obj)
         if pretty:
-            return json.dumps(tree, ensure_ascii=False, allow_nan=False,
-                              indent=1).encode("utf-8")
+            return json.dumps(tree, ensure_ascii=False, allow_nan=False, indent=1).encode("utf-8")
         return stdlib_canonical(tree)
 
     def decode(self, data: bytes) -> Any:

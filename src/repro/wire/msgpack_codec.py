@@ -7,6 +7,7 @@ inherited from :class:`Codec`: msgpack maps have no canonical key order, so
 the hashing form stays the shared canonical JSON — digests computed on a
 msgpack-transport host match digests computed anywhere else.
 """
+
 from __future__ import annotations
 
 from typing import Any
@@ -27,8 +28,10 @@ def pack_default(obj: Any) -> Any:
         import numpy as np
 
         arr = np.asarray(obj)
-        return msgpack.ExtType(EXT_NDARRAY, msgpack.packb(
-            (arr.dtype.str, arr.shape, arr.tobytes()), use_bin_type=True))
+        return msgpack.ExtType(
+            EXT_NDARRAY,
+            msgpack.packb((arr.dtype.str, arr.shape, arr.tobytes()), use_bin_type=True),
+        )
     if isinstance(obj, complex):
         return msgpack.ExtType(EXT_COMPLEX, msgpack.packb((obj.real, obj.imag)))
     if isinstance(obj, (set, frozenset)):
@@ -60,5 +63,4 @@ class MsgpackCodec(Codec):
 
     def decode(self, data: bytes) -> Any:
         """Inverse of :meth:`encode` (ExtType frames → arrays/complex)."""
-        return msgpack.unpackb(data, ext_hook=unpack_ext, raw=False,
-                               strict_map_key=False)
+        return msgpack.unpackb(data, ext_hook=unpack_ext, raw=False, strict_map_key=False)

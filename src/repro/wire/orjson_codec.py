@@ -11,6 +11,7 @@ backend-stability guarantee on exactly the hosts that install the fast
 extra. The canonical form is produced by one encoder everywhere — see
 ``Codec.canonical_bytes`` in base.py and docs/journal-format.md §3.
 """
+
 from __future__ import annotations
 
 from typing import Any

@@ -8,6 +8,7 @@ wrapped in a tagged compression frame (see :mod:`repro.wire.compress`).
 feeds sha256 directly from array buffers (no serialization round-trip), so
 it is compression- and codec-independent by construction.
 """
+
 from __future__ import annotations
 
 import binascii
@@ -82,7 +83,7 @@ def unwrap_digested(obj: Any) -> Any:
         return obj if all(out[k] is obj[k] for k in out) else out
     if isinstance(obj, (list, tuple)):
         vals = [unwrap_digested(v) for v in obj]
-        if all(a is b for a, b in zip(vals, obj)):
+        if all(a is b for a, b in zip(vals, obj, strict=True)):
             return obj
         if isinstance(obj, tuple) and hasattr(obj, "_fields"):
             return type(obj)(*vals)  # NamedTuple: positional reconstruction
@@ -113,8 +114,7 @@ def decode_payload(buf: bytes) -> Any:
     """Inverse of :func:`encode_payload`; malformed bytes raise PayloadDecodeError."""
     try:
         body = decompress(buf)
-        return msgpack.unpackb(body, ext_hook=unpack_ext, raw=False,
-                               strict_map_key=False)
+        return msgpack.unpackb(body, ext_hook=unpack_ext, raw=False, strict_map_key=False)
     except ImportError:
         raise  # actionable "install zstandard" from repro.wire.compress
     except Exception as exc:

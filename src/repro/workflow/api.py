@@ -422,6 +422,7 @@ class WorkflowRunner:
         deadline = meta.get("deadline")
         if deadline is None:
             return False
+        # wall-clock: 'deadline' is a journaled absolute wall time
         return (time.time() if now is None else now) >= float(deadline)
 
     def _finish(self, workflow_id: str, report: ExecutionReport) -> WorkflowResult:

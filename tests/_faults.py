@@ -129,7 +129,7 @@ class FaultInjector:
             return orig(*args, **kw)
 
         executor._cache_store = dying
-        self._restores.append(lambda: setattr(executor, "_cache_store", orig))
+        self._restores.append(lambda: setattr(executor, "_cache_store", orig))  # noqa: B010
         return state
 
     # -- kill point: mid-suspend ---------------------------------------------
@@ -150,7 +150,7 @@ class FaultInjector:
             return orig(rec)
 
         journal.append = dying
-        self._restores.append(lambda: setattr(journal, "append", orig))
+        self._restores.append(lambda: setattr(journal, "append", orig))  # noqa: B010
         return state
 
     # -- kill point: fail-gateway ---------------------------------------------
@@ -176,7 +176,7 @@ class FaultInjector:
             return fut
 
         gateway.submit = dying
-        self._restores.append(lambda: setattr(gateway, "submit", orig))
+        self._restores.append(lambda: setattr(gateway, "submit", orig))  # noqa: B010
         return state
 
     # -- kill point: mid-compact-publish --------------------------------------
@@ -201,7 +201,7 @@ class FaultInjector:
             return orig(tmp_path, path)
 
         compact_mod._publish = dying
-        self._restores.append(lambda: setattr(compact_mod, "_publish", orig))
+        self._restores.append(lambda: setattr(compact_mod, "_publish", orig))  # noqa: B010
         return state
 
     # -- kill point: remote-store ---------------------------------------------
@@ -230,7 +230,7 @@ class FaultInjector:
             return orig(key, body)
 
         backend._remote_put = dying
-        self._restores.append(lambda: setattr(backend, "_remote_put", orig))
+        self._restores.append(lambda: setattr(backend, "_remote_put", orig))  # noqa: B010
         return state
 
     # -- worker-level faults --------------------------------------------------

@@ -22,6 +22,7 @@ import pytest
 from _faults import faults  # noqa: F401 — fixture
 
 from repro.core import (
+    AllocationError,
     AsyncGateway,
     AsyncWorkerServer,
     ClusterExecutor,
@@ -251,7 +252,7 @@ def test_handoff_with_all_replicas_dead_fails_typed():
         while time.time() < deadline and 0 in sgw._alive:
             time.sleep(0.02)
         fut = sgw.submit("add", inputs={"a": 1, "b": 1})
-        with pytest.raises(Exception):
+        with pytest.raises(AllocationError):
             fut.result(timeout=5)
 
 

@@ -372,7 +372,7 @@ def test_file_backend_byte_budget_evicts_lru(tmp_path):
     cache = ResultCache(backend=backend)
     ctx = "c" * 16
     keys = [CacheKey(fn_digest(f"t{i}"), "i" * 16, ctx) for i in range(8)]
-    for i, k in enumerate(keys):
+    for k in keys:
         cache.put(k, list(range(40)))
         time.sleep(0.01)  # distinct mtimes for LRU ordering
     assert backend.size_bytes() <= 400

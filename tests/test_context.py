@@ -1,8 +1,7 @@
 """Context ξ-union semantics (§4.1) — unit + hypothesis property tests."""
 import string
 
-import pytest
-from _propcheck import HAS_HYPOTHESIS, given, settings, st
+from _propcheck import given, settings, st
 
 from repro.core import Context, ContextEntry, EMPTY_CONTEXT
 

@@ -4,11 +4,19 @@ import threading
 
 import numpy as np
 import pytest
-from _propcheck import HAS_HYPOTHESIS, given, settings, st
+from _propcheck import given, settings, st
 
-from repro.core import (Context, ContextGraph, Journal, JournalRecord, LocalExecutor,
-                        ReplayCache, WithContext, decode_payload, encode_payload,
-                        payload_digest)
+from repro.core import (
+    Context,
+    ContextGraph,
+    Journal,
+    JournalRecord,
+    LocalExecutor,
+    WithContext,
+    decode_payload,
+    encode_payload,
+    payload_digest,
+)
 
 
 def test_payload_codec_roundtrip():

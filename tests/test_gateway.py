@@ -5,10 +5,21 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import pytest
 
-from repro.core import (AllocationError, Context, FlakyWorker, Gateway,
-                        HeartbeatServer, InProcWorker, TaskRegistry, WorkerClient,
-                        WorkerHandle, WorkerServer, context_affinity, least_loaded,
-                        power_of_two, round_robin)
+from repro.core import (
+    AllocationError,
+    FlakyWorker,
+    Gateway,
+    HeartbeatServer,
+    InProcWorker,
+    TaskRegistry,
+    WorkerClient,
+    WorkerHandle,
+    WorkerServer,
+    context_affinity,
+    least_loaded,
+    power_of_two,
+    round_robin,
+)
 from repro.wire import PayloadDecodeError
 
 

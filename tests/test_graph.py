@@ -1,6 +1,6 @@
 """ContextGraph: contraction (union nodes), topo scheduling, ξ propagation."""
 import pytest
-from _propcheck import HAS_HYPOTHESIS, given, settings, st
+from _propcheck import given, settings, st
 
 from repro.core import Context, ContextGraph, CycleError, LocalExecutor, UnionNode, toposort_levels
 

@@ -73,7 +73,7 @@ def test_flash_blocked_matches_dense_grads():
         loss(lambda *a, **kw: ref.flash_attention_ref(*a, block_k=16, **kw)),
         argnums=(0, 1, 2),
     )(q, k, v)
-    for dense_g, blocked_g in zip(gd, gb):
+    for dense_g, blocked_g in zip(gd, gb, strict=True):
         close(blocked_g, dense_g, rtol=1e-4, atol=1e-4)
 
 
@@ -113,7 +113,7 @@ def test_wkv6_chunked_matches_sequential_grads():
     gc = jax.grad(
         loss(lambda *a: ref.wkv6_chunked_ref(*a, chunk=8)), argnums=(0, 1, 2, 3)
     )(r, k, v, w)
-    for seq_g, chk_g in zip(gs, gc):
+    for seq_g, chk_g in zip(gs, gc, strict=True):
         close(chk_g, seq_g, rtol=5e-4, atol=5e-4)
 
 

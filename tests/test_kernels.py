@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _propcheck import HAS_HYPOTHESIS, given, settings, st
+from _propcheck import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -74,7 +74,7 @@ def test_flash_kernel_grad_matches_oracle_grad():
 
     g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-3, atol=1e-3)
 

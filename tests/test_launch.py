@@ -130,7 +130,6 @@ def test_model_flops_moe_uses_active_params():
 
 
 def test_input_specs_shapes():
-    import jax.numpy as jnp
 
     cfg = get_config("internvl2-2b")
     spec = input_specs(cfg, SHAPES["train_4k"])

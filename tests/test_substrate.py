@@ -1,11 +1,9 @@
 """Substrate tests: optimizer, data pipeline, checkpoint store, sharding rules."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _propcheck import HAS_HYPOTHESIS, given, settings, st
 
 from repro.checkpoint.store import CheckpointStore
 from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource

@@ -4,13 +4,11 @@ These exercise the paper's full loop: context-aware graph → gateway dispatch
 over heartbeat-monitored workers → durable journal → failure recovery —
 plus the JAX integration (a distributed-graph-orchestrated train round).
 """
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (ClusterExecutor, Context, ContextGraph, Gateway,
                         InProcWorker, Journal, LocalExecutor, TaskRegistry,

@@ -1,9 +1,7 @@
 """Trainer integration: durable rounds, checkpoint/restart, crash recovery."""
 import json
-import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -59,8 +57,6 @@ def test_restart_resumes_from_snapshot(tmp_path, small_cfg):
 
 def test_crash_recovery_resumes_and_matches_uninterrupted(tmp_path, small_cfg):
     """Interrupted-at-step-4 run == uninterrupted run (durable execution)."""
-    base = _tc(tmp_path / "runD", num_steps=6, checkpoint_every=2)
-
     # uninterrupted reference
     ref = Trainer(small_cfg, _tc(tmp_path / "runRef", num_steps=6,
                                  checkpoint_every=2))
